@@ -1,0 +1,192 @@
+"""Shared benchmark plumbing: video corpus, calibrated cost model, timing of
+queries under explicit layouts, and CSV emission (name,us_per_call,derived).
+"""
+from __future__ import annotations
+
+import functools
+import time
+
+import numpy as np
+
+from repro.codec.encode import EncoderConfig, decode_tile, encode_tile
+from repro.codec.psnr import psnr
+from repro.core.cost import CostModel
+from repro.core.layout import TileLayout, single_tile_layout
+from repro.data.video_gen import (VideoSpec, dense_spec, generate,
+                                  multiclass_spec, sparse_spec)
+
+ENC = EncoderConfig(gop=16, qp=8)
+
+
+def emit(name: str, us_per_call: float, derived: str = "") -> None:
+    print(f"{name},{us_per_call:.1f},{derived}")
+
+
+def w6_spec(seed=0, n_frames=256, height=192, width=320) -> VideoSpec:
+    """Fig.-11 W6 regime: tiling around the (small, sparse) queried object
+    helps, but tiling around ALL objects hurts (the rest are large/dense)."""
+    from repro.data.video_gen import ObjectSpec
+
+    return VideoSpec(
+        height=height, width=width, n_frames=n_frames, seed=seed,
+        objects=[
+            ObjectSpec("person", 2, (22, 10), 1.2, 240.0),
+            ObjectSpec("car", 5, (48, 80), 2.0, 210.0),
+            ObjectSpec("boat", 3, (56, 90), 1.0, 180.0),
+        ])
+
+
+@functools.lru_cache(maxsize=32)
+def corpus_video(kind: str, seed: int, n_frames: int = 256,
+                 height: int = 192, width: int = 320):
+    """kind: sparse | dense | multiclass | w6.  Cached per process."""
+    fn = {"sparse": sparse_spec, "dense": dense_spec,
+          "multiclass": multiclass_spec, "w6": w6_spec}[kind]
+    spec = fn(seed=seed, n_frames=n_frames, height=height, width=width)
+    frames, dets = generate(spec)
+    return frames, dets, spec
+
+
+def default_corpus(n_frames: int = 256):
+    """(name, frames, detections) across sparse/dense regimes (Table 1)."""
+    out = []
+    for kind in ("sparse", "dense"):
+        for seed in (0, 1):
+            frames, dets, _ = corpus_video(kind, seed, n_frames)
+            out.append((f"{kind}{seed}", frames, dets))
+    return out
+
+
+@functools.lru_cache(maxsize=1)
+def shared_cost_model() -> CostModel:
+    from repro.core.calibrate import calibrated_cost_model
+
+    return calibrated_cost_model(ENC, seeds=(0,), repeats=1)
+
+
+# --------------------------------------------------------------------------
+# Direct layout measurement (microbenchmarks): encode a whole video under one
+# layout, run an object query, time the decode.
+# --------------------------------------------------------------------------
+def encode_video(frames: np.ndarray, layout: TileLayout,
+                 enc: EncoderConfig = ENC) -> list[dict]:
+    return [encode_tile(np.ascontiguousarray(frames[:, y1:y2, x1:x2]), enc)
+            for (y1, x1, y2, x2) in layout.tile_rects()]
+
+
+def query_decode_seconds(encs: list[dict], layout: TileLayout, boxes_by_frame,
+                         enc: EncoderConfig = ENC, repeats: int = 1):
+    """Decode the tiles covering the query boxes GOP-by-GOP (as TASM would).
+
+    Returns (seconds, pixels, tiles_opened)."""
+    by_gop: dict[int, set[int]] = {}
+    for f, boxes in boxes_by_frame.items():
+        g = f // enc.gop
+        need = by_gop.setdefault(g, set())
+        for box in boxes:
+            need.update(layout.tiles_intersecting(box))
+    # warm any lazily-allocated buffers
+    for g, tiles in list(by_gop.items())[:1]:
+        for t in list(tiles)[:1]:
+            decode_tile(encs[t], gop_indices=[g])
+    t0 = time.perf_counter()
+    for _ in range(repeats):
+        for g, tiles in by_gop.items():
+            for t in tiles:
+                decode_tile(encs[t], gop_indices=[g])
+    secs = (time.perf_counter() - t0) / repeats
+    pixels = sum(encs[t]["h"] * encs[t]["w"] * enc.gop
+                 for g, tiles in by_gop.items() for t in tiles)
+    n_tiles = sum(len(tiles) for tiles in by_gop.values())
+    return secs, pixels, n_tiles
+
+
+def boxes_for(dets, label: str, frame_range=None):
+    lo, hi = frame_range or (0, len(dets))
+    out = {}
+    for f in range(lo, min(hi, len(dets))):
+        boxes = [b for l, b in dets[f] if l == label]
+        if boxes:
+            out[f] = boxes
+    return out
+
+
+def stitched_psnr(frames: np.ndarray, encs: list[dict],
+                  layout: TileLayout) -> float:
+    """Quality of the tiled encoding vs the original (homomorphic stitch)."""
+    T, H, W = frames.shape
+    recon = np.zeros_like(frames)
+    for i, (y1, x1, y2, x2) in enumerate(layout.tile_rects()):
+        recon[:, y1:y2, x1:x2] = decode_tile(encs[i])[:T]
+    return psnr(frames, recon)
+
+
+def improvement(untiled_s: float, tiled_s: float) -> float:
+    """Paper's 'improvement in query time' percentage."""
+    return 100.0 * (untiled_s - tiled_s) / untiled_s
+
+
+# --------------------------------------------------------------------------
+# Per-SOT (per-GOP) layout encodes — the real TASM setting for non-uniform
+# layouts: each GOP gets its own layout tracking object positions.
+# --------------------------------------------------------------------------
+def encode_video_per_gop(frames: np.ndarray, layouts: dict[int, TileLayout],
+                         enc: EncoderConfig = ENC):
+    """layouts: gop index -> layout.  Returns {gop: [tile encodings]}."""
+    T = frames.shape[0]
+    out = {}
+    for g in range(T // enc.gop):
+        seg = frames[g * enc.gop:(g + 1) * enc.gop]
+        lay = layouts[g]
+        out[g] = [encode_tile(np.ascontiguousarray(seg[:, y1:y2, x1:x2]), enc)
+                  for (y1, x1, y2, x2) in lay.tile_rects()]
+    return out
+
+
+def query_decode_seconds_per_gop(encs_by_gop, layouts: dict[int, TileLayout],
+                                 boxes_by_frame, enc: EncoderConfig = ENC,
+                                 repeats: int = 1):
+    by_gop: dict[int, set[int]] = {}
+    for f, boxes in boxes_by_frame.items():
+        g = f // enc.gop
+        need = by_gop.setdefault(g, set())
+        for box in boxes:
+            need.update(layouts[g].tiles_intersecting(box))
+    t0 = time.perf_counter()
+    for _ in range(repeats):
+        for g, tiles in by_gop.items():
+            for t in tiles:
+                decode_tile(encs_by_gop[g][t], gop_indices=[0])
+    secs = (time.perf_counter() - t0) / repeats
+    pixels = sum(encs_by_gop[g][t]["h"] * encs_by_gop[g][t]["w"] * enc.gop
+                 for g, tiles in by_gop.items() for t in tiles)
+    n_tiles = sum(len(t) for t in by_gop.values())
+    return secs, pixels, n_tiles
+
+
+def per_gop_layouts(dets, label_filter, H: int, W: int, n_frames: int,
+                    enc: EncoderConfig = ENC, granularity: str = "fine"):
+    """gop -> PARTITION(gop frames, labels) fine/coarse layout."""
+    from repro.core.layout import partition
+
+    layouts = {}
+    for g in range(n_frames // enc.gop):
+        boxes = [b for f in range(g * enc.gop, (g + 1) * enc.gop)
+                 for l, b in dets[f] if label_filter(l)]
+        layouts[g] = partition(H, W, boxes, granularity=granularity)
+    return layouts
+
+
+def storage_of(encs_by_gop) -> float:
+    return sum(e["size_bytes"] for encs in encs_by_gop.values() for e in encs)
+
+
+def psnr_per_gop(frames: np.ndarray, encs_by_gop, layouts,
+                 enc: EncoderConfig = ENC) -> float:
+    recon = np.zeros_like(frames)
+    for g, encs in encs_by_gop.items():
+        lay = layouts[g]
+        for i, (y1, x1, y2, x2) in enumerate(lay.tile_rects()):
+            recon[g * enc.gop:(g + 1) * enc.gop, y1:y2, x1:x2] = \
+                decode_tile(encs[i], gop_indices=[0])
+    return psnr(frames, recon)

@@ -1,0 +1,63 @@
+"""Fig. 10: the alpha=0.8 not-tiling decision rule.
+
+Scatter of P(v,q,L)/P(v,q,omega) against measured improvement over many
+(video, query object, layout) combinations.  Paper claims: thresholding at
+0.8 captures nearly all layouts that slow queries down; the few improvements
+left of the threshold it sacrifices are small (<20%).
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import (boxes_for, default_corpus, emit, encode_video,
+                               encode_video_per_gop, improvement,
+                               per_gop_layouts, query_decode_seconds,
+                               query_decode_seconds_per_gop)
+from repro.core.layout import single_tile_layout, uniform_layout
+
+ALPHA = 0.8
+
+
+def run(n_frames: int = 96):
+    points = []  # (ratio, improvement)
+    for name, frames, dets in default_corpus(n_frames):
+        H, W = frames.shape[1:]
+        omega = single_tile_layout(H, W)
+        enc_o = encode_video(frames, omega)
+        labels = sorted({l for d in dets for l, _ in d})
+        for q_label in labels:
+            bbf = boxes_for(dets, q_label, (0, n_frames))
+            if len(bbf) < n_frames // 2:
+                continue
+            base_s, base_p, _ = query_decode_seconds(enc_o, omega, bbf)
+            # candidate layouts: uniform grids + non-uniform around each label
+            for r, c in [(2, 2), (3, 3), (4, 6)]:
+                lay = uniform_layout(H, W, r, c)
+                encs = encode_video(frames, lay)
+                s, p, _ = query_decode_seconds(encs, lay, bbf)
+                points.append((p / base_p, improvement(base_s, s)))
+            for target in labels:
+                for gran in ("fine", "coarse"):
+                    lays = per_gop_layouts(dets, lambda l, t=target: l == t,
+                                           H, W, n_frames, granularity=gran)
+                    encs = encode_video_per_gop(frames, lays)
+                    s, p, _ = query_decode_seconds_per_gop(encs, lays, bbf)
+                    points.append((p / base_p, improvement(base_s, s)))
+    pts = np.array(points)
+    harmful = pts[pts[:, 1] < 0]
+    caught = harmful[harmful[:, 0] > ALPHA]
+    missed_good = pts[(pts[:, 0] > ALPHA) & (pts[:, 1] > 0)]
+    emit("fig10/points", 0.0, f"n={len(pts)}")
+    emit("fig10/harmful_layouts", 0.0,
+         f"n={len(harmful)};caught_by_rule={len(caught)}")
+    emit("fig10/sacrificed_improvements", 0.0,
+         f"n={len(missed_good)};max_sacrificed={missed_good[:,1].max() if len(missed_good) else 0:.1f}%")
+    return pts
+
+
+def main():
+    run()
+
+
+if __name__ == "__main__":
+    main()

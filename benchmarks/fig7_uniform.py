@@ -1,0 +1,46 @@
+"""Fig. 7: query-time improvement vs number of uniform tiles.
+
+Paper claims: improvement rises 2x2 (~19%) -> 5x5 (~36%), then falls with
+per-tile overhead (7x10 -> ~28%), and the IQR widens with tile count.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import (boxes_for, default_corpus, emit, encode_video,
+                               improvement, query_decode_seconds)
+from repro.core.layout import single_tile_layout, uniform_layout
+
+GRIDS = [(2, 2), (3, 3), (4, 4), (5, 5), (6, 8), (6, 10)]
+
+
+def run(n_frames: int = 128):
+    results = {g: [] for g in GRIDS}
+    for name, frames, dets in default_corpus(n_frames):
+        H, W = frames.shape[1:]
+        omega = single_tile_layout(H, W)
+        enc_o = encode_video(frames, omega)
+        labels = sorted({l for d in dets for l, _ in d})
+        for label in labels:
+            bbf = boxes_for(dets, label, (0, n_frames))
+            if len(bbf) < n_frames // 2:
+                continue
+            base_s, _, _ = query_decode_seconds(enc_o, omega, bbf)
+            for g in GRIDS:
+                lay = uniform_layout(H, W, *g)
+                encs = encode_video(frames, lay)
+                s, _, _ = query_decode_seconds(encs, lay, bbf)
+                results[g].append(improvement(base_s, s))
+    for g in GRIDS:
+        vals = np.array(results[g])
+        emit(f"fig7/uniform_{g[0]}x{g[1]}", 0.0,
+             f"median={np.median(vals):.1f}%;iqr={np.percentile(vals,75)-np.percentile(vals,25):.1f}%")
+    return results
+
+
+def main():
+    run()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,68 @@
+"""Fig. 8: effect of tile granularity (fine vs coarse) and of which objects
+the layout targets (same / different / all / superset), split sparse/dense.
+
+Paper claims: fine >= coarse everywhere; 'same' best (79%/51% sparse/dense
+fine); 'different' can hurt when dense; 'all' works for sparse (68%) but not
+dense (21% fine, -1% coarse); 'superset' ~= 'all'.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import (ENC, boxes_for, corpus_video, emit,
+                               encode_video, encode_video_per_gop,
+                               improvement, per_gop_layouts,
+                               query_decode_seconds,
+                               query_decode_seconds_per_gop)
+from repro.core.layout import single_tile_layout
+
+CATEGORIES = ("same", "different", "all", "superset")
+
+
+def run(n_frames: int = 128):
+    results: dict[tuple, list] = {}
+    for regime in ("sparse", "dense"):
+        for seed in (0, 1):
+            frames, dets, _ = corpus_video("multiclass" if regime == "sparse"
+                                           else "dense", seed, n_frames)
+            H, W = frames.shape[1:]
+            omega = single_tile_layout(H, W)
+            enc_o = encode_video(frames, omega)
+            labels = sorted({l for d in dets for l, _ in d})
+            primary = [l for l in labels
+                       if sum(1 for d in dets for ll, _ in d if ll == l)
+                       >= n_frames]
+            for q_label in primary[:2]:
+                bbf = boxes_for(dets, q_label, (0, n_frames))
+                base_s, _, _ = query_decode_seconds(enc_o, omega, bbf)
+                others = [l for l in primary if l != q_label]
+                targets = {
+                    "same": lambda l, q=q_label: l == q,
+                    "different": (lambda l, o=others[0]: l == o) if others else None,
+                    "all": lambda l: True,
+                    "superset": (lambda l, q=q_label, o=others[:1]:
+                                 l == q or l in o) if others else None,
+                }
+                for cat, pred in targets.items():
+                    if pred is None:
+                        continue
+                    for gran in ("fine", "coarse"):
+                        lays = per_gop_layouts(dets, pred, H, W, n_frames,
+                                               granularity=gran)
+                        encs = encode_video_per_gop(frames, lays)
+                        s, _, _ = query_decode_seconds_per_gop(encs, lays, bbf)
+                        results.setdefault((regime, cat, gran), []).append(
+                            improvement(base_s, s))
+    for key in sorted(results):
+        vals = np.array(results[key])
+        emit(f"fig8/{key[0]}/{key[1]}/{key[2]}", 0.0,
+             f"median={np.median(vals):.1f}%;n={len(vals)}")
+    return results
+
+
+def main():
+    run()
+
+
+if __name__ == "__main__":
+    main()

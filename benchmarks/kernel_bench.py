@@ -1,0 +1,58 @@
+"""Kernel micro-benchmarks.
+
+The Pallas kernels target TPU; on this CPU container we time (a) the jnp
+reference oracles (meaningful relative numbers) and (b) the kernels in
+interpret mode (correctness-path cost, NOT a TPU latency).  TPU-side
+roofline expectations are derived analytically in EXPERIMENTS.md.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import emit
+from repro.utils.timing import time_call
+
+
+def run():
+    key = jax.random.key(0)
+
+    # DCT/IDCT over one 2K-ish frame worth of blocks (1920x1080 -> 32400)
+    blocks = jax.random.normal(key, (32768, 8, 8), jnp.float32) * 40
+    from repro.kernels.dct.ref import dct_quant_ref
+    from repro.kernels.idct.ref import idct_dequant_ref
+
+    f = jax.jit(lambda b: dct_quant_ref(b, 8, True))
+    emit("kernels/dct_ref_32k_blocks", time_call(lambda: f(blocks)),
+         "jnp oracle; frame-of-blocks")
+    q = f(blocks)
+    g = jax.jit(lambda b: idct_dequant_ref(b, 8, True))
+    emit("kernels/idct_ref_32k_blocks", time_call(lambda: g(q)), "jnp oracle")
+
+    # SAD: 16x16 blocks, +-8 search, one frame of blocks
+    cur = jax.random.normal(key, (480, 16, 16)) * 20
+    win = jax.random.normal(key, (480, 32, 32)) * 20
+    from repro.kernels.sad.ref import sad_search_ref
+
+    h = jax.jit(sad_search_ref)
+    emit("kernels/sad_ref_480_blocks", time_call(lambda: h(cur, win)),
+         "jnp oracle; 289 candidates/block")
+
+    # flash attention ref vs chunked jnp at a small shape
+    from repro.kernels.flash_attention.ref import attention_ref
+
+    B, H, KV, S, D = 1, 8, 2, 1024, 64
+    qq = jax.random.normal(key, (B, H, S, D), jnp.bfloat16)
+    kk = jax.random.normal(key, (B, KV, S, D), jnp.bfloat16)
+    vv = jax.random.normal(key, (B, KV, S, D), jnp.bfloat16)
+    fa = jax.jit(lambda a, b, c: attention_ref(a, b, c, causal=True))
+    emit("kernels/attention_ref_1k", time_call(lambda: fa(qq, kk, vv)),
+         "jnp oracle; causal GQA")
+
+
+def main():
+    run()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,55 @@
+"""Roofline report: reads the dry-run JSONL caches and emits the per-cell
+three-term table (compute / memory / collective seconds, dominant term,
+MODEL_FLOPS ratio, bytes/device).  See EXPERIMENTS.md §Roofline."""
+from __future__ import annotations
+
+import json
+import pathlib
+
+from benchmarks.common import emit
+
+RESULTS = pathlib.Path(__file__).resolve().parents[1] / "results" / "dryrun"
+
+
+def load_rows(mesh_file: str) -> dict:
+    """Last row wins per (arch, shape)."""
+    path = RESULTS / mesh_file
+    rows: dict[tuple, dict] = {}
+    if not path.exists():
+        return rows
+    for line in path.read_text().splitlines():
+        try:
+            r = json.loads(line)
+            rows[(r["arch"], r["shape"])] = r
+        except json.JSONDecodeError:
+            continue
+    return rows
+
+
+def run(mesh_file: str = "16_16.jsonl"):
+    rows = load_rows(mesh_file)
+    for (arch, shape), r in sorted(rows.items()):
+        if r["status"] == "skipped":
+            emit(f"roofline/{arch}/{shape}", 0.0, "skipped:full-attention-500k")
+            continue
+        if r["status"] != "ok":
+            emit(f"roofline/{arch}/{shape}", 0.0, f"error:{r.get('error','?')[:60]}")
+            continue
+        t = r["roofline"]
+        step_s = max(t["compute_s"], t["memory_s"], t["collective_s"])
+        emit(
+            f"roofline/{arch}/{shape}", step_s * 1e6,
+            f"dominant={t['dominant']};compute={t['compute_s']:.3e};"
+            f"memory={t['memory_s']:.3e};collective={t['collective_s']:.3e};"
+            f"useful_ratio={t['useful_ratio']:.2f};"
+            f"GB_per_dev={r['memory'].get('total_device_bytes', 0) / 1e9:.2f};"
+            f"fits_hbm={r.get('fits_hbm')}")
+    return rows
+
+
+def main():
+    run()
+
+
+if __name__ == "__main__":
+    main()

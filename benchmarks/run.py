@@ -1,0 +1,49 @@
+"""Benchmark entry point: one section per paper table/figure plus kernel and
+roofline reports.  Prints ``name,us_per_call,derived`` CSV rows.
+
+    PYTHONPATH=src python -m benchmarks.run            # full (tee'd in CI)
+    REPRO_QUICK=1 PYTHONPATH=src python -m benchmarks.run  # fast smoke
+"""
+from __future__ import annotations
+
+import time
+import traceback
+
+MODULES = [
+    "benchmarks.cost_model_fit",
+    "benchmarks.fig6_tiling",
+    "benchmarks.fig7_uniform",
+    "benchmarks.fig8_granularity",
+    "benchmarks.fig9_sot",
+    "benchmarks.fig10_threshold",
+    "benchmarks.fig11_workloads",
+    "benchmarks.fig12_upfront",
+    "benchmarks.kernel_bench",
+    "benchmarks.roofline_report",
+]
+
+
+def main() -> None:
+    import importlib
+
+    t_start = time.time()
+    failures = []
+    for mod_name in MODULES:
+        print(f"# === {mod_name} ===", flush=True)
+        t0 = time.time()
+        try:
+            mod = importlib.import_module(mod_name)
+            mod.main()
+        except Exception as e:  # noqa: BLE001 - benchmark isolation
+            failures.append(mod_name)
+            print(f"{mod_name},0.0,ERROR:{type(e).__name__}:{e}", flush=True)
+            traceback.print_exc()
+        print(f"# {mod_name} took {time.time() - t0:.1f}s", flush=True)
+    print(f"# total {time.time() - t_start:.1f}s; failures: {failures or 'none'}",
+          flush=True)
+    if failures:
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

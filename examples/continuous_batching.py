@@ -1,0 +1,34 @@
+"""Iteration-level batched serving with the ContinuousBatcher scheduler:
+requests of different lengths share decode steps; early finishers retire
+while the wave drains; TTFT/latency/throughput are reported.
+
+    PYTHONPATH=src python examples/continuous_batching.py
+"""
+import dataclasses
+
+import jax
+import numpy as np
+
+from repro.configs.base import get_config, make_serve_config
+from repro.models import zoo
+from repro.serve.batching import ContinuousBatcher
+
+cfg = get_config("smollm-135m")
+cfg = dataclasses.replace(cfg, n_layers=4, d_model=192, n_heads=6,
+                          n_kv_heads=3, head_dim=32, d_ff=512, vocab=2048)
+cfg = make_serve_config(cfg, model_axis=1)
+params = zoo.init_model(cfg, jax.random.key(0))
+
+batcher = ContinuousBatcher(cfg, params, slots=4, max_len=128)
+rng = np.random.default_rng(0)
+for i in range(10):
+    plen = int(rng.integers(8, 24))
+    batcher.submit(rng.integers(0, cfg.vocab, plen).astype(np.int32),
+                   max_new=int(rng.integers(8, 20)))
+
+stats = batcher.run_until_drained()
+print("served:", stats)
+assert stats["requests"] == 10
+for r in batcher.finished[:3]:
+    print(f"  req {r.rid}: prompt {len(r.prompt)} -> {len(r.out_tokens)} new "
+          f"tokens, ttft {1e3 * (r.first_token_at - r.submitted_at):.0f} ms")

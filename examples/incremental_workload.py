@@ -1,0 +1,50 @@
+"""Compare tiling strategies over a shifting query workload (paper §5.3 W4:
+queries move car -> person -> car) and print the cumulative cost table.
+
+    PYTHONPATH=src python examples/incremental_workload.py
+"""
+import numpy as np
+
+from repro.codec.encode import EncoderConfig
+from repro.core import (TASM, MorePolicy, NoTilingPolicy, PretileAllPolicy,
+                        RegretPolicy)
+from repro.core.calibrate import calibrated_cost_model
+from repro.data.video_gen import generate, sparse_spec
+
+ENC = EncoderConfig(gop=16, qp=8)
+N_FRAMES, N_QUERIES, WINDOW = 256, 60, 32
+
+spec = sparse_spec(seed=1, n_frames=N_FRAMES)
+frames, dets = generate(spec)
+model = calibrated_cost_model(ENC, seeds=(0,), repeats=1)
+
+rng = np.random.default_rng(0)
+starts = rng.integers(0, N_FRAMES - WINDOW, N_QUERIES)
+labels = (["car"] * (N_QUERIES // 3) + ["person"] * (N_QUERIES // 3)
+          + ["car"] * (N_QUERIES - 2 * (N_QUERIES // 3)))
+queries = list(zip(labels, [(int(s), int(s) + WINDOW) for s in starts]))
+
+results = {}
+for name, policy_cls in [("not_tiled", NoTilingPolicy),
+                         ("all_objects", PretileAllPolicy),
+                         ("incremental_more", MorePolicy),
+                         ("incremental_regret", RegretPolicy)]:
+    tasm = TASM("v", ENC, policy=policy_cls(), cost_model=model)
+    tasm.add_detections({f: d for f, d in enumerate(dets)})
+    pre = tasm.ingest(frames)
+    cum = pre if name == "all_objects" else 0.0
+    series = []
+    for label, t_range in queries:
+        st = tasm.scan(label, t_range).stats
+        cum += st.decode_s + st.lookup_s + st.retile_s
+        series.append(cum)
+    results[name] = np.array(series)
+    print(f"{name:20s} final cumulative = {cum:6.2f}s  "
+          f"layouts: {[r.layout.describe() for r in tasm.store.sots[:6]]}...")
+
+base = results["not_tiled"]
+print("\ncumulative cost normalized to not_tiled (paper Fig. 11d):")
+for name, series in results.items():
+    pts = [f"{100 * series[i] / base[i]:5.0f}%" for i in
+           (9, N_QUERIES // 2, N_QUERIES - 1)]
+    print(f"  {name:20s} @q10/q{N_QUERIES//2}/q{N_QUERIES}: {' '.join(pts)}")

@@ -1,0 +1,52 @@
+"""Batched serving example: prefill a batch of prompts, then decode with the
+layer-stacked KV cache — the same serve_step the 512-chip dry-run lowers.
+
+    PYTHONPATH=src python examples/serve_lm.py
+"""
+import dataclasses
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import get_config, make_serve_config
+from repro.models import zoo
+from repro.serve.serve_step import greedy_generate, make_decode_step
+
+cfg = get_config("smollm-135m")
+cfg = dataclasses.replace(cfg, n_layers=6, d_model=256, n_heads=8,
+                          n_kv_heads=4, head_dim=32, d_ff=1024, vocab=4096)
+cfg = make_serve_config(cfg, model_axis=1)
+params = zoo.init_model(cfg, jax.random.key(1))
+print(f"serving {cfg.name}: {cfg.param_count() / 1e6:.1f}M params, "
+      f"kv_repeat={cfg.kv_repeat}")
+
+# a batch of 8 requests, prompt length 32
+B, S0, NEW = 8, 32, 48
+prompts = jax.random.randint(jax.random.key(2), (B, S0), 0, cfg.vocab)
+
+t0 = time.time()
+out = greedy_generate(params, cfg, prompts, max_new=NEW)
+dt = time.time() - t0
+print(f"generated {B}x{NEW} tokens in {dt:.2f}s "
+      f"({B * NEW / dt:.0f} tok/s incl. prefill + compile)")
+print("sample continuation ids:", np.asarray(out[0][:16]))
+
+# steady-state decode throughput (compiled path only)
+caches = zoo.init_cache(cfg, B, S0 + NEW + 64)
+step = jax.jit(make_decode_step(cfg), donate_argnums=(1,))
+tok = out[:, -1:]
+logits, caches = step(params, caches, {"tokens": tok}, jnp.int32(S0 + NEW))
+jax.block_until_ready(logits)
+t0 = time.time()
+n = 64
+idx = S0 + NEW + 1
+for i in range(n):
+    logits, caches = step(params, caches,
+                          {"tokens": jnp.argmax(logits[:, -1:], -1)},
+                          jnp.int32(idx + i))
+jax.block_until_ready(logits)
+dt = time.time() - t0
+print(f"steady-state decode: {n * B / dt:.0f} tok/s "
+      f"({dt / n * 1e3:.1f} ms/step at batch {B})")

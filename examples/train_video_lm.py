@@ -1,0 +1,96 @@
+"""End-to-end driver (deliverable b): train a ~100M-param LM for a few
+hundred steps with the full production stack — TASM-fed data pipeline,
+straggler-tolerant prefetch, fault-tolerant checkpointing with a simulated
+node failure, AdamW, and recovery.
+
+    PYTHONPATH=src python examples/train_video_lm.py --steps 300
+
+The model is smollm-135m at published size when --full is passed; the
+default trims layers so a few hundred steps fit CPU CI time while keeping
+the exact family (the 512-chip shapes are exercised by the dry-run).
+"""
+import argparse
+import dataclasses
+import tempfile
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import get_config
+from repro.models import zoo
+from repro.train.checkpoint import CheckpointManager
+from repro.train.data import PrefetchPipeline, synthetic_token_batches
+from repro.train.elastic import LoopConfig, recoverable_train_loop
+from repro.train.optimizer import AdamWConfig, init_opt_state
+from repro.train.train_step import make_train_step
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--full", action="store_true",
+                    help="published smollm-135m size (slow on CPU)")
+    ap.add_argument("--fail-at", type=int, default=120,
+                    help="simulate a node failure at this step (0=off)")
+    args = ap.parse_args()
+
+    cfg = get_config("smollm-135m")
+    if not args.full:
+        cfg = dataclasses.replace(cfg, n_layers=4, d_model=256, n_heads=8,
+                                  n_kv_heads=4, head_dim=32, d_ff=1024,
+                                  vocab=8192, loss_chunk=2048)
+    n = cfg.param_count()
+    print(f"model: {cfg.name}  params={n / 1e6:.1f}M  layers={cfg.n_layers}")
+
+    params = zoo.init_model(cfg, jax.random.key(0))
+    opt = init_opt_state(params)
+    opt_cfg = AdamWConfig(lr=1e-3, warmup_steps=20, total_steps=args.steps)
+    raw_step = jax.jit(make_train_step(cfg, opt_cfg))
+
+    def step_fn(state, batch):
+        params, opt = state
+        batch = {k: jnp.asarray(v) for k, v in batch.items()}
+        params, opt, metrics = raw_step(params, opt, batch)
+        return (params, opt), metrics
+
+    source = synthetic_token_batches(cfg.vocab, args.batch, args.seq,
+                                     n_batches=args.steps * 2)
+    pipe = PrefetchPipeline(source, depth=4, deadline_s=5.0)
+
+    faults = {"armed": args.fail_at > 0}
+
+    def fault_hook(step):
+        if faults["armed"] and step == args.fail_at:
+            faults["armed"] = False
+            raise RuntimeError("simulated node failure")
+
+    losses = []
+
+    def on_metrics(step, m):
+        losses.append(float(m["loss"]))
+        if step % 25 == 0:
+            print(f"step {step:4d}  loss {losses[-1]:.4f}  "
+                  f"lr {float(m.get('lr', 0)):.2e}")
+
+    with tempfile.TemporaryDirectory() as ckdir:
+        ckpt = CheckpointManager(ckdir, keep=2)
+        t0 = time.time()
+        (params, opt), steps, restarts = recoverable_train_loop(
+            (params, opt), pipe, step_fn, ckpt=ckpt,
+            cfg=LoopConfig(total_steps=args.steps, checkpoint_every=50),
+            fault_hook=fault_hook, on_metrics=on_metrics)
+        dt = time.time() - t0
+
+    print(f"\ndone: {steps} steps in {dt:.1f}s "
+          f"({args.batch * args.seq * steps / dt:.0f} tok/s), "
+          f"restarts={restarts}, prefetch stats={pipe.stats}")
+    print(f"loss: first={losses[0]:.3f} last={np.mean(losses[-10:]):.3f}")
+    assert np.mean(losses[-10:]) < losses[0], "loss must decrease"
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,60 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Perf-iteration harness: lower ONE (arch x shape) cell under a named
+variant, print the three roofline terms + collective breakdown.
+
+    PYTHONPATH=src python scripts/hillclimb.py --arch olmo-1b \
+        --shape train_4k --variant baseline|nosp|...
+"""
+import argparse
+import json
+
+import numpy as np
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", required=True)
+    ap.add_argument("--variant", default="baseline")
+    ap.add_argument("--mesh", default="single")
+    args = ap.parse_args()
+
+    # variant switches are read inside repro via env
+    os.environ["REPRO_VARIANT"] = args.variant
+
+    from repro.configs.base import get_config, get_shape
+    from repro.distributed.ctx import (SERVE_RULES_1POD, TRAIN_RULES_1POD)
+    from repro.launch.dryrun import run_cell
+    from repro.launch.mesh import make_production_mesh
+
+    mesh = make_production_mesh(multi_pod=args.mesh == "multi")
+    shape = get_shape(args.shape)
+    rules = TRAIN_RULES_1POD if shape.kind == "train" else SERVE_RULES_1POD
+    row = run_cell(args.arch, args.shape, mesh,
+                   "2x16x16" if args.mesh == "multi" else "16x16", rules)
+    if row["status"] != "ok":
+        print("ERROR:", row.get("error"))
+        print(row.get("traceback", "")[-2000:])
+        return
+    t = row["roofline"]
+    print(f"VARIANT {args.variant}: dominant={t['dominant']}")
+    print(f"  compute_s    = {t['compute_s']:.4e}")
+    print(f"  memory_s     = {t['memory_s']:.4e}")
+    print(f"  collective_s = {t['collective_s']:.4e}")
+    print(f"  useful_ratio = {t['useful_ratio']:.3f}")
+    print(f"  GB/dev       = {row['memory']['total_device_bytes'] / 1e9:.2f}"
+          f"  fits={row['fits_hbm']}")
+    c = row["collectives"]
+    for k, v in sorted(c["bytes_by_kind"].items(), key=lambda kv: -kv[1]):
+        print(f"  {k:20s} {v / 1e9:10.2f} GB/chip (ops={c['count_by_kind'].get(k)})")
+    out = json.dumps({"variant": args.variant, **{k: row[k] for k in
+                     ("arch", "shape", "roofline", "collectives")}})
+    path = f"results/hillclimb_{args.arch}_{args.shape}.jsonl"
+    with open(path, "a") as f:
+        f.write(out + "\n")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,88 @@
+"""Render EXPERIMENTS.md roofline/dry-run tables from the dry-run JSONLs."""
+import json
+import pathlib
+import sys
+
+RES = pathlib.Path("results/dryrun")
+
+
+def load(path):
+    rows = {}
+    for line in (RES / path).read_text().splitlines():
+        try:
+            r = json.loads(line)
+            rows[(r["arch"], r["shape"])] = r
+        except json.JSONDecodeError:
+            pass
+    return rows
+
+
+def fmt(x):
+    return f"{x:.2e}"
+
+
+def roofline_table(rows, baseline=None):
+    out = ["| arch | shape | dominant | compute_s | memory_s | collective_s | "
+           "useful | GB/dev | fits |",
+           "|---|---|---|---|---|---|---|---|---|"]
+    for (a, s), r in sorted(rows.items()):
+        if r["status"] == "skipped":
+            out.append(f"| {a} | {s} | — | — | — | — | — | — | skipped (full attention @500k) |")
+            continue
+        t = r["roofline"]
+        gb = r["memory"].get("total_device_bytes", 0) / 1e9
+        out.append(
+            f"| {a} | {s} | {t['dominant']} | {fmt(t['compute_s'])} | "
+            f"{fmt(t['memory_s'])} | {fmt(t['collective_s'])} | "
+            f"{t['useful_ratio']:.2f} | {gb:.1f} | {r.get('fits_hbm')} |")
+    return "\n".join(out)
+
+
+def delta_table(base, opt):
+    out = ["| arch | shape | dominant (base→opt) | dominant-term s (base→opt) | Δ |",
+           "|---|---|---|---|---|"]
+    for key in sorted(base):
+        b, o = base[key], opt.get(key)
+        if b["status"] != "ok" or not o or o["status"] != "ok":
+            continue
+        tb, to = b["roofline"], o["roofline"]
+        db = max(tb["compute_s"], tb["memory_s"], tb["collective_s"])
+        do = max(to["compute_s"], to["memory_s"], to["collective_s"])
+        delta = (db - do) / db * 100
+        out.append(f"| {key[0]} | {key[1]} | {tb['dominant']}→{to['dominant']} | "
+                   f"{fmt(db)}→{fmt(do)} | {delta:+.0f}% |")
+    return "\n".join(out)
+
+
+def mfu_summary(rows):
+    """Projected roofline fraction = useful compute / dominant term."""
+    out = ["| arch | shape | projected roofline fraction |", "|---|---|---|"]
+    for (a, s), r in sorted(rows.items()):
+        if r["status"] != "ok":
+            continue
+        t = r["roofline"]
+        dom = max(t["compute_s"], t["memory_s"], t["collective_s"])
+        frac = t["useful_ratio"] * t["compute_s"] / dom if dom else 0
+        out.append(f"| {a} | {s} | {frac:.3f} |")
+    return "\n".join(out)
+
+
+if __name__ == "__main__":
+    which = sys.argv[1] if len(sys.argv) > 1 else "all"
+    base_s = load("16_16_baseline.jsonl")
+    opt_s = load("16_16.jsonl")
+    opt_m = load("2_16_16.jsonl")
+    if which in ("all", "baseline"):
+        print("### Single-pod 16x16 — BASELINE (paper-faithful sharding)\n")
+        print(roofline_table(base_s))
+    if which in ("all", "optimized"):
+        print("\n### Single-pod 16x16 — OPTIMIZED\n")
+        print(roofline_table(opt_s))
+        print("\n### Multi-pod 2x16x16 — OPTIMIZED\n")
+        print(roofline_table(opt_m))
+    if which in ("all", "delta"):
+        print("\n### Baseline -> optimized, dominant term per cell\n")
+        print(delta_table(base_s, opt_s))
+    if which in ("all", "mfu"):
+        print("\n### Projected roofline fractions (optimized, single-pod)\n")
+        print(mfu_summary(opt_s))

@@ -1,0 +1,53 @@
+"""Dev smoke: one forward/loss + one decode step per reduced arch on CPU."""
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ARCH_IDS, get_config, reduce_config
+from repro.models import zoo
+
+ONLY = sys.argv[1:] or ARCH_IDS
+
+
+def fake_batch(cfg, B=2, S=64, key=None):
+    key = key or jax.random.key(0)
+    batch = {}
+    if cfg.frontend == "patch":
+        n_img = min(cfg.frontend_tokens, S // 4)
+        batch["patch_embeds"] = jax.random.normal(key, (B, n_img, cfg.frontend_dim))
+        batch["tokens"] = jax.random.randint(key, (B, S - n_img), 0, cfg.vocab)
+        batch["targets"] = jax.random.randint(key, (B, S - n_img), 0, cfg.vocab)
+    elif cfg.is_encdec:
+        batch["frames"] = jax.random.normal(key, (B, S // 4, cfg.d_model))
+        batch["tokens"] = jax.random.randint(key, (B, S), 0, cfg.vocab)
+        batch["targets"] = jax.random.randint(key, (B, S), 0, cfg.vocab)
+    else:
+        batch["tokens"] = jax.random.randint(key, (B, S), 0, cfg.vocab)
+        batch["targets"] = jax.random.randint(key, (B, S), 0, cfg.vocab)
+    return batch
+
+
+for arch in ONLY:
+    cfg = reduce_config(get_config(arch))
+    key = jax.random.key(42)
+    params = zoo.init_model(cfg, key)
+    batch = fake_batch(cfg)
+    loss, metrics = jax.jit(lambda p, b: zoo.loss_fn(p, cfg, b))(params, batch)
+    assert np.isfinite(float(loss)), f"{arch}: loss not finite"
+
+    # decode one token
+    B, max_len = 2, 64
+    caches = zoo.init_cache(cfg, B, max_len)
+    dbatch = {"tokens": jnp.zeros((B, 1), jnp.int32)}
+    if cfg.is_encdec:
+        dbatch["enc_out"] = jnp.zeros((B, 16, cfg.d_model))
+    logits, caches = jax.jit(
+        lambda p, b, c: zoo.decode_step(p, cfg, b, c, cache_index=jnp.int32(3))
+    )(params, dbatch, caches)
+    assert logits.shape == (B, 1, cfg.vocab), f"{arch}: bad logits {logits.shape}"
+    assert np.isfinite(np.asarray(logits)).all(), f"{arch}: logits not finite"
+    n_params = zoo.analytic_param_count(cfg)
+    print(f"OK {arch:26s} loss={float(loss):8.4f} params={n_params:,}")
+print("ALL OK")

@@ -1,0 +1,8 @@
+from repro.codec.transform import dct2_blocks, idct2_blocks, to_blocks, from_blocks
+from repro.codec.encode import (
+    EncoderConfig,
+    encode_tile,
+    decode_tile,
+    encoded_size_bytes,
+)
+from repro.codec.psnr import psnr

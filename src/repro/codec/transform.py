@@ -1,0 +1,55 @@
+"""Blockwise 8x8 DCT-II transform, jnp reference implementation.
+
+The TPU hot path lives in ``repro/kernels/dct`` (Pallas); this module is the
+numerical ground truth used by the codec and as the kernels' ref oracle.
+The 8x8 DCT is expressed as two small constant matmuls per block
+(``D @ X @ D.T``) so even the reference path is MXU-shaped.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+BLOCK = 8
+
+
+@functools.lru_cache(maxsize=None)
+def dct_matrix(n: int = BLOCK) -> np.ndarray:
+    """Orthonormal DCT-II basis matrix [n, n] (float32)."""
+    k = np.arange(n)[:, None]
+    i = np.arange(n)[None, :]
+    m = np.sqrt(2.0 / n) * np.cos(np.pi * (2 * i + 1) * k / (2 * n))
+    m[0] = np.sqrt(1.0 / n)
+    return m.astype(np.float32)
+
+
+def to_blocks(frame: jnp.ndarray, block: int = BLOCK) -> jnp.ndarray:
+    """[H, W] -> [H/b * W/b, b, b] row-major blocks.  H, W must divide b."""
+    h, w = frame.shape[-2:]
+    lead = frame.shape[:-2]
+    nb_h, nb_w = h // block, w // block
+    x = frame.reshape(lead + (nb_h, block, nb_w, block))
+    x = jnp.swapaxes(x, -3, -2)
+    return x.reshape(lead + (nb_h * nb_w, block, block))
+
+
+def from_blocks(blocks: jnp.ndarray, h: int, w: int, block: int = BLOCK) -> jnp.ndarray:
+    nb_h, nb_w = h // block, w // block
+    lead = blocks.shape[:-3]
+    x = blocks.reshape(lead + (nb_h, nb_w, block, block))
+    x = jnp.swapaxes(x, -3, -2)
+    return x.reshape(lead + (h, w))
+
+
+def dct2_blocks(blocks: jnp.ndarray) -> jnp.ndarray:
+    """2D DCT per block: [..., 8, 8] -> [..., 8, 8]."""
+    d = jnp.asarray(dct_matrix())
+    return jnp.einsum("ij,...jk,lk->...il", d, blocks.astype(jnp.float32), d)
+
+
+def idct2_blocks(coeffs: jnp.ndarray) -> jnp.ndarray:
+    d = jnp.asarray(dct_matrix())
+    return jnp.einsum("ji,...jk,kl->...il", d, coeffs.astype(jnp.float32), d)

@@ -1,0 +1,9 @@
+from repro.configs.base import (
+    ARCH_IDS,
+    SHAPES,
+    ArchConfig,
+    ShapeSpec,
+    get_config,
+    get_shape,
+    reduce_config,
+)

@@ -1,0 +1,26 @@
+"""TASM core — the paper's primary contribution.
+
+Tile layouts, cost model + what-if, B+-tree semantic index, KQKO optimizer,
+incremental (lazy / more / regret) tiling policies, tile store, and the TASM
+facade (SCAN / ADDMETADATA).
+"""
+from repro.core.cost import CostModel, calibrate, pixels_and_tiles, query_cost
+from repro.core.layout import (
+    TileLayout,
+    coarse_grained_layout,
+    fine_grained_layout,
+    partition,
+    single_tile_layout,
+    uniform_layout,
+)
+from repro.core.policies import (
+    KQKOPolicy,
+    LazyPolicy,
+    MorePolicy,
+    NoTilingPolicy,
+    PretileAllPolicy,
+    RegretPolicy,
+)
+from repro.core.semantic_index import SemanticIndex
+from repro.core.storage import TileStore
+from repro.core.tasm import TASM, ScanResult, ScanStats

@@ -1,0 +1,91 @@
+"""Cost-model calibration (paper §4.1).
+
+The paper fits ``C = beta*P + gamma*T`` on >1,400 (video, query object,
+layout) decode measurements (R^2 = 0.996 on NVDEC) and prescribes re-fitting
+per system.  This module measures *our* codec: it encodes sample videos under
+a spread of uniform and non-uniform layouts, times tile decodes, and fits
+(beta, gamma) — and analogously the re-encode model R(s, L).
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.codec.encode import EncoderConfig, decode_tile, encode_tile
+from repro.core.cost import CostModel, calibrate, calibrate_encode
+from repro.core.layout import (TileLayout, fine_grained_layout,
+                               single_tile_layout, uniform_layout)
+from repro.data.video_gen import dense_spec, generate, sparse_spec
+
+
+def _sample_layouts(H: int, W: int, detections) -> list[TileLayout]:
+    layouts = [single_tile_layout(H, W)]
+    for r, c in [(1, 2), (2, 2), (2, 3), (3, 3), (3, 5), (4, 4), (4, 6)]:
+        layouts.append(uniform_layout(H, W, r, c))
+    # non-uniform around each label on a few windows
+    labels = {l for dets in detections[:32] for l, _ in dets}
+    for label in sorted(labels):
+        boxes = [b for dets in detections[:16] for l, b in dets if l == label]
+        if boxes:
+            layouts.append(fine_grained_layout(H, W, boxes))
+    return layouts
+
+
+def measure_decode_samples(enc_cfg: EncoderConfig, *, seeds=(0, 1),
+                           n_frames: int = 32, height: int = 192,
+                           width: int = 320, repeats: int = 2):
+    """Returns [(pixels, tiles, seconds)] over layout x video samples."""
+    samples: list[tuple[float, float, float]] = []
+    for seed in seeds:
+        for spec_fn in (sparse_spec, dense_spec):
+            spec = spec_fn(seed=seed, n_frames=n_frames, height=height,
+                           width=width)
+            frames, dets = generate(spec)
+            for layout in _sample_layouts(height, width, dets):
+                encs = []
+                for rect in layout.tile_rects():
+                    y1, x1, y2, x2 = rect
+                    encs.append(encode_tile(
+                        np.ascontiguousarray(frames[:, y1:y2, x1:x2]), enc_cfg))
+                # decode a prefix of tiles (1, half, all) to vary P and T
+                for n_tiles in sorted({1, max(1, layout.n_tiles // 2),
+                                       layout.n_tiles}):
+                    chosen = encs[:n_tiles]
+                    # warm
+                    for e in chosen:
+                        decode_tile(e, gop_indices=[0])
+                    t0 = time.perf_counter()
+                    for _ in range(repeats):
+                        for e in chosen:
+                            decode_tile(e)
+                    dt = (time.perf_counter() - t0) / repeats
+                    pixels = sum(e["h"] * e["w"] * e["n_frames"] for e in chosen)
+                    samples.append((float(pixels), float(len(chosen)), dt))
+    return samples
+
+
+def measure_encode_samples(enc_cfg: EncoderConfig, *, seed=0,
+                           n_frames: int = 32, height: int = 192,
+                           width: int = 320):
+    samples: list[tuple[float, float, float]] = []
+    spec = sparse_spec(seed=seed, n_frames=n_frames, height=height, width=width)
+    frames, dets = generate(spec)
+    for layout in _sample_layouts(height, width, dets)[:8]:
+        t0 = time.perf_counter()
+        for rect in layout.tile_rects():
+            y1, x1, y2, x2 = rect
+            encode_tile(np.ascontiguousarray(frames[:, y1:y2, x1:x2]), enc_cfg)
+        dt = time.perf_counter() - t0
+        samples.append((float(height * width * n_frames),
+                        float(layout.n_tiles), dt))
+    return samples
+
+
+def calibrated_cost_model(enc_cfg: EncoderConfig | None = None,
+                          **kw) -> CostModel:
+    """Measure + fit both the decode and encode linear models."""
+    enc_cfg = enc_cfg or EncoderConfig()
+    model = calibrate(measure_decode_samples(enc_cfg, **kw))
+    model = calibrate_encode(measure_encode_samples(enc_cfg), model)
+    return model

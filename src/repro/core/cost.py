@@ -1,0 +1,103 @@
+"""Cost model (paper §4.1).
+
+    C(s, q, L) = beta * P(s, q, L) + gamma * T(s, q, L)
+
+P = pixels decoded, T = tiles opened.  Decoding a tile in a non-keyframe
+requires decoding that tile in every frame from the preceding keyframe, so a
+tile touched by the query on *any* frame of a GOP is decoded for the whole
+GOP (paper §2).  ``calibrate`` re-fits (beta, gamma) from measured decode
+times of *our* codec — the paper prescribes exactly this per-system re-fit
+(they report R^2 = 0.996 on NVDEC; ours is reported in EXPERIMENTS.md).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Iterable, Mapping, Sequence
+
+import numpy as np
+
+from repro.core.layout import BBox, TileLayout
+
+
+@dataclass
+class CostModel:
+    beta: float = 1.0e-8   # seconds per pixel decoded (calibrated)
+    gamma: float = 1.0e-4  # seconds per tile opened (calibrated)
+    r_squared: float = 0.0
+
+    def cost(self, pixels: float, tiles: float) -> float:
+        return self.beta * pixels + self.gamma * tiles
+
+    # -- encoding-cost model (R(s, L) in §4.4): linear in pixels encoded ----
+    encode_per_pixel: float = 4.0e-8
+    encode_per_tile: float = 2.0e-4
+
+    def encode_cost(self, pixels: float, tiles: float) -> float:
+        return self.encode_per_pixel * pixels + self.encode_per_tile * tiles
+
+
+def pixels_and_tiles(layout: TileLayout, boxes_by_frame: Mapping[int, Sequence[BBox]],
+                     *, gop: int, sot_frames: tuple[int, int]) -> tuple[float, float]:
+    """P and T for a query hitting ``boxes_by_frame`` within one SOT.
+
+    boxes_by_frame: frame -> requested boxes (only frames inside the SOT and
+    the query's temporal range).  GOP semantics: within each GOP of the SOT,
+    a tile intersecting any requested box is decoded for all frames of that
+    GOP up to the last requested frame.
+    """
+    f_start, f_end = sot_frames
+    if not boxes_by_frame:
+        return 0.0, 0.0
+    pixels = 0.0
+    tiles = 0.0
+    # group requested frames by GOP
+    by_gop: dict[int, list[int]] = {}
+    for f in boxes_by_frame:
+        if f_start <= f < f_end:
+            by_gop.setdefault((f - f_start) // gop, []).append(f)
+    for g, frames in by_gop.items():
+        needed: set[int] = set()
+        for f in frames:
+            for box in boxes_by_frame[f]:
+                needed.update(layout.tiles_intersecting(box))
+        if not needed:
+            continue
+        last = max(frames)
+        gop_first = f_start + g * gop
+        n_decoded_frames = last - gop_first + 1
+        pixels += sum(layout.tile_pixels(t) for t in needed) * n_decoded_frames
+        tiles += len(needed)
+    return pixels, tiles
+
+
+def query_cost(layout: TileLayout, boxes_by_frame, model: CostModel, *,
+               gop: int, sot_frames: tuple[int, int]) -> float:
+    p, t = pixels_and_tiles(layout, boxes_by_frame, gop=gop, sot_frames=sot_frames)
+    return model.cost(p, t)
+
+
+def calibrate(measurements: Iterable[tuple[float, float, float]]) -> CostModel:
+    """Fit beta, gamma from (pixels, tiles, seconds) measurements (paper's
+    1,400-combination linear fit, on our codec)."""
+    rows = list(measurements)
+    A = np.array([[p, t] for p, t, _ in rows], dtype=np.float64)
+    y = np.array([s for _, _, s in rows], dtype=np.float64)
+    coef, *_ = np.linalg.lstsq(A, y, rcond=None)
+    pred = A @ coef
+    ss_res = float(np.sum((y - pred) ** 2))
+    ss_tot = float(np.sum((y - y.mean()) ** 2)) or 1e-12
+    r2 = 1.0 - ss_res / ss_tot
+    beta = float(max(coef[0], 1e-12))
+    gamma = float(max(coef[1], 0.0))
+    return CostModel(beta=beta, gamma=gamma, r_squared=r2)
+
+
+def calibrate_encode(measurements: Iterable[tuple[float, float, float]],
+                     base: CostModel) -> CostModel:
+    rows = list(measurements)
+    A = np.array([[p, t] for p, t, _ in rows], dtype=np.float64)
+    y = np.array([s for _, _, s in rows], dtype=np.float64)
+    coef, *_ = np.linalg.lstsq(A, y, rcond=None)
+    base.encode_per_pixel = float(max(coef[0], 1e-12))
+    base.encode_per_tile = float(max(coef[1], 0.0))
+    return base

@@ -1,0 +1,249 @@
+"""Tiling policies (paper §4.2–4.4).
+
+Every policy sees each executed query (per-SOT) and proposes re-tilings.
+
+- :class:`KQKOPolicy`      — §4.2 known-query/known-object optimization.
+- :class:`LazyPolicy`      — §4.3 lazy detection (tile once locations known).
+- :class:`MorePolicy`      — §5.3 "Incremental, more": after a query, re-tile
+                              queried SOTs around all labels queried so far.
+- :class:`RegretPolicy`    — §4.4 online regret accumulation; re-tile when
+                              accumulated regret exceeds eta * R(s, L).
+- :class:`NoTilingPolicy`  — baseline ω everywhere.
+
+All policies share the cost model's what-if interface: candidate layouts are
+costed with C(s,q,L) without re-encoding anything (paper §4.1's [12]).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Iterable, Optional
+
+from repro.core.cost import CostModel, pixels_and_tiles
+from repro.core.layout import TileLayout, partition, single_tile_layout
+from repro.core.semantic_index import SemanticIndex
+from repro.core.storage import SOTRecord, TileStore
+
+ALPHA = 0.8  # §3.4.4/§5.2.3 minimum decode-reduction threshold
+ETA = 1.0    # §4.4 regret multiplier (online-indexing setting of [11])
+
+
+@dataclass
+class QueryInfo:
+    """One executed query as seen by a policy, restricted to one SOT."""
+    video: str
+    labels: tuple[str, ...]           # flat set of labels requested
+    frame_range: tuple[int, int]
+    boxes_by_frame: dict              # frame -> [bbox] (requested regions)
+    sot: SOTRecord
+
+
+class Policy:
+    name = "base"
+
+    def on_ingest(self, index: SemanticIndex, store: TileStore,
+                  video: str, frame_hw) -> dict[int, TileLayout]:
+        """Layouts to apply at ingest time (sot_id -> layout)."""
+        return {}
+
+    def observe(self, q: QueryInfo, index: SemanticIndex, store: TileStore,
+                model: CostModel) -> Optional[TileLayout]:
+        """Called after a query executed on SOT q.sot; returns a new layout
+        to re-tile this SOT with, or None."""
+        return None
+
+
+class NoTilingPolicy(Policy):
+    name = "not_tiled"
+
+
+def _sot_boxes(index: SemanticIndex, video: str, labels: Iterable[str],
+               sot: SOTRecord) -> list:
+    out = []
+    for label in labels:
+        for f, boxes in index.boxes_for_label(
+                video, label, (sot.frame_start, sot.frame_end)).items():
+            out.extend(boxes)
+    return out
+
+
+def _alpha_ok(layout: TileLayout, q: QueryInfo, gop: int, alpha: float) -> bool:
+    """P(s,q,L) < alpha * P(s,q,omega)."""
+    omega = single_tile_layout(layout.frame_height, layout.frame_width)
+    span = (q.sot.frame_start, q.sot.frame_end)
+    p_l, _ = pixels_and_tiles(layout, q.boxes_by_frame, gop=gop, sot_frames=span)
+    p_o, _ = pixels_and_tiles(omega, q.boxes_by_frame, gop=gop, sot_frames=span)
+    return p_l < alpha * p_o if p_o > 0 else True
+
+
+class PretileAllPolicy(Policy):
+    """Tile every SOT around ALL detected objects before queries ("All
+    objects" baseline in §5.3)."""
+
+    name = "pretile_all"
+
+    def __init__(self, granularity: str = "fine"):
+        self.granularity = granularity
+
+    def on_ingest(self, index, store, video, frame_hw):
+        H, W = frame_hw
+        layouts = {}
+        for rec in store.sots:
+            boxes = _sot_boxes(index, video, index.labels(video), rec)
+            if boxes:
+                layouts[rec.sot_id] = partition(H, W, boxes,
+                                                granularity=self.granularity)
+        return layouts
+
+
+class KQKOPolicy(Policy):
+    """§4.2: known workload objects O_Q with locations in the index.  Tiles
+    each SOT with the fine-grained layout around O_Q ∩ SOT, unless the alpha
+    rule says tiling won't pay."""
+
+    name = "kqko"
+
+    def __init__(self, query_objects: Iterable[str], alpha: float = ALPHA):
+        self.o_q = tuple(query_objects)
+        self.alpha = alpha
+
+    def on_ingest(self, index, store, video, frame_hw):
+        H, W = frame_hw
+        layouts = {}
+        for rec in store.sots:
+            boxes = _sot_boxes(index, video, self.o_q, rec)
+            if not boxes:
+                continue
+            cand = partition(H, W, boxes, granularity="fine")
+            # alpha rule against the whole-workload proxy: pixels of tiles
+            # containing the boxes vs full frames
+            boxes_by_frame = {}
+            for label in self.o_q:
+                for f, bs in index.boxes_for_label(
+                        video, label, (rec.frame_start, rec.frame_end)).items():
+                    boxes_by_frame.setdefault(f, []).extend(bs)
+            qi = QueryInfo(video, self.o_q, (rec.frame_start, rec.frame_end),
+                           boxes_by_frame, rec)
+            if _alpha_ok(cand, qi, store.encoder.gop, self.alpha):
+                layouts[rec.sot_id] = cand
+        return layouts
+
+
+class LazyPolicy(Policy):
+    """§4.3 lazy detection: after each query, tile the touched SOTs whose O_Q
+    locations are now all known."""
+
+    name = "lazy"
+
+    def __init__(self, query_objects: Iterable[str], alpha: float = ALPHA):
+        self.o_q = tuple(query_objects)
+        self.alpha = alpha
+
+    def observe(self, q, index, store, model):
+        rec = q.sot
+        span = (rec.frame_start, rec.frame_end)
+        if not index.has_locations(q.video, self.o_q, span):
+            return None  # wait: future queries target objects not yet located
+        H, W = rec.layout.frame_height, rec.layout.frame_width
+        boxes = _sot_boxes(index, q.video, self.o_q, rec)
+        if not boxes:
+            return None
+        cand = partition(H, W, boxes, granularity="fine")
+        if cand == rec.layout:
+            return None
+        if not _alpha_ok(cand, q, store.encoder.gop, self.alpha):
+            return None
+        return cand
+
+
+class MorePolicy(Policy):
+    """"Incremental, more" (§5.3): re-tile each queried SOT around all object
+    classes queried so far."""
+
+    name = "incremental_more"
+
+    def __init__(self):
+        self.seen: set[str] = set()
+
+    def observe(self, q, index, store, model):
+        self.seen.update(q.labels)
+        rec = q.sot
+        H, W = rec.layout.frame_height, rec.layout.frame_width
+        boxes = _sot_boxes(index, q.video, self.seen, rec)
+        if not boxes:
+            return None
+        cand = partition(H, W, boxes, granularity="fine")
+        if cand == rec.layout:
+            return None
+        return cand
+
+
+class RegretPolicy(Policy):
+    """§4.4: accumulate regret per (SOT, alternative layout); re-tile when
+    delta_k > eta * R(s, L_k), skipping layouts that would hurt (alpha rule
+    on any observed query)."""
+
+    name = "incremental_regret"
+
+    def __init__(self, eta: float = ETA, alpha: float = ALPHA,
+                 max_subsets: int = 16):
+        self.eta = eta
+        self.alpha = alpha
+        self.max_subsets = max_subsets
+        self.seen: set[str] = set()
+        self.queried_combos: set[frozenset] = set()
+        # (sot_id, labelset) -> accumulated regret seconds
+        self.regret: dict[tuple[int, frozenset], float] = {}
+        # (sot_id, labelset) vetoed by the alpha rule on some observed query
+        self.vetoed: set[tuple[int, frozenset]] = set()
+
+    def _alternatives(self) -> list[frozenset]:
+        alts = [frozenset([l]) for l in sorted(self.seen)]
+        if len(self.seen) > 1:
+            alts.append(frozenset(self.seen))
+        for combo in self.queried_combos:
+            if combo not in alts:
+                alts.append(combo)
+        return alts[: self.max_subsets]
+
+    def observe(self, q, index, store, model):
+        self.seen.update(q.labels)
+        if len(q.labels) >= 1:
+            self.queried_combos.add(frozenset(q.labels))
+        rec = q.sot
+        H, W = rec.layout.frame_height, rec.layout.frame_width
+        gop = store.encoder.gop
+        span = (rec.frame_start, rec.frame_end)
+        p_cur, t_cur = pixels_and_tiles(rec.layout, q.boxes_by_frame,
+                                        gop=gop, sot_frames=span)
+        c_cur = model.cost(p_cur, t_cur)
+
+        best = None
+        for labelset in self._alternatives():
+            key = (rec.sot_id, labelset)
+            boxes = _sot_boxes(index, q.video, labelset, rec)
+            if not boxes:
+                continue
+            cand = partition(H, W, boxes, granularity="fine")
+            if cand == rec.layout:
+                continue
+            p_k, t_k = pixels_and_tiles(cand, q.boxes_by_frame,
+                                        gop=gop, sot_frames=span)
+            # delta regret = C(s, q, L_cur) - C(s, q, L_k)
+            self.regret[key] = self.regret.get(key, 0.0) + (
+                c_cur - model.cost(p_k, t_k))
+            if not _alpha_ok(cand, q, gop, self.alpha):
+                self.vetoed.add(key)
+            if key in self.vetoed:
+                continue
+            # R(s, L_k): re-encode cost of the whole SOT under L_k
+            n_frames = rec.frame_end - rec.frame_start
+            r = model.encode_cost(cand.total_pixels() * n_frames, cand.n_tiles)
+            if self.regret[key] > self.eta * r:
+                score = self.regret[key] - self.eta * r
+                if best is None or score > best[0]:
+                    best = (score, key, cand)
+        if best is None:
+            return None
+        _, key, cand = best
+        self.regret[key] = 0.0
+        return cand

@@ -1,0 +1,167 @@
+"""Tile-based physical storage (paper §3.4.5, Fig. 1).
+
+Each SOT (sequence of tiles — a run of frames sharing one layout) stores one
+independently decodable stream per tile:
+
+    <root>/<video>/frames_<a>-<b>/tile<i>.npz
+
+Retiling a SOT decodes every tile stream, re-encodes under the new layout,
+and atomically replaces the SOT directory.  An in-memory mode (root=None)
+backs unit tests; benchmarks use the on-disk layout.
+"""
+from __future__ import annotations
+
+import pathlib
+import shutil
+import time
+from dataclasses import dataclass, field
+from typing import Optional
+
+import numpy as np
+
+from repro.codec.encode import EncoderConfig, decode_tile, encode_tile
+from repro.core.layout import TileLayout, single_tile_layout
+
+
+@dataclass
+class SOTRecord:
+    sot_id: int
+    frame_start: int
+    frame_end: int
+    layout: TileLayout
+    epoch: int = 0
+    size_bytes: float = 0.0
+
+
+class TileStore:
+    def __init__(self, video: str, encoder: EncoderConfig, *,
+                 root: Optional[str] = None, sot_len: Optional[int] = None):
+        self.video = video
+        self.encoder = encoder
+        self.sot_len = sot_len or encoder.gop  # default: one SOT per GOP
+        assert self.sot_len % encoder.gop == 0, "SOT must cover whole GOPs"
+        self.root = pathlib.Path(root) if root else None
+        self._mem: dict[tuple[int, int, int], dict] = {}
+        self.sots: list[SOTRecord] = []
+        self.encode_seconds_total = 0.0
+
+    # -- paths ---------------------------------------------------------------
+    def _sot_dir(self, rec: SOTRecord) -> pathlib.Path:
+        return (self.root / self.video /
+                f"frames_{rec.frame_start}-{rec.frame_end - 1}")
+
+    def _write_tile(self, rec: SOTRecord, tile_idx: int, enc: dict) -> None:
+        if self.root is None:
+            self._mem[(rec.sot_id, rec.epoch, tile_idx)] = enc
+            return
+        d = self._sot_dir(rec)
+        d.mkdir(parents=True, exist_ok=True)
+        tmp = d / f".tile{tile_idx}.tmp.npz"
+        np.savez_compressed(tmp, kq=enc["kq"], pq=enc["pq"],
+                            meta=np.array([enc["h"], enc["w"], enc["gop"],
+                                           enc["qp"], enc["n_frames"]]),
+                            size=np.array([enc["size_bytes"]]))
+        tmp.rename(d / f"tile{tile_idx}.npz")
+
+    def _read_tile(self, rec: SOTRecord, tile_idx: int) -> dict:
+        if self.root is None:
+            return self._mem[(rec.sot_id, rec.epoch, tile_idx)]
+        with np.load(self._sot_dir(rec) / f"tile{tile_idx}.npz") as z:
+            h, w, gop, qp, n_frames = (int(x) for x in z["meta"])
+            return {"kq": z["kq"], "pq": z["pq"], "h": h, "w": w, "gop": gop,
+                    "qp": qp, "n_frames": n_frames,
+                    "size_bytes": float(z["size"][0])}
+
+    # -- ingest ---------------------------------------------------------------
+    def ingest(self, frames: np.ndarray,
+               layouts: Optional[dict[int, TileLayout]] = None) -> float:
+        """Encode the whole video.  layouts: sot_id -> layout (default ω).
+        Returns encode seconds."""
+        T, H, W = frames.shape
+        assert T % self.sot_len == 0, (T, self.sot_len)
+        n_sots = T // self.sot_len
+        t0 = time.perf_counter()
+        for s in range(n_sots):
+            a, b = s * self.sot_len, (s + 1) * self.sot_len
+            layout = (layouts or {}).get(s, single_tile_layout(H, W))
+            rec = SOTRecord(s, a, b, layout)
+            self._encode_sot(rec, frames[a:b])
+            self.sots.append(rec)
+        dt = time.perf_counter() - t0
+        self.encode_seconds_total += dt
+        return dt
+
+    def _encode_sot(self, rec: SOTRecord, frames: np.ndarray) -> None:
+        total = 0.0
+        for i, (y1, x1, y2, x2) in enumerate(rec.layout.tile_rects()):
+            enc = encode_tile(np.ascontiguousarray(frames[:, y1:y2, x1:x2]),
+                              self.encoder)
+            self._write_tile(rec, i, enc)
+            total += enc["size_bytes"]
+        rec.size_bytes = total
+
+    # -- decode ----------------------------------------------------------------
+    def decode_tiles(self, sot_id: int, tile_idxs, *, n_frames: Optional[int] = None
+                     ) -> dict[int, np.ndarray]:
+        """Decode the given tile streams of a SOT up to n_frames.  Whole GOPs
+        except the last, which stops at the last requested frame (temporal
+        random access never decodes past the request)."""
+        rec = self.sots[sot_id]
+        span = rec.frame_end - rec.frame_start
+        n_frames = span if n_frames is None else min(n_frames, span)
+        gop = self.encoder.gop
+        n_full = n_frames // gop
+        tail = n_frames - n_full * gop
+        out = {}
+        for t in tile_idxs:
+            enc = self._read_tile(rec, t)
+            parts = []
+            if n_full:
+                parts.append(decode_tile(enc, gop_indices=range(n_full)))
+            if tail:
+                parts.append(decode_tile(enc, gop_indices=[n_full],
+                                         frames_within=tail))
+            out[t] = np.concatenate(parts, axis=0) if len(parts) > 1 else parts[0]
+        return out
+
+    def decode_full_sot(self, sot_id: int) -> np.ndarray:
+        """Reassemble all tiles of a SOT into full frames (stitching)."""
+        rec = self.sots[sot_id]
+        tiles = self.decode_tiles(sot_id, range(rec.layout.n_tiles))
+        T = rec.frame_end - rec.frame_start
+        H, W = rec.layout.frame_height, rec.layout.frame_width
+        frames = np.zeros((T, H, W), dtype=np.float32)
+        for i, (y1, x1, y2, x2) in enumerate(rec.layout.tile_rects()):
+            frames[:, y1:y2, x1:x2] = tiles[i][:T]
+        return frames
+
+    # -- retile -----------------------------------------------------------------
+    def retile(self, sot_id: int, new_layout: TileLayout) -> float:
+        """Decode + re-encode a SOT under a new layout.  Returns seconds."""
+        rec = self.sots[sot_id]
+        if new_layout == rec.layout:
+            return 0.0
+        t0 = time.perf_counter()
+        frames = self.decode_full_sot(sot_id)
+        old_dir = self._sot_dir(rec) if self.root is not None else None
+        old_epoch = rec.epoch
+        rec.layout = new_layout
+        rec.epoch += 1
+        if old_dir is not None and old_dir.exists():
+            shutil.rmtree(old_dir)
+        self._encode_sot(rec, frames)
+        # drop in-memory blobs of the previous epoch
+        if self.root is None:
+            for k in [k for k in self._mem if k[0] == sot_id and k[1] == old_epoch]:
+                del self._mem[k]
+        dt = time.perf_counter() - t0
+        self.encode_seconds_total += dt
+        return dt
+
+    # -- stats -------------------------------------------------------------------
+    def storage_bytes(self) -> float:
+        return float(sum(r.size_bytes for r in self.sots))
+
+    def sots_in_range(self, f_lo: int, f_hi: int) -> list[SOTRecord]:
+        return [r for r in self.sots
+                if r.frame_start < f_hi and r.frame_end > f_lo]

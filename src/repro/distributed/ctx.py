@@ -1,0 +1,132 @@
+"""Logical-axis sharding context.
+
+Model code annotates intermediates with *logical* axes, e.g.
+``constrain(x, "batch", "seq", "model_dim")``.  A :class:`ShardingRules`
+installed via ``use_sharding(rules, mesh)`` maps logical axes to mesh axes and
+applies ``jax.lax.with_sharding_constraint``.  When no context is installed
+(unit tests, single-device smoke runs) the calls are no-ops, so model code is
+identical on 1 CPU device and on the 512-chip production mesh.
+"""
+from __future__ import annotations
+
+import contextlib
+import threading
+from dataclasses import dataclass, field
+from typing import Optional
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+_state = threading.local()
+
+
+@dataclass(frozen=True)
+class ShardingRules:
+    """logical axis name -> mesh axis (str, tuple of str, or None)."""
+
+    rules: dict = field(default_factory=dict)
+
+    def spec(self, *logical_axes: Optional[str]) -> P:
+        return P(*[self.rules.get(a) if a is not None else None for a in logical_axes])
+
+
+# Default logical->mesh mapping for the production mesh (pod, data, model).
+# 'batch' shards over the full data-parallel product; 'model'-ish axes over TP.
+TRAIN_RULES = ShardingRules(rules={
+    "batch": ("pod", "data"),
+    "seq": None,
+    "model_dim": None,
+    "heads": "model",
+    "kv_heads": "model",
+    "ff": "model",
+    "vocab": "model",
+    "experts": "model",
+    "d_state": None,
+    "fsdp": "data",  # parameter sharding axis (ZeRO-3)
+    "seq_shard": "model",  # sequence parallelism (long-context decode)
+})
+
+# Serving: no FSDP (params TP-only), batch over data.
+SERVE_RULES = ShardingRules(rules={**TRAIN_RULES.rules, "fsdp": None})
+
+# Single-pod variants (no 'pod' axis in the mesh).
+TRAIN_RULES_1POD = ShardingRules(rules={**TRAIN_RULES.rules, "batch": "data"})
+SERVE_RULES_1POD = ShardingRules(rules={**SERVE_RULES.rules, "batch": "data"})
+
+# Pure-DP policy for small models (TP=1): batch and FSDP span BOTH mesh
+# axes; no tensor sharding, so the only collectives are FSDP param gathers
+# and gradient reduce-scatters.  Selected per-arch (see sharding.choose_policy).
+def dp_rules(mesh_axes: tuple) -> ShardingRules:
+    dp = tuple(a for a in ("pod", "data", "model") if a in mesh_axes)
+    return ShardingRules(rules={
+        "batch": dp, "seq": None, "model_dim": None, "heads": None,
+        "kv_heads": None, "ff": None, "vocab": None, "experts": None,
+        "d_state": None, "fsdp": dp, "seq_shard": None,
+    })
+
+
+def _variant() -> str:
+    import os
+
+    return os.environ.get("REPRO_VARIANT", "baseline")
+
+
+def current_rules() -> Optional[ShardingRules]:
+    rules = getattr(_state, "rules", None)
+    if rules is not None and _variant() == "nosp" and             rules.rules.get("seq_shard") is not None:
+        rules = ShardingRules(rules={**rules.rules, "seq_shard": None})
+    return rules
+
+
+def current_mesh() -> Optional[Mesh]:
+    return getattr(_state, "mesh", None)
+
+
+@contextlib.contextmanager
+def use_sharding(rules: ShardingRules, mesh: Optional[Mesh] = None):
+    prev_r = getattr(_state, "rules", None)
+    prev_m = getattr(_state, "mesh", None)
+    _state.rules, _state.mesh = rules, mesh
+    try:
+        yield
+    finally:
+        _state.rules, _state.mesh = prev_r, prev_m
+
+
+def _axis_size(mesh: Mesh, ax) -> int:
+    if isinstance(ax, tuple):
+        size = 1
+        for a in ax:
+            size *= mesh.shape[a]
+        return size
+    return mesh.shape[ax]
+
+
+def constrain(x, *logical_axes: Optional[str]):
+    """Apply a sharding constraint if a context is installed; else identity.
+
+    Logical axes whose mesh size does not divide the array dim are dropped
+    (replicated) — this lets one call site serve e.g. both 32k prefill
+    (sequence-shardable) and single-token decode.
+    """
+    rules = current_rules()
+    if rules is None:
+        return x
+    mesh = current_mesh()
+    spec = rules.spec(*logical_axes)
+    if mesh is not None:
+        axes = []
+        for dim, ax in zip(x.shape, spec):
+            if ax is not None and dim % _axis_size(mesh, ax) != 0:
+                ax = None
+            axes.append(ax)
+        spec = P(*axes)
+        return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+    return jax.lax.with_sharding_constraint(x, spec)
+
+
+def logical_spec(*logical_axes: Optional[str]) -> P:
+    rules = current_rules()
+    if rules is None:
+        return P(*[None] * len(logical_axes))
+    return rules.spec(*logical_axes)

@@ -1,0 +1,49 @@
+"""Pallas TPU kernel: fused blockwise 8x8 DCT + quantization (encode hot loop).
+
+TPU mapping: a tile of BLK consecutive 8x8 blocks lives in VMEM as
+[BLK, 8, 8]; the two constant 8x8 basis matmuls are expressed as einsums that
+lower to MXU dot_generals batched over the BLK dimension; the quant divide +
+round runs on the VPU; output int16 stays in VMEM until the grid step ends.
+Grid: one program per BLK-row of blocks.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.codec.quant import quant_matrix
+from repro.codec.transform import dct_matrix
+
+BLK = 256  # 8x8 blocks per grid step: [256, 8, 8] f32 = 64 KiB in VMEM
+
+
+def _kernel(x_ref, d_ref, m_ref, out_ref):
+    d = d_ref[...]
+    m = m_ref[...]
+    x = x_ref[...].astype(jnp.float32)          # [BLK, 8, 8]
+    c = jnp.einsum("ij,njk->nik", d, x)          # D @ X
+    c = jnp.einsum("nik,lk->nil", c, d)          # ... @ D^T
+    out_ref[...] = jnp.round(c / m).astype(jnp.int16)
+
+
+def dct_quant(blocks: jnp.ndarray, qp: int, intra: bool, *,
+              interpret: bool = False, blk: int = BLK) -> jnp.ndarray:
+    """blocks: [N, 8, 8] f32, N % blk == 0 -> [N, 8, 8] int16."""
+    n = blocks.shape[0]
+    assert n % blk == 0, (n, blk)
+    grid = (n // blk,)
+    return pl.pallas_call(
+        _kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((blk, 8, 8), lambda i: (i, 0, 0)),
+            pl.BlockSpec((8, 8), lambda i: (0, 0)),
+            pl.BlockSpec((8, 8), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((blk, 8, 8), lambda i: (i, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((n, 8, 8), jnp.int16),
+        interpret=interpret,
+    )(blocks, jnp.asarray(dct_matrix()), jnp.asarray(quant_matrix(qp, intra)))

@@ -1,0 +1,23 @@
+"""Jit'd public wrapper for the DCT+quant kernel with shape padding."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.dct.dct import BLK, dct_quant
+
+
+@functools.partial(jax.jit, static_argnames=("qp", "intra", "interpret"))
+def dct_quant_op(blocks: jnp.ndarray, *, qp: int, intra: bool,
+                 interpret: bool = False) -> jnp.ndarray:
+    """[N, 8, 8] f32 -> [N, 8, 8] int16; pads N up to the kernel tile."""
+    n = blocks.shape[0]
+    blk = min(BLK, max(8, 1 << (n - 1).bit_length()))
+    pad = (-n) % blk
+    if pad:
+        blocks = jnp.concatenate(
+            [blocks, jnp.zeros((pad, 8, 8), blocks.dtype)], axis=0)
+    out = dct_quant(blocks, qp, intra, interpret=interpret, blk=blk)
+    return out[:n]

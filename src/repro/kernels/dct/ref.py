@@ -1,0 +1,15 @@
+"""Pure-jnp oracle for the fused DCT+quantize encode kernel."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.codec.quant import quant_matrix
+from repro.codec.transform import dct_matrix
+
+
+def dct_quant_ref(blocks: jnp.ndarray, qp: int, intra: bool) -> jnp.ndarray:
+    """blocks: [N, 8, 8] f32 -> quantized coeffs [N, 8, 8] int16."""
+    d = jnp.asarray(dct_matrix())
+    coeffs = jnp.einsum("ij,njk,lk->nil", d, blocks.astype(jnp.float32), d)
+    m = jnp.asarray(quant_matrix(qp, intra))
+    return jnp.round(coeffs / m).astype(jnp.int16)

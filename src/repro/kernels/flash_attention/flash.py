@@ -1,0 +1,104 @@
+"""Pallas TPU kernel: causal GQA FlashAttention (model-side hot spot).
+
+Grid: (batch*q_heads, n_q_blocks, n_kv_blocks) with the KV dimension
+innermost; online-softmax statistics (m, l) and the output accumulator live
+in VMEM scratch and persist across the KV grid steps of one q block.  Fully
+masked (future) KV blocks are skipped with pl.when — the causal-skip that
+halves prefill compute.  BlockSpecs keep one [Bq, D] query tile, one
+[Bkv, D] K/V tile and the [Bq, D] f32 accumulator in VMEM per step.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+DEFAULT_BQ = 128
+DEFAULT_BKV = 128
+NEG_INF = -1e30
+
+
+def _kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
+            scale: float, bq: int, bkv: int, causal: bool, n_kv: int):
+    qi = pl.program_id(1)
+    ki = pl.program_id(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    # causal block skip: KV block strictly after the last q row is dead
+    live = (not causal) or (ki * bkv <= qi * bq + bq - 1)
+
+    @pl.when(live)
+    def _step():
+        q = q_ref[0].astype(jnp.float32)        # [bq, d]
+        k = k_ref[0].astype(jnp.float32)        # [bkv, d]
+        v = v_ref[0].astype(jnp.float32)
+        s = q @ k.T * scale                     # [bq, bkv] (MXU)
+        if causal:
+            qpos = qi * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bkv), 0)
+            kpos = ki * bkv + jax.lax.broadcasted_iota(jnp.int32, (bq, bkv), 1)
+            s = jnp.where(kpos <= qpos, s, NEG_INF)
+        m_prev = m_scr[...]
+        m_new = jnp.maximum(m_prev, s.max(axis=1))
+        p = jnp.exp(s - m_new[:, None])
+        alpha = jnp.exp(m_prev - m_new)
+        l_scr[...] = l_scr[...] * alpha + p.sum(axis=1)
+        acc_scr[...] = acc_scr[...] * alpha[:, None] + p @ v
+        m_scr[...] = m_new
+
+    @pl.when(ki == n_kv - 1)
+    def _finish():
+        l = jnp.maximum(l_scr[...], 1e-30)
+        o_ref[0] = (acc_scr[...] / l[:, None]).astype(o_ref.dtype)
+
+
+def flash_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
+                    causal: bool = True, bq: int = DEFAULT_BQ,
+                    bkv: int = DEFAULT_BKV, interpret: bool = False):
+    """q: [B, H, S, D]; k, v: [B, KV, S, D].  Returns [B, H, S, D].
+
+    GQA is handled by indexing the KV head as H // group in the BlockSpec
+    index maps — no KV replication in HBM.
+    """
+    b, h, s, d = q.shape
+    kv = k.shape[1]
+    g = h // kv
+    bq = min(bq, s)
+    bkv = min(bkv, s)
+    assert s % bq == 0 and s % bkv == 0, (s, bq, bkv)
+    n_kv = s // bkv
+    grid = (b * h, s // bq, n_kv)
+    scale = 1.0 / np.sqrt(d)
+
+    kernel = functools.partial(_kernel, scale=scale, bq=bq, bkv=bkv,
+                               causal=causal, n_kv=n_kv)
+    qf = q.reshape(b * h, s, d)
+    kf = k.reshape(b * kv, s, d)
+    vf = v.reshape(b * kv, s, d)
+
+    out = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, bq, d), lambda bh, qi, ki: (bh, qi, 0)),
+            pl.BlockSpec((1, bkv, d), lambda bh, qi, ki, g=g: (bh // g, ki, 0)),
+            pl.BlockSpec((1, bkv, d), lambda bh, qi, ki, g=g: (bh // g, ki, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bq, d), lambda bh, qi, ki: (bh, qi, 0)),
+        out_shape=jax.ShapeDtypeStruct((b * h, s, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq,), jnp.float32),
+            pltpu.VMEM((bq,), jnp.float32),
+            pltpu.VMEM((bq, d), jnp.float32),
+        ],
+        interpret=interpret,
+    )(qf, kf, vf)
+    return out.reshape(b, h, s, d)

@@ -1,0 +1,22 @@
+"""Jit'd wrapper for the flash-attention kernel."""
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from repro.kernels.flash_attention.flash import flash_attention
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "bq", "bkv", "interpret"))
+def flash_attention_op(q, k, v, *, causal: bool = True, bq: int = 128,
+                       bkv: int = 128, interpret: bool = False):
+    s = q.shape[2]
+    bq = min(bq, s)
+    bkv = min(bkv, s)
+    while s % bq:
+        bq //= 2
+    while s % bkv:
+        bkv //= 2
+    return flash_attention(q, k, v, causal=causal, bq=max(bq, 1),
+                           bkv=max(bkv, 1), interpret=interpret)

@@ -1,0 +1,25 @@
+"""Pure-jnp oracle for the causal GQA flash-attention kernel."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+
+def attention_ref(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
+                  causal: bool = True) -> jnp.ndarray:
+    """q: [B, H, S, D]; k, v: [B, KV, S, D] with H % KV == 0."""
+    b, h, s, d = q.shape
+    kv = k.shape[1]
+    g = h // kv
+    qg = q.reshape(b, kv, g, s, d).astype(jnp.float32)
+    scores = jnp.einsum("bkgqd,bkpd->bkgqp", qg, k.astype(jnp.float32))
+    scores = scores / np.sqrt(d)
+    if causal:
+        mask = jnp.tril(jnp.ones((s, s), bool))
+        scores = jnp.where(mask, scores, -1e30)
+    w = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bkgqp,bkpd->bkgqd", w, v.astype(jnp.float32))
+    return out.reshape(b, h, s, d).astype(q.dtype)
+
+
+import jax  # noqa: E402  (kept at bottom to keep the oracle self-contained)

@@ -1,0 +1,45 @@
+"""Pallas TPU kernel: fused dequantize + 8x8 IDCT — THE decode hot loop.
+
+Every pixel a TASM query touches passes through this kernel; 'decode cost
+∝ pixels decoded' is literally this kernel's runtime.  Same VMEM tiling as
+the forward DCT: [BLK, 8, 8] int16 in, f32 out, two MXU matmuls + VPU scale.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.codec.quant import quant_matrix
+from repro.codec.transform import dct_matrix
+
+BLK = 256
+
+
+def _kernel(q_ref, d_ref, m_ref, out_ref):
+    d = d_ref[...]
+    m = m_ref[...]
+    c = q_ref[...].astype(jnp.float32) * m       # dequant (VPU)
+    x = jnp.einsum("ji,njk->nik", d, c)          # D^T @ C
+    x = jnp.einsum("nik,kl->nil", x, d)          # ... @ D
+    out_ref[...] = x
+
+
+def idct_dequant(q: jnp.ndarray, qp: int, intra: bool, *,
+                 interpret: bool = False, blk: int = BLK) -> jnp.ndarray:
+    n = q.shape[0]
+    assert n % blk == 0, (n, blk)
+    return pl.pallas_call(
+        _kernel,
+        grid=(n // blk,),
+        in_specs=[
+            pl.BlockSpec((blk, 8, 8), lambda i: (i, 0, 0)),
+            pl.BlockSpec((8, 8), lambda i: (0, 0)),
+            pl.BlockSpec((8, 8), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((blk, 8, 8), lambda i: (i, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((n, 8, 8), jnp.float32),
+        interpret=interpret,
+    )(q, jnp.asarray(dct_matrix()), jnp.asarray(quant_matrix(qp, intra)))

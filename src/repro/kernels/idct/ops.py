@@ -1,0 +1,21 @@
+"""Jit'd public wrapper for the dequant+IDCT kernel with shape padding."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.idct.idct import BLK, idct_dequant
+
+
+@functools.partial(jax.jit, static_argnames=("qp", "intra", "interpret"))
+def idct_dequant_op(q: jnp.ndarray, *, qp: int, intra: bool,
+                    interpret: bool = False) -> jnp.ndarray:
+    n = q.shape[0]
+    blk = min(BLK, max(8, 1 << (n - 1).bit_length()))
+    pad = (-n) % blk
+    if pad:
+        q = jnp.concatenate([q, jnp.zeros((pad, 8, 8), q.dtype)], axis=0)
+    out = idct_dequant(q, qp, intra, interpret=interpret, blk=blk)
+    return out[:n]

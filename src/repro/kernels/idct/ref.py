@@ -1,0 +1,15 @@
+"""Pure-jnp oracle for the fused dequant+IDCT decode kernel."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.codec.quant import quant_matrix
+from repro.codec.transform import dct_matrix
+
+
+def idct_dequant_ref(q: jnp.ndarray, qp: int, intra: bool) -> jnp.ndarray:
+    """q: [N, 8, 8] int16 -> pixels/residual [N, 8, 8] f32."""
+    m = jnp.asarray(quant_matrix(qp, intra))
+    coeffs = q.astype(jnp.float32) * m
+    d = jnp.asarray(dct_matrix())
+    return jnp.einsum("ji,njk,kl->nil", d, coeffs, d)

@@ -1,0 +1,42 @@
+"""Jit'd wrapper for the SAD motion-search kernel + frame-level helper."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels.sad.sad import BLK, sad_search
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def sad_search_op(cur_blocks: jnp.ndarray, ref_windows: jnp.ndarray, *,
+                  interpret: bool = False):
+    n = cur_blocks.shape[0]
+    blk = min(BLK, max(8, 1 << (n - 1).bit_length()))
+    pad = (-n) % blk
+    if pad:
+        cur_blocks = jnp.concatenate(
+            [cur_blocks, jnp.zeros((pad,) + cur_blocks.shape[1:],
+                                   cur_blocks.dtype)], axis=0)
+        ref_windows = jnp.concatenate(
+            [ref_windows, jnp.zeros((pad,) + ref_windows.shape[1:],
+                                    ref_windows.dtype)], axis=0)
+    dy, dx, sad = sad_search(cur_blocks, ref_windows, interpret=interpret,
+                             blk=blk)
+    return dy[:n], dx[:n], sad[:n]
+
+
+def frame_motion_blocks(cur: np.ndarray, ref: np.ndarray, *, b: int = 16,
+                        r: int = 8):
+    """Host helper: cut a frame into blocks + padded search windows."""
+    H, W = cur.shape
+    assert H % b == 0 and W % b == 0
+    ref_pad = np.pad(ref, r, mode="edge")
+    blocks, windows = [], []
+    for y in range(0, H, b):
+        for x in range(0, W, b):
+            blocks.append(cur[y:y + b, x:x + b])
+            windows.append(ref_pad[y:y + b + 2 * r, x:x + b + 2 * r])
+    return np.stack(blocks), np.stack(windows)

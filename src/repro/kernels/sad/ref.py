@@ -1,0 +1,24 @@
+"""Pure-jnp oracle for block motion search (sum of absolute differences)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def sad_search_ref(cur_blocks: jnp.ndarray, ref_windows: jnp.ndarray):
+    """cur_blocks: [N, B, B]; ref_windows: [N, B+2R, B+2R].
+
+    Exhaustive +-R search.  Returns (best_dy [N], best_dx [N], best_sad [N])
+    with displacement in [0, 2R] (subtract R for signed motion).
+    """
+    n, b, _ = cur_blocks.shape
+    win = ref_windows.shape[-1]
+    r2 = win - b + 1  # 2R+1 candidate positions per axis
+    sads = []
+    for dy in range(r2):
+        for dx in range(r2):
+            cand = ref_windows[:, dy:dy + b, dx:dx + b]
+            sads.append(jnp.sum(jnp.abs(cur_blocks.astype(jnp.float32)
+                                        - cand.astype(jnp.float32)), axis=(1, 2)))
+    sads = jnp.stack(sads, axis=1)  # [N, r2*r2]
+    best = jnp.argmin(sads, axis=1)
+    return best // r2, best % r2, jnp.min(sads, axis=1)

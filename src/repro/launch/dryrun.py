@@ -1,0 +1,299 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run driver (deliverable e).
+
+For every (architecture x input-shape x mesh) cell this lowers + compiles the
+real train/prefill/decode step against ShapeDtypeStruct stand-ins on the
+production mesh (16x16 single-pod / 2x16x16 multi-pod), records
+``memory_analysis()`` / ``cost_analysis()`` / the parsed collective schedule,
+and appends a JSON row to ``results/dryrun/<mesh>.jsonl``.
+
+The two XLA_FLAGS lines above MUST stay the first statements in this module:
+jax locks the device count at first backend initialisation.
+
+Usage:
+    PYTHONPATH=src python -m repro.launch.dryrun --mesh single --arch all
+    PYTHONPATH=src python -m repro.launch.dryrun --mesh multi  --arch qwen2-72b \
+        --shape train_4k
+"""
+import argparse
+import dataclasses
+import json
+import pathlib
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+import numpy as np
+
+from repro.configs.base import (ARCH_IDS, SHAPES, ArchConfig, ShapeSpec,
+                                get_config, get_shape, make_serve_config)
+from repro.distributed import sharding as shd
+from repro.distributed.ctx import (SERVE_RULES, SERVE_RULES_1POD, TRAIN_RULES,
+                                   TRAIN_RULES_1POD, use_sharding)
+from repro.launch import analytic_cost as ac
+from repro.launch import roofline as rl
+from repro.launch.mesh import HBM_PER_CHIP, make_production_mesh
+from repro.models import zoo
+from repro.train.optimizer import init_opt_state
+from repro.train.train_step import AdamWConfig, make_train_step
+
+RESULTS_DIR = pathlib.Path(__file__).resolve().parents[3] / "results" / "dryrun"
+
+
+# --------------------------------------------------------------------------
+# Memory-driven microbatch choice (napkin model, see DESIGN.md)
+# --------------------------------------------------------------------------
+def choose_microbatches(cfg: ArchConfig, shape: ShapeSpec, mesh) -> int:
+    if shape.kind != "train":
+        return 1
+    dp = mesh.shape.get("data", 1) * mesh.shape.get("pod", 1)
+    tp = mesh.shape.get("model", 1)
+    b_loc = max(shape.global_batch // dp, 1)
+    seq_fac = tp if shape.seq_len % tp == 0 else 1
+    # residual carry per layer, sequence-sharded; 2 bytes bf16
+    carry = b_loc * shape.seq_len * cfg.d_model * 2 / seq_fac
+    total_layers = cfg.n_layers + cfg.enc_layers
+    budget = 4e9  # leave room for params/opt/workspace out of 16 GB
+    need = carry * total_layers / budget
+    micro = 1
+    while micro < need and micro < b_loc:
+        micro *= 2
+    return micro
+
+
+# --------------------------------------------------------------------------
+# Cell runners
+# --------------------------------------------------------------------------
+def _lower_train(cfg: ArchConfig, shape: ShapeSpec, mesh, rules):
+    if "f32w" not in os.environ.get("REPRO_VARIANT", ""):
+        # bf16 params + fp32 master in the optimizer (SS Perf): FSDP gathers
+        # and gradient syncs move 2-byte elements
+        cfg = dataclasses.replace(cfg, param_dtype="bfloat16")
+    mode = shd.choose_policy(cfg, mesh, "train")
+    if mode == "dp_train":
+        from repro.distributed.ctx import dp_rules
+
+        rules = dp_rules(tuple(mesh.axis_names))
+    micro = choose_microbatches(cfg, shape, mesh)
+    step = make_train_step(cfg, AdamWConfig(), microbatches=micro)
+    params_s = jax.eval_shape(lambda: zoo.init_model(cfg, jax.random.key(0)))
+    opt_s = jax.eval_shape(init_opt_state, params_s)
+    batch_s = zoo.input_specs(cfg, shape)
+
+    p_shard = shd.param_shardings(params_s, cfg, mesh, mode=mode)
+    o_shard = {"m": p_shard, "v": p_shard,
+               "step": NamedSharding(mesh, P())}
+    if "master" in opt_s:
+        o_shard["master"] = p_shard
+    b_shard = shd.batch_shardings(batch_s, mesh, rules)
+
+    with use_sharding(rules, mesh):
+        jitted = jax.jit(step, in_shardings=(p_shard, o_shard, b_shard),
+                         donate_argnums=(0, 1))
+        lowered = jitted.lower(params_s, opt_s, batch_s)
+        flops = ac.count_flops(step, params_s, opt_s, batch_s)
+    return lowered, {"microbatches": micro, "flops_global": flops,
+                     "cache_bytes": 0.0, "policy": mode}
+
+
+def _lower_prefill(cfg: ArchConfig, shape: ShapeSpec, mesh, rules):
+    from repro.serve.serve_step import make_prefill_step
+
+    scfg = make_serve_config(cfg, mesh.shape.get("model", 1))
+    scfg = dataclasses.replace(
+        scfg, q_chunk=max(scfg.q_chunk, shape.seq_len // 16),
+        kv_chunk=max(scfg.kv_chunk, shape.seq_len // 32))
+    step = make_prefill_step(scfg, shape.seq_len)
+    params_s = jax.eval_shape(lambda: zoo.init_model(scfg, jax.random.key(0)))
+    batch_s = zoo.input_specs(scfg, shape)
+    p_shard = shd.param_shardings(params_s, scfg, mesh, mode="serve")
+    b_shard = shd.batch_shardings(batch_s, mesh)
+    caches_s = zoo.init_cache_specs(scfg, shape.global_batch, shape.seq_len)
+    from repro.utils.tree import tree_size_bytes
+    with use_sharding(rules, mesh):
+        jitted = jax.jit(step, in_shardings=(p_shard, b_shard))
+        lowered = jitted.lower(params_s, batch_s)
+        flops = ac.count_flops(step, params_s, batch_s)
+    return lowered, {"kv_repeat": scfg.kv_repeat, "flops_global": flops,
+                     "cache_bytes": float(tree_size_bytes(caches_s))}
+
+
+def _lower_decode(cfg: ArchConfig, shape: ShapeSpec, mesh, rules):
+    from repro.serve.serve_step import make_decode_step
+
+    scfg = make_serve_config(cfg, mesh.shape.get("model", 1))
+    variant = os.environ.get("REPRO_VARIANT", "")
+    if "plainkv" not in variant:
+        scfg = dataclasses.replace(
+            scfg, **shd.choose_serve_cache_policy(scfg, mesh))
+    step = make_decode_step(scfg)
+    params_s = jax.eval_shape(lambda: zoo.init_model(scfg, jax.random.key(0)))
+    batch_s = zoo.input_specs(scfg, shape)
+    caches_s = zoo.init_cache_specs(scfg, shape.global_batch, shape.seq_len)
+    idx_s = jax.ShapeDtypeStruct((), jnp.int32)
+    p_shard = shd.param_shardings(params_s, scfg, mesh, mode="serve")
+    b_shard = shd.batch_shardings(batch_s, mesh)
+    c_shard = shd.cache_shardings(caches_s, scfg, mesh)
+    i_shard = NamedSharding(mesh, P())
+    from repro.utils.tree import tree_size_bytes
+    with use_sharding(rules, mesh):
+        jitted = jax.jit(step, in_shardings=(p_shard, c_shard, b_shard, i_shard),
+                         donate_argnums=(1,))
+        lowered = jitted.lower(params_s, caches_s, batch_s, idx_s)
+        flops = ac.count_flops(step, params_s, caches_s, batch_s, idx_s)
+    return lowered, {"kv_repeat": scfg.kv_repeat, "flops_global": flops,
+                     "cache_bytes": float(tree_size_bytes(caches_s))}
+
+
+def run_cell(arch: str, shape_name: str, mesh, mesh_name: str, rules) -> dict:
+    cfg = get_config(arch)
+    shape = get_shape(shape_name)
+    row: dict = {"arch": arch, "shape": shape_name, "mesh": mesh_name,
+                 "chips": int(np.prod(list(mesh.shape.values())))}
+    if not cfg.supports_shape(shape):
+        row["status"] = "skipped"
+        row["reason"] = "full-attention arch; long_500k needs sub-quadratic context"
+        return row
+    t0 = time.time()
+    try:
+        if shape.kind == "train":
+            lowered, extra = _lower_train(cfg, shape, mesh, rules)
+        elif shape.kind == "prefill":
+            lowered, extra = _lower_prefill(cfg, shape, mesh, rules)
+        else:
+            lowered, extra = _lower_decode(cfg, shape, mesh, rules)
+        row.update(extra)
+        row["lower_s"] = round(time.time() - t0, 1)
+        t1 = time.time()
+        compiled = lowered.compile()
+        row["compile_s"] = round(time.time() - t1, 1)
+
+        mem = compiled.memory_analysis()
+        row["memory"] = _memory_dict(mem, row["chips"])
+        cost = compiled.cost_analysis()
+        row["cost"] = {k: float(v) for k, v in cost.items()
+                       if isinstance(v, (int, float)) and k in (
+                           "flops", "bytes accessed", "transcendentals",
+                           "utilization operand 0 {}")}
+        hlo = compiled.as_text()
+        coll = rl.collective_bytes_from_hlo(hlo)
+        row["collectives"] = coll
+
+        mode = shape.kind
+        bytes_model = ac.hbm_bytes_per_chip(
+            cfg, shape, mesh, mode=mode,
+            microbatches=row.get("microbatches", 1),
+            cache_bytes_total=row.get("cache_bytes", 0.0))
+        row["hbm_model"] = bytes_model
+        terms = rl.derive_terms(
+            arch=arch, shape=shape_name, mesh_name=mesh_name,
+            chips=row["chips"], flops_global=row["flops_global"],
+            hbm_bytes_chip=bytes_model["total"], coll=coll,
+            model_flops=rl.model_flops_estimate(cfg, shape),
+            bytes_per_device=row["memory"].get("total_device_bytes", 0.0))
+        row["roofline"] = terms.as_dict()
+        fits = row["memory"].get("total_device_bytes", 0) <= HBM_PER_CHIP
+        row["fits_hbm"] = bool(fits)
+        row["status"] = "ok"
+    except Exception as e:  # noqa: BLE001 - record the failure in the table
+        row["status"] = "error"
+        row["error"] = f"{type(e).__name__}: {e}"
+        row["traceback"] = traceback.format_exc()[-4000:]
+    return row
+
+
+def _memory_dict(mem, chips: int) -> dict:
+    """Per-device footprint.  On the host-platform backend ``argument_size``
+    is per-device while ``temp_size`` aggregates across all participating
+    devices (verified against analytic shard sizes), so temp is divided by
+    the chip count."""
+    out = {}
+    for attr in ("generated_code_size_in_bytes", "argument_size_in_bytes",
+                 "output_size_in_bytes", "temp_size_in_bytes",
+                 "alias_size_in_bytes", "peak_memory_in_bytes"):
+        if hasattr(mem, attr):
+            try:
+                out[attr] = float(getattr(mem, attr))
+            except Exception:  # noqa: BLE001
+                pass
+    args = out.get("argument_size_in_bytes", 0.0)
+    temp = out.get("temp_size_in_bytes", 0.0)
+    outb = out.get("output_size_in_bytes", 0.0)
+    alias = out.get("alias_size_in_bytes", 0.0)
+    out["total_device_bytes"] = args + temp / max(chips, 1) + max(outb - alias, 0.0)
+    return out
+
+
+# --------------------------------------------------------------------------
+# main
+# --------------------------------------------------------------------------
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--mesh", choices=["single", "multi"], default="single")
+    ap.add_argument("--arch", default="all")
+    ap.add_argument("--shape", default="all")
+    ap.add_argument("--force", action="store_true", help="recompute cached cells")
+    args = ap.parse_args()
+
+    multi = args.mesh == "multi"
+    mesh = make_production_mesh(multi_pod=multi)
+    mesh_name = "2x16x16" if multi else "16x16"
+    archs = ARCH_IDS if args.arch == "all" else [args.arch]
+    shapes = list(SHAPES) if args.shape == "all" else [args.shape]
+
+    RESULTS_DIR.mkdir(parents=True, exist_ok=True)
+    out_path = RESULTS_DIR / f"{mesh_name.replace('x', '_')}.jsonl"
+    done = set()
+    if out_path.exists() and not args.force:
+        for line in out_path.read_text().splitlines():
+            try:
+                r = json.loads(line)
+                if r.get("status") in ("ok", "skipped"):
+                    done.add((r["arch"], r["shape"]))
+            except json.JSONDecodeError:
+                pass
+
+    n_ok = n_err = 0
+    for arch in archs:
+        for shape_name in shapes:
+            if (arch, shape_name) in done and not args.force:
+                print(f"[cached] {arch} x {shape_name}", flush=True)
+                continue
+            print(f"[run] {arch} x {shape_name} on {mesh_name}", flush=True)
+            rules_train = TRAIN_RULES if multi else TRAIN_RULES_1POD
+            rules_serve = SERVE_RULES if multi else SERVE_RULES_1POD
+            shape = get_shape(shape_name)
+            rules = rules_train if shape.kind == "train" else rules_serve
+            row = run_cell(arch, shape_name, mesh, mesh_name, rules)
+            with out_path.open("a") as f:
+                row_out = {k: v for k, v in row.items() if k != "traceback"}
+                f.write(json.dumps(row_out) + "\n")
+            if row["status"] == "error":
+                n_err += 1
+                print(f"  ERROR: {row['error']}", flush=True)
+                tb = row.get("traceback", "")
+                if tb:
+                    (RESULTS_DIR / f"err_{arch}_{shape_name}_{mesh_name}.txt"
+                     ).write_text(tb)
+            else:
+                n_ok += 1
+                if row["status"] == "ok":
+                    r = row["roofline"]
+                    print(f"  ok: dominant={r['dominant']} "
+                          f"compute={r['compute_s']:.3e}s "
+                          f"memory={r['memory_s']:.3e}s "
+                          f"coll={r['collective_s']:.3e}s "
+                          f"dev_bytes={row['memory'].get('total_device_bytes', 0)/1e9:.2f}GB "
+                          f"(lower {row.get('lower_s')}s compile {row.get('compile_s')}s)",
+                          flush=True)
+                else:
+                    print(f"  skipped: {row.get('reason')}", flush=True)
+    print(f"DONE ok={n_ok} err={n_err}", flush=True)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,386 @@
+"""Attention: GQA/MHA (chunked flash-style, naive, decode-with-cache) and MLA.
+
+The ``chunked`` implementation is the default compile path: a lax.scan over
+KV chunks with an online-softmax carry — FlashAttention's memory behaviour
+expressed in pure jnp so it lowers on any backend (the Pallas TPU kernel in
+``repro/kernels/flash_attention`` is the hardware fast path and is validated
+against the same reference).
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ArchConfig, MLAConfig
+from repro.distributed.ctx import constrain
+from repro.models.layers import apply_rope, dense_apply, init_dense, init_norm, norm_apply
+
+NEG_INF = -1e30
+
+
+# ==========================================================================
+# Parameter init
+# ==========================================================================
+def init_attention(key, cfg: ArchConfig) -> dict:
+    """Standard q/k/v/o projection params for MHA/GQA."""
+    kq, kk, kv, ko, kn = jax.random.split(key, 5)
+    d, h, kvh, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    dt = cfg.param_dtype
+    p = {
+        "wq": init_dense(kq, d, h * hd, bias=cfg.qkv_bias, dtype=dt),
+        "wk": init_dense(kk, d, kvh * hd, bias=cfg.qkv_bias, dtype=dt),
+        "wv": init_dense(kv, d, kvh * hd, bias=cfg.qkv_bias, dtype=dt),
+        "wo": init_dense(ko, h * hd, d, dtype=dt),
+    }
+    if cfg.qk_norm:
+        p["q_norm"] = init_norm("rmsnorm", hd, dtype=dt)
+        p["k_norm"] = init_norm("rmsnorm", hd, dtype=dt)
+    return p
+
+
+def init_mla_attention(key, cfg: ArchConfig) -> dict:
+    """DeepSeek-V2 MLA params. KV is compressed to a rank-`kv_lora` latent."""
+    m: MLAConfig = cfg.mla
+    d, h = cfg.d_model, cfg.n_heads
+    qk_dim = m.qk_nope_head_dim + m.qk_rope_head_dim
+    keys = jax.random.split(key, 8)
+    dt = cfg.param_dtype
+    p = {}
+    if m.q_lora_rank:
+        p["wq_a"] = init_dense(keys[0], d, m.q_lora_rank, dtype=dt)
+        p["q_a_norm"] = init_norm("rmsnorm", m.q_lora_rank, dtype=dt)
+        p["wq_b"] = init_dense(keys[1], m.q_lora_rank, h * qk_dim, dtype=dt)
+    else:
+        p["wq"] = init_dense(keys[0], d, h * qk_dim, dtype=dt)
+    # joint down-projection: latent c_kv [r] + shared rope key [qk_rope]
+    p["wkv_a"] = init_dense(keys[2], d, m.kv_lora_rank + m.qk_rope_head_dim, dtype=dt)
+    p["kv_a_norm"] = init_norm("rmsnorm", m.kv_lora_rank, dtype=dt)
+    p["wkv_b"] = init_dense(
+        keys[3], m.kv_lora_rank, h * (m.qk_nope_head_dim + m.v_head_dim), dtype=dt
+    )
+    p["wo"] = init_dense(keys[4], h * m.v_head_dim, d, dtype=dt)
+    return p
+
+
+# ==========================================================================
+# Core softmax-attention over explicit q/k/v (heads grouped for GQA)
+# ==========================================================================
+def _naive_attention(q, k, v, *, causal: bool, q_pos, kv_pos, kv_len=None):
+    """q: [B,Sq,KV,G,D]; k,v: [B,Skv,KV,D]. Returns [B,Sq,KV,G,D]."""
+    scale = 1.0 / np.sqrt(q.shape[-1])
+    s = jnp.einsum("bqkgd,bpkd->bkgqp", q.astype(jnp.float32), k.astype(jnp.float32))
+    s = s * scale
+    mask = jnp.ones(s.shape[-2:], dtype=bool)
+    if causal:
+        mask = kv_pos[None, :] <= q_pos[:, None]
+    if kv_len is not None:
+        mask = mask & (kv_pos[None, :] < kv_len)
+    s = jnp.where(mask, s, NEG_INF)
+    w = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bkgqp,bpkd->bqkgd", w, v.astype(jnp.float32))
+    return out.astype(q.dtype)
+
+
+def _chunked_attention(q, k, v, *, causal: bool, q_pos, kv_pos, q_chunk: int,
+                       kv_chunk: int, kv_len=None, block_skip: bool = True):
+    """Flash-style online-softmax attention in pure jnp.
+
+    q: [B,Sq,KV,G,D]; k,v: [B,Skv,KV,D].  Scans over q chunks (outer, unrolled
+    python loop so causal upper blocks can be *statically* skipped) and kv
+    chunks (inner lax.scan with (m, l, acc) carry).
+    """
+    B, Sq, KV, G, D = q.shape
+    Skv = k.shape[1]
+    Dv = v.shape[-1]  # v head dim may differ from q/k (MLA)
+    q_chunk = min(q_chunk, Sq)
+    kv_chunk = min(kv_chunk, Skv)
+    nq = -(-Sq // q_chunk)
+    nkv = -(-Skv // kv_chunk)
+    scale = 1.0 / np.sqrt(D)
+    kc = k.reshape(B, nkv, kv_chunk, KV, D)
+    vc = v.reshape(B, nkv, kv_chunk, KV, Dv)
+    kv_posc = kv_pos.reshape(nkv, kv_chunk)
+
+    def one_q_chunk(qi: int, n_kv_blocks: int):
+        qs = q[:, qi * q_chunk:(qi + 1) * q_chunk].astype(jnp.float32)
+        qp = q_pos[qi * q_chunk:(qi + 1) * q_chunk]
+        m0 = jnp.full((B, KV, G, qs.shape[1]), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((B, KV, G, qs.shape[1]), jnp.float32)
+        a0 = jnp.zeros((B, qs.shape[1], KV, G, Dv), jnp.float32)
+
+        def body(carry, xs):
+            m, l, acc = carry
+            kb, vb, kp = xs
+            s = jnp.einsum("bqkgd,bpkd->bkgqp", qs, kb.astype(jnp.float32)) * scale
+            mask = jnp.ones((qs.shape[1], kv_chunk), bool)
+            if causal:
+                mask = kp[None, :] <= qp[:, None]
+            if kv_len is not None:
+                mask = mask & (kp[None, :] < kv_len)
+            s = jnp.where(mask, s, NEG_INF)
+            m_new = jnp.maximum(m, s.max(axis=-1))
+            p = jnp.exp(s - m_new[..., None])
+            alpha = jnp.exp(m - m_new)
+            l = l * alpha + p.sum(axis=-1)
+            acc = acc * alpha.transpose(0, 3, 1, 2)[..., None]
+            acc = acc + jnp.einsum("bkgqp,bpkd->bqkgd", p, vb.astype(jnp.float32))
+            return (m_new, l, acc), None
+
+        xs = (
+            kc[:, :n_kv_blocks].swapaxes(0, 1),
+            vc[:, :n_kv_blocks].swapaxes(0, 1),
+            kv_posc[:n_kv_blocks],
+        )
+        (m, l, acc), _ = jax.lax.scan(body, (m0, l0, a0), xs)
+        l = jnp.maximum(l, 1e-30)
+        out = acc / l.transpose(0, 3, 1, 2)[..., None]
+        return out.astype(q.dtype)
+
+    outs = []
+    for qi in range(nq):
+        if causal and block_skip and Sq == Skv:
+            # causal block skipping: q chunk qi only attends to kv blocks
+            # whose first position <= last q position of this chunk.
+            last_q = (qi + 1) * q_chunk - 1
+            n_blocks = min(nkv, last_q // kv_chunk + 1)
+        else:
+            n_blocks = nkv
+        outs.append(one_q_chunk(qi, n_blocks))
+    return jnp.concatenate(outs, axis=1)
+
+
+def grouped_attention(q, k, v, *, causal, q_pos, kv_pos, impl="chunked",
+                      q_chunk=512, kv_chunk=512, kv_len=None):
+    """Dispatch over attention implementations. Shapes as in _naive_attention."""
+    Sq, Skv = q.shape[1], k.shape[1]
+    divisible = Sq % min(q_chunk, Sq) == 0 and Skv % min(kv_chunk, Skv) == 0
+    if impl == "naive" or q.shape[1] == 1 or not divisible:
+        return _naive_attention(q, k, v, causal=causal, q_pos=q_pos, kv_pos=kv_pos,
+                                kv_len=kv_len)
+    if impl == "chunked":
+        return _chunked_attention(q, k, v, causal=causal, q_pos=q_pos, kv_pos=kv_pos,
+                                  q_chunk=q_chunk, kv_chunk=kv_chunk, kv_len=kv_len)
+    if impl == "chunked_noskip":
+        return _chunked_attention(q, k, v, causal=causal, q_pos=q_pos, kv_pos=kv_pos,
+                                  q_chunk=q_chunk, kv_chunk=kv_chunk, kv_len=kv_len,
+                                  block_skip=False)
+    raise ValueError(f"unknown attention impl {impl!r}")
+
+
+def _kv_quant(x: jnp.ndarray):
+    """Per-(batch, position, head) int8 quantization of K/V rows."""
+    scale = jnp.max(jnp.abs(x.astype(jnp.float32)), axis=-1, keepdims=True)
+    scale = jnp.maximum(scale, 1e-6) / 127.0
+    q = jnp.clip(jnp.round(x.astype(jnp.float32) / scale), -127, 127)
+    return q.astype(jnp.int8), scale[..., 0].astype(jnp.bfloat16)
+
+
+def _kv_dequant(q: jnp.ndarray, scale: jnp.ndarray, dtype) -> jnp.ndarray:
+    return (q.astype(jnp.float32) * scale.astype(jnp.float32)[..., None]).astype(dtype)
+
+
+# ==========================================================================
+# GQA block (train/prefill full-sequence, and single-token decode)
+# ==========================================================================
+def attention_apply(p: dict, x: jnp.ndarray, cfg: ArchConfig, *, causal: bool = True,
+                    positions: Optional[jnp.ndarray] = None,
+                    kv_cache: Optional[dict] = None,
+                    cache_index: Optional[jnp.ndarray] = None,
+                    cache_len: Optional[jnp.ndarray] = None):
+    """x: [B, S, d]. If kv_cache given (decode): append k/v at cache_index and
+    attend over cache[:cache_len]. Returns (out [B,S,d], new_cache|None)."""
+    B, S, _ = x.shape
+    h, kvh, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    G = h // kvh
+    cd = cfg.compute_dtype
+
+    q = dense_apply(p["wq"], x, cd).reshape(B, S, kvh, G, hd)
+    k = dense_apply(p["wk"], x, cd).reshape(B, S, kvh, hd)
+    v = dense_apply(p["wv"], x, cd).reshape(B, S, kvh, hd)
+    if cfg.qk_norm:
+        q = norm_apply("rmsnorm", p["q_norm"], q)
+        k = norm_apply("rmsnorm", p["k_norm"], k)
+
+    if positions is None:
+        positions = jnp.arange(S)
+        if cache_index is not None:
+            positions = positions + cache_index
+    q = apply_rope(q.reshape(B, S, kvh * G, hd), positions, cfg.rope_theta)
+    q = q.reshape(B, S, kvh, G, hd)
+    k = apply_rope(k, positions, cfg.rope_theta)
+
+    rep = cfg.kv_repeat
+    if rep > 1:  # vLLM-style KV-head replication so TP divides the KV axis
+        assert G % rep == 0, (G, rep)
+        k = jnp.repeat(k, rep, axis=2)
+        v = jnp.repeat(v, rep, axis=2)
+        q = q.reshape(B, S, kvh, rep, G // rep, hd).reshape(
+            B, S, kvh * rep, G // rep, hd)
+        kvh, G = kvh * rep, G // rep
+
+    q = constrain(q, "batch", None, "kv_heads", None, None)
+    k = constrain(k, "batch", None, "kv_heads", None)
+    v = constrain(v, "batch", None, "kv_heads", None)
+
+    new_cache = None
+    if kv_cache is not None:
+        if "k_scale" in kv_cache:  # int8-quantized KV (SS Perf iteration)
+            kq, ks = _kv_quant(k)
+            vq, vs = _kv_quant(v)
+            upd = lambda c, x: jax.lax.dynamic_update_slice_in_dim(
+                c, x.astype(c.dtype), cache_index, axis=1)
+            new_cache = {"k": upd(kv_cache["k"], kq),
+                         "v": upd(kv_cache["v"], vq),
+                         "k_scale": upd(kv_cache["k_scale"], ks),
+                         "v_scale": upd(kv_cache["v_scale"], vs)}
+            ck = _kv_dequant(new_cache["k"], new_cache["k_scale"], k.dtype)
+            cv = _kv_dequant(new_cache["v"], new_cache["v_scale"], v.dtype)
+        else:
+            ck = jax.lax.dynamic_update_slice_in_dim(
+                kv_cache["k"], k.astype(kv_cache["k"].dtype), cache_index, axis=1)
+            cv = jax.lax.dynamic_update_slice_in_dim(
+                kv_cache["v"], v.astype(kv_cache["v"].dtype), cache_index, axis=1)
+            new_cache = {"k": ck, "v": cv}
+        kv_pos = jnp.arange(ck.shape[1])
+        # decode (S==1) dispatches to the naive path inside grouped_attention;
+        # prefill-with-cache (S==Smax) runs the chunked causal path.
+        out = grouped_attention(q, ck, cv, causal=(S > 1), q_pos=positions,
+                                kv_pos=kv_pos, impl=cfg.attention_impl,
+                                q_chunk=cfg.q_chunk, kv_chunk=cfg.kv_chunk,
+                                kv_len=cache_len)
+    else:
+        kv_pos = positions
+        out = grouped_attention(q, k, v, causal=causal, q_pos=positions, kv_pos=kv_pos,
+                                impl=cfg.attention_impl, q_chunk=cfg.q_chunk,
+                                kv_chunk=cfg.kv_chunk)
+
+    out = out.reshape(B, S, h * hd)
+    out = dense_apply(p["wo"], out, cd)
+    out = constrain(out, "batch", None, None)
+    return out, new_cache
+
+
+
+# ==========================================================================
+# MLA block (DeepSeek-V2).
+#
+# Prefill/train: the latent is up-projected ONCE to per-head K/V and attention
+# runs through the same chunked online-softmax core as GQA (O(S) memory).
+# Decode: the *absorbed* formulation — W_uk is folded into the query and W_uv
+# into the output so scores/values are computed directly against the cached
+# rank-r latent.  Per-token cost is O(S·r·h) instead of O(S·r·h·d_head) for a
+# naive cache up-projection; this is the whole point of MLA serving.
+# ==========================================================================
+def _mla_qkv_latent(p: dict, x: jnp.ndarray, cfg: ArchConfig, positions):
+    """Shared first stage: queries + compressed latent (+rope key)."""
+    m: MLAConfig = cfg.mla
+    B, S, _ = x.shape
+    h = cfg.n_heads
+    dn, dr = m.qk_nope_head_dim, m.qk_rope_head_dim
+    cd = cfg.compute_dtype
+    if m.q_lora_rank:
+        cq = dense_apply(p["wq_a"], x, cd)
+        cq = norm_apply("rmsnorm", p["q_a_norm"], cq)
+        q = dense_apply(p["wq_b"], cq, cd)
+    else:
+        q = dense_apply(p["wq"], x, cd)
+    q = q.reshape(B, S, h, dn + dr)
+    q_nope, q_rope = q[..., :dn], q[..., dn:]
+    q_rope = apply_rope(q_rope, positions, cfg.rope_theta)
+
+    kv_a = dense_apply(p["wkv_a"], x, cd)  # [B,S,r+dr]
+    c_kv = norm_apply("rmsnorm", p["kv_a_norm"], kv_a[..., : m.kv_lora_rank])
+    k_rope = apply_rope(kv_a[..., m.kv_lora_rank:][:, :, None, :], positions,
+                        cfg.rope_theta)[:, :, 0, :]  # [B,S,dr], shared by heads
+    return q_nope, q_rope, c_kv, k_rope
+
+
+def mla_apply(p: dict, x: jnp.ndarray, cfg: ArchConfig, *, causal: bool = True,
+              positions: Optional[jnp.ndarray] = None,
+              kv_cache: Optional[dict] = None,
+              cache_index: Optional[jnp.ndarray] = None,
+              cache_len: Optional[jnp.ndarray] = None):
+    m: MLAConfig = cfg.mla
+    B, S, _ = x.shape
+    h = cfg.n_heads
+    dn, dr, dv = m.qk_nope_head_dim, m.qk_rope_head_dim, m.v_head_dim
+    cd = cfg.compute_dtype
+    if positions is None:
+        positions = jnp.arange(S)
+        if cache_index is not None:
+            positions = positions + cache_index
+
+    q_nope, q_rope, c_kv, k_rope = _mla_qkv_latent(p, x, cfg, positions)
+
+    new_cache = None
+    if kv_cache is not None:
+        if "c_kv_scale" in kv_cache:  # int8 latent cache (SS Perf)
+            cq, cs = _kv_quant(c_kv)
+            upd = lambda c, x: jax.lax.dynamic_update_slice_in_dim(
+                c, x.astype(c.dtype), cache_index, axis=1)
+            new_cache = {"c_kv": upd(kv_cache["c_kv"], cq),
+                         "c_kv_scale": upd(kv_cache["c_kv_scale"], cs),
+                         "k_rope": upd(kv_cache["k_rope"], k_rope)}
+            c_kv = _kv_dequant(new_cache["c_kv"], new_cache["c_kv_scale"],
+                               cfg.compute_dtype)
+            k_rope = new_cache["k_rope"]
+        else:
+            c_kv = jax.lax.dynamic_update_slice_in_dim(
+                kv_cache["c_kv"], c_kv.astype(kv_cache["c_kv"].dtype), cache_index, axis=1)
+            k_rope = jax.lax.dynamic_update_slice_in_dim(
+                kv_cache["k_rope"], k_rope.astype(kv_cache["k_rope"].dtype), cache_index, axis=1)
+            new_cache = {"c_kv": c_kv, "k_rope": k_rope}
+        if S == 1:
+            out = _mla_absorbed_attention(p, q_nope, q_rope, c_kv, k_rope, cfg,
+                                          cache_len=cache_len)
+            out = dense_apply(p["wo"], out.reshape(B, S, h * dv), cd)
+            return constrain(out, "batch", None, None), new_cache
+        # prefill-with-cache: fall through to the full-sequence path below,
+        # attending over the (just-updated) cached latents with a causal mask.
+        causal = True
+
+    # full-sequence path: materialise per-head K/V from the latent once
+    Skv = c_kv.shape[1]
+    kvb = dense_apply(p["wkv_b"], c_kv, cd).reshape(B, Skv, h, dn + dv)
+    k_nope, vv = kvb[..., :dn], kvb[..., dn:]
+    k_nope = constrain(k_nope, "batch", None, "heads", None)
+    vv = constrain(vv, "batch", None, "heads", None)
+    k_full = jnp.concatenate(
+        [k_nope, jnp.broadcast_to(k_rope[:, :, None, :], (B, Skv, h, dr))], axis=-1)
+    q_full = jnp.concatenate([q_nope, q_rope], axis=-1)[:, :, :, None, :]  # G=1
+    q_full = q_full.transpose(0, 1, 2, 3, 4)  # [B,S,h,1,dn+dr]
+    out = grouped_attention(
+        q_full, k_full, vv, causal=causal, q_pos=positions,
+        kv_pos=jnp.arange(Skv), impl=cfg.attention_impl,
+        q_chunk=cfg.q_chunk, kv_chunk=cfg.kv_chunk, kv_len=cache_len)
+    out = out.reshape(B, S, h * dv)
+    out = dense_apply(p["wo"], out, cd)
+    return constrain(out, "batch", None, None), new_cache
+
+
+def _mla_absorbed_attention(p, q_nope, q_rope, c_kv, k_rope, cfg: ArchConfig,
+                            cache_len=None):
+    """Decode attention in latent space. q_*: [B,1,h,*]; c_kv: [B,Skv,r]."""
+    m: MLAConfig = cfg.mla
+    B, S, h, dn = q_nope.shape
+    Skv = c_kv.shape[1]
+    dv = m.v_head_dim
+    w_kv_b = p["wkv_b"]["w"].astype(jnp.float32).reshape(m.kv_lora_rank, h, dn + dv)
+    w_uk = w_kv_b[..., :dn]  # [r,h,dn]
+    w_uv = w_kv_b[..., dn:]  # [r,h,dv]
+
+    q_lat = jnp.einsum("bqhd,rhd->bqhr", q_nope.astype(jnp.float32), w_uk)
+    s = jnp.einsum("bqhr,bpr->bhqp", q_lat, c_kv.astype(jnp.float32))
+    s = s + jnp.einsum("bqhd,bpd->bhqp", q_rope.astype(jnp.float32),
+                       k_rope.astype(jnp.float32))
+    s = s / np.sqrt(dn + m.qk_rope_head_dim)
+    kv_pos = jnp.arange(Skv)
+    if cache_len is not None:
+        s = jnp.where(kv_pos[None, None, None, :] < cache_len, s, NEG_INF)
+    w = jax.nn.softmax(s, axis=-1)
+    o_lat = jnp.einsum("bhqp,bpr->bqhr", w, c_kv.astype(jnp.float32))
+    out = jnp.einsum("bqhr,rhd->bqhd", o_lat, w_uv)
+    return out.astype(cfg.compute_dtype)

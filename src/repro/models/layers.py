@@ -1,0 +1,124 @@
+"""Core NN primitives: dense layers, norms, rotary embeddings, embeddings.
+
+Everything is functional: ``init_*`` builds a param pytree (nested dicts of
+jnp arrays), ``*_apply`` consumes it.  No framework dependency (flax-free) so
+that param trees stay plain pytrees for pjit/shard_map/checkpointing.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def _dtype(name: str):
+    return jnp.dtype(name)
+
+
+# --------------------------------------------------------------------------
+# Dense
+# --------------------------------------------------------------------------
+def init_dense(key, d_in: int, d_out: int, *, bias: bool = False, dtype="float32",
+               scale: Optional[float] = None) -> dict:
+    # NOTE: float() keeps the multiply weakly-typed — a np.float64 scalar
+    # would silently promote bf16 params to f32 (doubling serve memory)
+    scale = float(scale if scale is not None else 1.0 / np.sqrt(d_in))
+    p = {"w": jax.random.normal(key, (d_in, d_out), dtype=_dtype(dtype)) * scale}
+    if bias:
+        p["b"] = jnp.zeros((d_out,), dtype=_dtype(dtype))
+    return p
+
+
+def dense_apply(p: dict, x: jnp.ndarray, compute_dtype="bfloat16") -> jnp.ndarray:
+    w = p["w"].astype(compute_dtype)
+    y = x.astype(compute_dtype) @ w
+    if "b" in p:
+        y = y + p["b"].astype(compute_dtype)
+    return y
+
+
+# --------------------------------------------------------------------------
+# Norms
+# --------------------------------------------------------------------------
+def init_norm(kind: str, dim: int, dtype="float32") -> dict:
+    if kind == "rmsnorm":
+        return {"scale": jnp.ones((dim,), dtype=_dtype(dtype))}
+    if kind == "layernorm":
+        return {"scale": jnp.ones((dim,), dtype=_dtype(dtype)),
+                "bias": jnp.zeros((dim,), dtype=_dtype(dtype))}
+    if kind == "layernorm_nonparam":  # OLMo: non-parametric LN
+        return {}
+    raise ValueError(f"unknown norm kind {kind!r}")
+
+
+def norm_apply(kind: str, p: dict, x: jnp.ndarray, eps: float = 1e-5) -> jnp.ndarray:
+    xf = x.astype(jnp.float32)
+    if kind == "rmsnorm":
+        var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+        y = xf * jax.lax.rsqrt(var + eps)
+        y = y * p["scale"].astype(jnp.float32)
+    else:
+        mean = jnp.mean(xf, axis=-1, keepdims=True)
+        var = jnp.var(xf, axis=-1, keepdims=True)
+        y = (xf - mean) * jax.lax.rsqrt(var + eps)
+        if kind == "layernorm":
+            y = y * p["scale"].astype(jnp.float32) + p["bias"].astype(jnp.float32)
+    return y.astype(x.dtype)
+
+
+# --------------------------------------------------------------------------
+# Rotary position embeddings
+# --------------------------------------------------------------------------
+def rope_freqs(head_dim: int, theta: float) -> jnp.ndarray:
+    """Inverse frequencies, shape [head_dim // 2] (float32)."""
+    half = head_dim // 2
+    return 1.0 / (theta ** (jnp.arange(0, half, dtype=jnp.float32) / half))
+
+
+def apply_rope(x: jnp.ndarray, positions: jnp.ndarray, theta: float) -> jnp.ndarray:
+    """Rotate pairs. x: [..., S, H, D] (D even); positions: broadcastable [..., S]."""
+    d = x.shape[-1]
+    inv = rope_freqs(d, theta)  # [d/2]
+    ang = positions[..., None].astype(jnp.float32) * inv  # [..., S, d/2]
+    cos = jnp.cos(ang)[..., None, :]  # [..., S, 1, d/2]
+    sin = jnp.sin(ang)[..., None, :]
+    x1 = x[..., : d // 2].astype(jnp.float32)
+    x2 = x[..., d // 2:].astype(jnp.float32)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+# --------------------------------------------------------------------------
+# Embeddings
+# --------------------------------------------------------------------------
+def init_embedding(key, vocab: int, d_model: int, dtype="float32") -> dict:
+    return {"table": jax.random.normal(key, (vocab, d_model), dtype=_dtype(dtype)) * 0.02}
+
+
+def embedding_apply(p: dict, tokens: jnp.ndarray, compute_dtype="bfloat16") -> jnp.ndarray:
+    from repro.distributed.ctx import constrain
+
+    # cast-then-gather: the FSDP gather of the table moves bf16, not f32
+    table = constrain(p["table"].astype(compute_dtype), "vocab", None)
+    return table[tokens]
+
+
+# --------------------------------------------------------------------------
+# Gated MLP (SwiGLU)
+# --------------------------------------------------------------------------
+def init_mlp(key, d_model: int, d_ff: int, dtype="float32") -> dict:
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "gate": init_dense(k1, d_model, d_ff, dtype=dtype),
+        "up": init_dense(k2, d_model, d_ff, dtype=dtype),
+        "down": init_dense(k3, d_ff, d_model, dtype=dtype),
+    }
+
+
+def mlp_apply(p: dict, x: jnp.ndarray, compute_dtype="bfloat16") -> jnp.ndarray:
+    g = dense_apply(p["gate"], x, compute_dtype)
+    u = dense_apply(p["up"], x, compute_dtype)
+    h = jax.nn.silu(g) * u
+    return dense_apply(p["down"], h, compute_dtype)

@@ -1,0 +1,300 @@
+"""State-space model blocks: Mamba-1 (selective scan) and Mamba-2 (SSD).
+
+TPU adaptation: both scans are *chunked* — a lax.scan over sequence chunks
+carrying the SSM state, with the intra-chunk work expressed as dense matmuls
+(associative scan for Mamba-1; the SSD block-decomposition for Mamba-2, which
+is explicitly matmul-structured and therefore MXU-friendly).  Single-token
+``*_step`` variants implement decode with O(1)-in-context state carries —
+this is why the ``long_500k`` shape runs only for the SSM/hybrid archs.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ArchConfig, SSMConfig
+from repro.distributed.ctx import constrain
+from repro.models.layers import dense_apply, init_dense, init_norm, norm_apply
+
+
+# ==========================================================================
+# Shared helpers
+# ==========================================================================
+def _causal_conv(x: jnp.ndarray, w: jnp.ndarray, b: jnp.ndarray,
+                 conv_state: Optional[jnp.ndarray] = None):
+    """Depthwise causal conv1d.  x: [B,S,C]; w: [K,C]; b: [C].
+
+    Returns (y [B,S,C], new_conv_state [B,K-1,C]).
+    """
+    B, S, C = x.shape
+    K = w.shape[0]
+    if conv_state is None:
+        conv_state = jnp.zeros((B, K - 1, C), x.dtype)
+    xp = jnp.concatenate([conv_state, x], axis=1)  # [B, S+K-1, C]
+    y = jnp.zeros((B, S, C), jnp.float32)
+    for k in range(K):  # K is 4: unrolled taps, fuses into a few adds
+        y = y + xp[:, k:k + S].astype(jnp.float32) * w[k].astype(jnp.float32)
+    y = y + b.astype(jnp.float32)
+    new_state = xp[:, S:]
+    return y.astype(x.dtype), new_state
+
+
+def _segsum_decay(log_a: jnp.ndarray) -> jnp.ndarray:
+    """log_a: [..., Q]. Returns L[..., i, j] = exp(sum_{t=j+1..i} log_a_t) for
+    i>=j else 0 (the SSD 1-semiseparable decay matrix)."""
+    Q = log_a.shape[-1]
+    cs = jnp.cumsum(log_a, axis=-1)
+    diff = cs[..., :, None] - cs[..., None, :]  # [.., i, j] = sum_{j+1..i}
+    mask = jnp.tril(jnp.ones((Q, Q), bool))
+    return jnp.where(mask, jnp.exp(diff), 0.0)
+
+
+# ==========================================================================
+# Mamba-1 (falcon-mamba-7b)
+# ==========================================================================
+def init_mamba1(key, cfg: ArchConfig) -> dict:
+    s: SSMConfig = cfg.ssm
+    d = cfg.d_model
+    di = s.expand * d
+    dt_rank = s.dt_rank or int(np.ceil(d / 16))
+    keys = jax.random.split(key, 8)
+    dt_p = cfg.param_dtype
+    p = {
+        "in_proj": init_dense(keys[0], d, 2 * di, dtype=dt_p),
+        "conv_w": jax.random.normal(keys[1], (s.d_conv, di), dtype=dt_p) * 0.1,
+        "conv_b": jnp.zeros((di,), dtype=dt_p),
+        "x_proj": init_dense(keys[2], di, dt_rank + 2 * s.d_state, dtype=dt_p),
+        "dt_proj": init_dense(keys[3], dt_rank, di, bias=True, dtype=dt_p),
+        # S4D-real init: A = -(1..N) per channel
+        "A_log": jnp.log(jnp.broadcast_to(
+            jnp.arange(1, s.d_state + 1, dtype=jnp.float32), (di, s.d_state)).astype(dt_p)),
+        "D": jnp.ones((di,), dtype=dt_p),
+        "out_proj": init_dense(keys[4], di, d, dtype=dt_p),
+    }
+    return p
+
+
+def _mamba1_scan(dA: jnp.ndarray, dBx: jnp.ndarray, C: jnp.ndarray,
+                 chunk: int, h0: Optional[jnp.ndarray] = None):
+    """Chunked selective scan.
+
+    dA:  [B,S,di,N] per-step decay  (exp(dt*A))
+    dBx: [B,S,di,N] per-step input  (dt*B*x)
+    C:   [B,S,N]    readout
+    Returns (y [B,S,di], h_last [B,di,N]).
+    """
+    B, S, di, N = dA.shape
+    Q = min(chunk, S)
+    if S % Q:
+        Q = S  # fall back to a single chunk for ragged smoke shapes
+    nC = S // Q
+    dA_c = dA.reshape(B, nC, Q, di, N)
+    dBx_c = dBx.reshape(B, nC, Q, di, N)
+    C_c = C.reshape(B, nC, Q, N)
+    if h0 is None:
+        h0 = jnp.zeros((B, di, N), jnp.float32)
+
+    def combine(l, r):
+        a_l, b_l = l
+        a_r, b_r = r
+        return a_l * a_r, b_l * a_r + b_r
+
+    def body(h, xs):
+        dA_q, dBx_q, C_q = xs  # [B,Q,di,N], [B,Q,N]
+        A_cum, B_cum = jax.lax.associative_scan(
+            combine, (dA_q.astype(jnp.float32), dBx_q.astype(jnp.float32)), axis=1)
+        h_t = A_cum * h[:, None] + B_cum  # [B,Q,di,N]
+        y_q = jnp.einsum("bqdn,bqn->bqd", h_t, C_q.astype(jnp.float32))
+        return h_t[:, -1], y_q
+
+    h_last, y = jax.lax.scan(body, h0, (dA_c.swapaxes(0, 1), dBx_c.swapaxes(0, 1),
+                                        C_c.swapaxes(0, 1)))
+    y = y.swapaxes(0, 1).reshape(B, S, di)
+    return y, h_last
+
+
+def mamba1_apply(p: dict, x: jnp.ndarray, cfg: ArchConfig, *,
+                 state: Optional[dict] = None):
+    """x: [B,S,d].  state (decode): {'conv': [B,K-1,di], 'ssm': [B,di,N]}.
+
+    Returns (y [B,S,d], new_state or None)."""
+    s: SSMConfig = cfg.ssm
+    cd = cfg.compute_dtype
+    B, S, d = x.shape
+    di = s.expand * d
+    dt_rank = s.dt_rank or int(np.ceil(d / 16))
+
+    xz = dense_apply(p["in_proj"], x, cd)
+    xin, z = xz[..., :di], xz[..., di:]
+    xin = constrain(xin, "batch", None, "ff")
+
+    conv_state = state["conv"] if state is not None else None
+    xc, new_conv = _causal_conv(xin, p["conv_w"], p["conv_b"], conv_state)
+    xc = jax.nn.silu(xc)
+
+    proj = dense_apply(p["x_proj"], xc, cd)
+    dt_in = proj[..., :dt_rank]
+    Bm = proj[..., dt_rank:dt_rank + s.d_state].astype(jnp.float32)
+    Cm = proj[..., dt_rank + s.d_state:].astype(jnp.float32)
+    dt = jax.nn.softplus(dense_apply(p["dt_proj"], dt_in, jnp.float32))  # [B,S,di]
+
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))  # [di,N]
+    dA = jnp.exp(dt[..., None] * A)  # [B,S,di,N]
+    dBx = (dt * xc.astype(jnp.float32))[..., None] * Bm[:, :, None, :]  # [B,S,di,N]
+
+    h0 = state["ssm"].astype(jnp.float32) if state is not None else None
+    y, h_last = _mamba1_scan(dA, dBx, Cm, s.chunk, h0)
+    y = y + xc.astype(jnp.float32) * p["D"].astype(jnp.float32)
+    y = y.astype(cd) * jax.nn.silu(z)
+    out = dense_apply(p["out_proj"], y, cd)
+    out = constrain(out, "batch", None, None)
+    new_state = {"conv": new_conv, "ssm": h_last.astype(jnp.float32)} if state is not None else None
+    return out, new_state
+
+
+def mamba1_state_specs(cfg: ArchConfig, batch: int):
+    """ShapeDtypeStructs for the decode state."""
+    s = cfg.ssm
+    di = s.expand * cfg.d_model
+    return {
+        "conv": jax.ShapeDtypeStruct((batch, s.d_conv - 1, di), jnp.dtype(cfg.compute_dtype)),
+        "ssm": jax.ShapeDtypeStruct((batch, di, s.d_state), jnp.float32),
+    }
+
+
+# ==========================================================================
+# Mamba-2 / SSD (zamba2).  Projections are split per stream (z|x|B|C|dt) so
+# tensor parallelism can shard d_inner/heads over 'model' while keeping the
+# small B/C/dt streams replicated — no awkward fused-projection resharding.
+# ==========================================================================
+def init_mamba2(key, cfg: ArchConfig) -> dict:
+    s: SSMConfig = cfg.ssm
+    d = cfg.d_model
+    di = s.expand * d
+    H = di // s.headdim
+    N = s.d_state
+    keys = jax.random.split(key, 9)
+    dt_p = cfg.param_dtype
+    return {
+        "in_z": init_dense(keys[8], d, di, dtype=dt_p),
+        "in_x": init_dense(keys[1], d, di, dtype=dt_p),
+        "in_B": init_dense(keys[2], d, N, dtype=dt_p),
+        "in_C": init_dense(keys[3], d, N, dtype=dt_p),
+        "in_dt": init_dense(keys[4], d, H, dtype=dt_p),
+        "conv_x_w": jax.random.normal(keys[5], (s.d_conv, di), dtype=dt_p) * 0.1,
+        "conv_x_b": jnp.zeros((di,), dtype=dt_p),
+        "conv_B_w": jax.random.normal(keys[6], (s.d_conv, N), dtype=dt_p) * 0.1,
+        "conv_B_b": jnp.zeros((N,), dtype=dt_p),
+        "conv_C_w": jax.random.normal(keys[7], (s.d_conv, N), dtype=dt_p) * 0.1,
+        "conv_C_b": jnp.zeros((N,), dtype=dt_p),
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, H)).astype(dt_p),
+        "D": jnp.ones((H,), dtype=dt_p),
+        "dt_bias": jnp.zeros((H,), dtype=dt_p),
+        "norm": init_norm("rmsnorm", di, dtype=dt_p),
+        "out_proj": init_dense(keys[0], di, d, dtype=dt_p),
+    }
+
+
+def _ssd_chunked(xh, dt, A, Bm, Cm, chunk: int, h0=None):
+    """Chunked SSD (Mamba-2) forward.
+
+    xh: [B,S,H,P]; dt: [B,S,H] (post-softplus); A: [H] (negative);
+    Bm, Cm: [B,S,N].  Returns (y [B,S,H,P], h_last [B,H,P,N]).
+    """
+    B, S, H, Pd = xh.shape
+    N = Bm.shape[-1]
+    Q = min(chunk, S)
+    if S % Q:
+        Q = S
+    nC = S // Q
+    xc = xh.reshape(B, nC, Q, H, Pd).astype(jnp.float32)
+    dtc = dt.reshape(B, nC, Q, H).astype(jnp.float32)
+    Bc = Bm.reshape(B, nC, Q, N).astype(jnp.float32)
+    Cc = Cm.reshape(B, nC, Q, N).astype(jnp.float32)
+    la = dtc * A  # [B,nC,Q,H] log-decay per step
+    if h0 is None:
+        h0 = jnp.zeros((B, H, Pd, N), jnp.float32)
+
+    def body(h, xs):
+        x_q, dt_q, B_q, C_q, la_q = xs  # [B,Q,H,P],[B,Q,H],[B,Q,N]x2,[B,Q,H]
+        la_h = la_q.swapaxes(1, 2)  # [B,H,Q]
+        L = _segsum_decay(la_h)  # [B,H,Q,Q]
+        scores = jnp.einsum("bqn,bpn->bqp", C_q, B_q)  # [B,Q,Q]
+        M = scores[:, None] * L  # [B,H,Q,Q]
+        dx = x_q * dt_q[..., None]  # [B,Q,H,P]
+        y_intra = jnp.einsum("bhqp,bphd->bqhd", M, dx)
+        # inter-chunk: contribution of the carried state
+        decay_from_start = jnp.exp(jnp.cumsum(la_h, axis=-1))  # [B,H,Q]
+        y_inter = jnp.einsum("bqn,bhpn,bhq->bqhp", C_q, h, decay_from_start)
+        # state update: h' = total_decay * h + sum_t decay_to_end[t] dx_t B_t^T
+        total = decay_from_start[..., -1]  # [B,H]
+        decay_to_end = jnp.exp(jnp.cumsum(la_h[..., ::-1], axis=-1)[..., ::-1] - la_h)
+        contrib = jnp.einsum("bqhp,bqn,bhq->bhpn", dx, B_q, decay_to_end)
+        h_new = h * total[..., None, None] + contrib
+        return h_new, y_intra + y_inter
+
+    xs = (xc.swapaxes(0, 1), dtc.swapaxes(0, 1), Bc.swapaxes(0, 1),
+          Cc.swapaxes(0, 1), la.swapaxes(0, 1))
+    h_last, y = jax.lax.scan(body, h0, xs)
+    y = y.swapaxes(0, 1).reshape(B, S, H, Pd)
+    return y, h_last
+
+
+def mamba2_apply(p: dict, x: jnp.ndarray, cfg: ArchConfig, *,
+                 state: Optional[dict] = None):
+    """x: [B,S,d]. state (decode): {'conv_x','conv_B','conv_C','ssm'}."""
+    s: SSMConfig = cfg.ssm
+    cd = cfg.compute_dtype
+    B, S, d = x.shape
+    di = s.expand * d
+    H = di // s.headdim
+    N = s.d_state
+
+    z = dense_apply(p["in_z"], x, cd)
+    xin = dense_apply(p["in_x"], x, cd)
+    xin = constrain(xin, "batch", None, "ff")
+    z = constrain(z, "batch", None, "ff")
+    Braw = dense_apply(p["in_B"], x, cd)
+    Craw = dense_apply(p["in_C"], x, cd)
+    dt_raw = dense_apply(p["in_dt"], x, cd)
+
+    cs = state if state is not None else {}
+    xc, new_conv_x = _causal_conv(xin, p["conv_x_w"], p["conv_x_b"], cs.get("conv_x"))
+    Bc, new_conv_B = _causal_conv(Braw, p["conv_B_w"], p["conv_B_b"], cs.get("conv_B"))
+    Cc, new_conv_C = _causal_conv(Craw, p["conv_C_w"], p["conv_C_b"], cs.get("conv_C"))
+    xc = jax.nn.silu(xc)
+    Bm = jax.nn.silu(Bc).astype(jnp.float32)
+    Cm = jax.nn.silu(Cc).astype(jnp.float32)
+    xh = xc.reshape(B, S, H, s.headdim)
+
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + p["dt_bias"].astype(jnp.float32))
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))  # [H]
+
+    h0 = state["ssm"].astype(jnp.float32) if state is not None else None
+    y, h_last = _ssd_chunked(xh, dt, A, Bm, Cm, s.chunk, h0)
+    y = y + xh.astype(jnp.float32) * p["D"].astype(jnp.float32)[None, None, :, None]
+    y = y.reshape(B, S, di).astype(cd)
+    y = norm_apply("rmsnorm", p["norm"], y * jax.nn.silu(z))
+    out = dense_apply(p["out_proj"], y, cd)
+    out = constrain(out, "batch", None, None)
+    new_state = None
+    if state is not None:
+        new_state = {"conv_x": new_conv_x, "conv_B": new_conv_B,
+                     "conv_C": new_conv_C, "ssm": h_last.astype(jnp.float32)}
+    return out, new_state
+
+
+def mamba2_state_specs(cfg: ArchConfig, batch: int):
+    s = cfg.ssm
+    di = s.expand * cfg.d_model
+    H = di // s.headdim
+    cd = jnp.dtype(cfg.compute_dtype)
+    return {
+        "conv_x": jax.ShapeDtypeStruct((batch, s.d_conv - 1, di), cd),
+        "conv_B": jax.ShapeDtypeStruct((batch, s.d_conv - 1, s.d_state), cd),
+        "conv_C": jax.ShapeDtypeStruct((batch, s.d_conv - 1, s.d_state), cd),
+        "ssm": jax.ShapeDtypeStruct((batch, H, s.headdim, s.d_state), jnp.float32),
+    }

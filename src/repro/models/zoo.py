@@ -1,0 +1,507 @@
+"""Model assembly: init, train forward/loss, KV-cache decode — per family.
+
+Public API (used by launch/train/serve/dryrun):
+
+    params        = init_model(cfg, key)
+    loss, metrics = loss_fn(params, cfg, batch)             # train/prefill
+    caches        = init_cache_specs(cfg, batch, max_len)   # ShapeDtypeStructs
+    logits, cache = decode_step(params, cfg, batch, cache)  # one token
+    specs         = input_specs(cfg, shape)                 # dry-run stand-ins
+
+All families lower their layer stack through lax.scan over stacked layer
+params (HLO stays O(1) in depth).  Special layers sit outside the scan:
+DeepSeek's leading dense layer, and Zamba2's shared attention block — the
+hybrid stack is segmented as [every-layers scan → shared attn] × n_sites so
+the shared block's KV cache is stacked only over its n_sites call sites.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ArchConfig, ShapeSpec
+from repro.distributed.ctx import constrain
+from repro.models.attention import attention_apply, init_attention
+from repro.models.blocks import block_apply, init_block
+from repro.models.layers import (dense_apply, embedding_apply, init_dense,
+                                 init_embedding, init_mlp, init_norm,
+                                 mlp_apply, norm_apply)
+from repro.models.ssm import mamba1_state_specs, mamba2_state_specs
+from repro.utils.tree import tree_param_count
+
+
+# ==========================================================================
+# Family layout
+# ==========================================================================
+def _family_block_kind(cfg: ArchConfig) -> str:
+    if cfg.family in ("ssm", "hybrid"):
+        return "ssm1" if cfg.ssm.kind == "mamba1" else "ssm2"
+    if cfg.family == "moe":
+        return "moe"
+    return "dense"  # dense | vlm backbone; audio handled separately
+
+
+def _stacked_init(key, n: int, one_init):
+    keys = jax.random.split(key, n)
+    return jax.vmap(one_init)(keys)
+
+
+def _wide_cfg(cfg: ArchConfig) -> ArchConfig:
+    """Zamba2 shared block runs at 2*d_model."""
+    d2 = 2 * cfg.d_model
+    return dataclasses.replace(cfg, d_model=d2, head_dim=d2 // cfg.n_heads)
+
+
+def _hybrid_sites(cfg: ArchConfig) -> tuple[int, int]:
+    every = cfg.hybrid.shared_attn_every
+    n_sites = cfg.n_layers // every
+    trailing = cfg.n_layers - n_sites * every
+    return n_sites, trailing
+
+
+# ==========================================================================
+# init
+# ==========================================================================
+def init_model(cfg: ArchConfig, key) -> dict:
+    keys = jax.random.split(key, 12)
+    dt = cfg.param_dtype
+    params: dict[str, Any] = {
+        "embed": init_embedding(keys[0], cfg.vocab, cfg.d_model, dtype=dt),
+        "final_norm": init_norm(cfg.norm, cfg.d_model, dtype=dt),
+    }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = init_dense(keys[1], cfg.d_model, cfg.vocab, dtype=dt)
+
+    if cfg.is_encdec:
+        params["enc_layers"] = _stacked_init(
+            keys[2], cfg.enc_layers, lambda k: init_block(k, cfg, "enc"))
+        params["enc_norm"] = init_norm(cfg.norm, cfg.d_model, dtype=dt)
+        params["dec_layers"] = _stacked_init(
+            keys[3], cfg.n_layers, lambda k: init_block(k, cfg, "dec"))
+        return params
+
+    kind = _family_block_kind(cfg)
+    n_scanned = cfg.n_layers
+    if cfg.moe is not None and cfg.moe.first_dense_layers:
+        dense_cfg = dataclasses.replace(cfg, d_ff=cfg.moe.d_first_dense_ff)
+        params["dense_layers"] = _stacked_init(
+            keys[4], cfg.moe.first_dense_layers,
+            lambda k: init_block(k, dense_cfg, "dense"))
+        n_scanned = cfg.n_layers - cfg.moe.first_dense_layers
+    params["layers"] = _stacked_init(keys[5], n_scanned,
+                                     lambda k: init_block(k, cfg, kind))
+    if cfg.family == "hybrid":
+        params["shared_attn"] = _init_shared_attn(keys[6], cfg)
+    if cfg.frontend == "patch":
+        k_a, k_b = jax.random.split(keys[7])
+        params["projector"] = {
+            "fc1": init_dense(k_a, cfg.frontend_dim, cfg.d_model, bias=True, dtype=dt),
+            "fc2": init_dense(k_b, cfg.d_model, cfg.d_model, bias=True, dtype=dt),
+        }
+    return params
+
+
+def _init_shared_attn(key, cfg: ArchConfig) -> dict:
+    wide = _wide_cfg(cfg)
+    d2 = wide.d_model
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "ln1": init_norm(cfg.norm, d2, dtype=cfg.param_dtype),
+        "attn": init_attention(k1, wide),
+        "ln2": init_norm(cfg.norm, d2, dtype=cfg.param_dtype),
+        "mlp": init_mlp(k2, d2, cfg.d_ff, dtype=cfg.param_dtype),
+        "out_proj": init_dense(k3, d2, cfg.d_model, dtype=cfg.param_dtype),
+    }
+
+
+def _shared_attn_apply(p: dict, h, emb0, cfg: ArchConfig, *, positions=None,
+                       cache=None, cache_index=None, cache_len=None):
+    wide = _wide_cfg(cfg)
+    x = jnp.concatenate([h, emb0], axis=-1)
+    xn = norm_apply(cfg.norm, p["ln1"], x)
+    a, new_cache = attention_apply(p["attn"], xn, wide, causal=True,
+                                   positions=positions, kv_cache=cache,
+                                   cache_index=cache_index, cache_len=cache_len)
+    x = x + a
+    xn = norm_apply(cfg.norm, p["ln2"], x)
+    x = x + mlp_apply(p["mlp"], xn, cfg.compute_dtype)
+    return h + dense_apply(p["out_proj"], x, cfg.compute_dtype), new_cache
+
+
+# ==========================================================================
+# Layer-stack scan
+# ==========================================================================
+def _scan_layers(layers, h, cfg: ArchConfig, kind: str, *, positions=None,
+                 caches=None, cache_index=None, cache_len=None, enc_out=None,
+                 causal=True, remat: bool = True):
+    """lax.scan over stacked layer params. Returns (h, new_caches)."""
+
+    def body(h, xs):
+        p, cache = xs
+        h, new_cache = block_apply(p, h, cfg, kind, positions=positions,
+                                   cache=cache, cache_index=cache_index,
+                                   cache_len=cache_len, enc_out=enc_out,
+                                   causal=causal)
+        return h, new_cache
+
+    if remat:
+        body = jax.checkpoint(body, prevent_cse=False)
+    h, new_caches = jax.lax.scan(body, h, (layers, caches))
+    return h, new_caches
+
+
+# ==========================================================================
+# Hybrid (Zamba2) stack: [every-layer scan -> shared attn] x n_sites + tail
+# ==========================================================================
+def _hybrid_stack(params: dict, cfg: ArchConfig, h, *, positions=None,
+                  caches=None, cache_index=None, cache_len=None,
+                  remat: bool = True):
+    kind = _family_block_kind(cfg)
+    every = cfg.hybrid.shared_attn_every
+    n_sites, trailing = _hybrid_sites(cfg)
+    layers = params["layers"]
+    n_seg = n_sites * every
+
+    seg = jax.tree.map(
+        lambda x: x[:n_seg].reshape((n_sites, every) + x.shape[1:]), layers)
+    tail = jax.tree.map(lambda x: x[n_seg:], layers) if trailing else None
+    lc = caches["layers"] if caches is not None else None
+    seg_c = (jax.tree.map(
+        lambda x: x[:n_seg].reshape((n_sites, every) + x.shape[1:]), lc)
+        if lc is not None else None)
+    tail_c = (jax.tree.map(lambda x: x[n_seg:], lc)
+              if (lc is not None and trailing) else None)
+    sc = caches.get("shared") if caches is not None else None
+
+    emb0 = h
+    new_seg_c, new_shared_c = [], []
+    for i in range(n_sites):
+        seg_i = jax.tree.map(lambda x: x[i], seg)
+        cache_i = jax.tree.map(lambda x: x[i], seg_c) if seg_c is not None else None
+        h, nc = _scan_layers(seg_i, h, cfg, kind, positions=positions,
+                             caches=cache_i, cache_index=cache_index,
+                             cache_len=cache_len, remat=remat)
+        sc_i = jax.tree.map(lambda x: x[i], sc) if sc is not None else None
+        h, nsc = _shared_attn_apply(params["shared_attn"], h, emb0, cfg,
+                                    positions=positions, cache=sc_i,
+                                    cache_index=cache_index, cache_len=cache_len)
+        if seg_c is not None:
+            new_seg_c.append(nc)
+        if sc is not None:
+            new_shared_c.append(nsc)
+    new_tail_c = None
+    if trailing:
+        h, new_tail_c = _scan_layers(tail, h, cfg, kind, positions=positions,
+                                     caches=tail_c, cache_index=cache_index,
+                                     cache_len=cache_len, remat=remat)
+    new_caches = None
+    if caches is not None:
+        stacked = jax.tree.map(lambda *xs: jnp.stack(xs), *new_seg_c)
+        flat = jax.tree.map(
+            lambda x: x.reshape((n_seg,) + x.shape[2:]), stacked)
+        if trailing:
+            flat = jax.tree.map(lambda a, b: jnp.concatenate([a, b]), flat,
+                                new_tail_c)
+        new_caches = {"layers": flat,
+                      "shared": jax.tree.map(lambda *xs: jnp.stack(xs),
+                                             *new_shared_c)}
+    return h, new_caches
+
+
+def _embed_inputs(params: dict, cfg: ArchConfig, batch: dict):
+    """Token embedding (+ projected patch embeddings for VLM prefill)."""
+    cd = cfg.compute_dtype
+    h = embedding_apply(params["embed"], batch["tokens"], cd)
+    if cfg.frontend == "patch" and "patch_embeds" in batch:
+        pe = batch["patch_embeds"].astype(cd)
+        pe = dense_apply(params["projector"]["fc1"], pe, cd)
+        pe = dense_apply(params["projector"]["fc2"], jax.nn.gelu(pe), cd)
+        h = jnp.concatenate([pe, h], axis=1)  # image tokens lead the sequence
+    return constrain(h, "batch", None, None)
+
+
+# ==========================================================================
+# Train/prefill forward
+# ==========================================================================
+def forward(params: dict, cfg: ArchConfig, batch: dict, *, remat: bool = True):
+    """Returns final hidden states [B, S, d] (final norm applied)."""
+    cd = cfg.compute_dtype
+    if cfg.is_encdec:
+        enc_h = batch["frames"].astype(cd)  # stub frontend: frame embeddings
+        enc_h = constrain(enc_h, "batch", None, None)
+        enc_h, _ = _scan_layers(params["enc_layers"], enc_h, cfg, "enc",
+                                positions=jnp.arange(enc_h.shape[1]),
+                                causal=False, remat=remat)
+        enc_out = norm_apply(cfg.norm, params["enc_norm"], enc_h)
+        h = embedding_apply(params["embed"], batch["tokens"], cd)
+        h = constrain(h, "batch", None, None)
+        h, _ = _scan_layers(params["dec_layers"], h, cfg, "dec",
+                            positions=jnp.arange(h.shape[1]),
+                            enc_out=enc_out, causal=True, remat=remat)
+        return norm_apply(cfg.norm, params["final_norm"], h)
+
+    h = _embed_inputs(params, cfg, batch)
+    positions = jnp.arange(h.shape[1])
+
+    if cfg.moe is not None and cfg.moe.first_dense_layers:
+        dense_cfg = dataclasses.replace(cfg, d_ff=cfg.moe.d_first_dense_ff)
+        h, _ = _scan_layers(params["dense_layers"], h, dense_cfg, "dense",
+                            positions=positions, remat=remat)
+
+    if cfg.family == "hybrid":
+        h, _ = _hybrid_stack(params, cfg, h, positions=positions, remat=remat)
+    else:
+        kind = _family_block_kind(cfg)
+        h, _ = _scan_layers(params["layers"], h, cfg, kind,
+                            positions=positions, remat=remat)
+    return norm_apply(cfg.norm, params["final_norm"], h)
+
+
+# ==========================================================================
+# Loss (token-chunked cross-entropy; never materialises full [T, V] logits)
+# ==========================================================================
+def loss_fn(params: dict, cfg: ArchConfig, batch: dict, *, remat: bool = True):
+    h = forward(params, cfg, batch, remat=remat)
+    B, S, d = h.shape
+    targets = batch["targets"]
+    if cfg.frontend == "patch":
+        n_img = S - targets.shape[1]  # image tokens carry no LM loss
+        h = h[:, n_img:]
+        S = h.shape[1]
+    w = (params["embed"]["table"].T if cfg.tie_embeddings
+         else params["lm_head"]["w"])  # [d, vocab]
+    # Cast-then-gather: constrain the bf16 copy so the FSDP all-gather moves
+    # 2-byte, not 4-byte, elements (SS Perf iteration: halves the lm_head
+    # gather bytes).  'vocab' keeps the TP sharding; the fsdp axis is gone.
+    w = constrain(w.astype(cfg.compute_dtype), None, "vocab")
+    # Chunk the vocab projection over the SEQUENCE axis.  The chunk COUNT is
+    # what matters for collectives: the lm_head gradient is all-reduced once
+    # per scan trip, so chunks are sized from a per-chip logits-memory budget
+    # (~256 MB) instead of a fixed token count (SS Perf iteration: 128 trips
+    # -> 4-16, cutting the dominant train collective ~10x).
+    from repro.distributed.ctx import current_mesh
+
+    mesh = current_mesh()
+    chips = 1.0
+    if mesh is not None:
+        import numpy as _np
+
+        chips = float(_np.prod(list(mesh.shape.values())))
+    logits_bytes = B * S * cfg.vocab * 4.0 / chips
+    want = max(1, int(-(-logits_bytes // 256e6)))
+    n_chunk = 1
+    while n_chunk < want and n_chunk < S:
+        n_chunk *= 2
+    while S % n_chunk:
+        n_chunk //= 2
+    s_chunk = S // n_chunk
+
+    def body(acc, i):
+        hc = jax.lax.dynamic_slice_in_dim(h, i * s_chunk, s_chunk, axis=1)
+        tc = jax.lax.dynamic_slice_in_dim(targets, i * s_chunk, s_chunk, axis=1)
+        logits = hc.astype(cfg.compute_dtype) @ w
+        logits = constrain(logits, "batch", None, "vocab").astype(jnp.float32)
+        lse = jax.scipy.special.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, tc[:, :, None], axis=-1)[..., 0]
+        return acc + jnp.sum(lse - gold), None
+
+    acc, _ = jax.lax.scan(body, jnp.float32(0.0), jnp.arange(n_chunk))
+    T = B * S
+    loss = acc / T
+    return loss, {"loss": loss, "tokens": jnp.float32(T)}
+
+
+def logits_fn(params: dict, cfg: ArchConfig, h_last: jnp.ndarray) -> jnp.ndarray:
+    w = (params["embed"]["table"].T if cfg.tie_embeddings
+         else params["lm_head"]["w"])  # [d, vocab]
+    logits = h_last.astype(cfg.compute_dtype) @ w.astype(cfg.compute_dtype)
+    return constrain(logits, "batch", None, "vocab").astype(jnp.float32)
+
+
+# ==========================================================================
+# KV caches + decode
+# ==========================================================================
+def _attn_cache_spec(cfg: ArchConfig, batch: int, max_len: int):
+    cd = jnp.dtype(cfg.compute_dtype)
+    if cfg.mla is not None:
+        if cfg.kv_cache_quant:  # int8 latent + bf16 per-row scales (SS Perf)
+            return {
+                "c_kv": jax.ShapeDtypeStruct(
+                    (batch, max_len, cfg.mla.kv_lora_rank), jnp.dtype(jnp.int8)),
+                "c_kv_scale": jax.ShapeDtypeStruct(
+                    (batch, max_len), jnp.dtype(jnp.bfloat16)),
+                "k_rope": jax.ShapeDtypeStruct(
+                    (batch, max_len, cfg.mla.qk_rope_head_dim), cd),
+            }
+        return {
+            "c_kv": jax.ShapeDtypeStruct((batch, max_len, cfg.mla.kv_lora_rank), cd),
+            "k_rope": jax.ShapeDtypeStruct((batch, max_len, cfg.mla.qk_rope_head_dim), cd),
+        }
+    kv_eff = cfg.n_kv_heads * cfg.kv_repeat
+    if cfg.kv_cache_quant:  # int8 rows + bf16 per-row scales (SS Perf)
+        i8 = jnp.dtype(jnp.int8)
+        bf = jnp.dtype(jnp.bfloat16)
+        return {
+            "k": jax.ShapeDtypeStruct((batch, max_len, kv_eff, cfg.head_dim), i8),
+            "v": jax.ShapeDtypeStruct((batch, max_len, kv_eff, cfg.head_dim), i8),
+            "k_scale": jax.ShapeDtypeStruct((batch, max_len, kv_eff), bf),
+            "v_scale": jax.ShapeDtypeStruct((batch, max_len, kv_eff), bf),
+        }
+    return {
+        "k": jax.ShapeDtypeStruct((batch, max_len, kv_eff, cfg.head_dim), cd),
+        "v": jax.ShapeDtypeStruct((batch, max_len, kv_eff, cfg.head_dim), cd),
+    }
+
+
+def init_cache_specs(cfg: ArchConfig, batch: int, max_len: int):
+    """ShapeDtypeStruct pytree of the decode cache (stacked over layers)."""
+
+    def stack(spec_tree, n):
+        return jax.tree.map(
+            lambda s: jax.ShapeDtypeStruct((n,) + s.shape, s.dtype), spec_tree)
+
+    if cfg.is_encdec:
+        return {"dec": stack(_attn_cache_spec(cfg, batch, max_len), cfg.n_layers)}
+
+    caches: dict[str, Any] = {}
+    kind = _family_block_kind(cfg)
+    n_scanned = cfg.n_layers
+    if cfg.moe is not None and cfg.moe.first_dense_layers:
+        n_scanned -= cfg.moe.first_dense_layers
+        caches["dense_layers"] = stack(_attn_cache_spec(cfg, batch, max_len),
+                                       cfg.moe.first_dense_layers)
+    if kind in ("dense", "moe"):
+        caches["layers"] = stack(_attn_cache_spec(cfg, batch, max_len), n_scanned)
+    elif kind == "ssm1":
+        caches["layers"] = stack(mamba1_state_specs(cfg, batch), n_scanned)
+    else:
+        caches["layers"] = stack(mamba2_state_specs(cfg, batch), n_scanned)
+    if cfg.family == "hybrid":
+        n_sites, _ = _hybrid_sites(cfg)
+        caches["shared"] = stack(_attn_cache_spec(_wide_cfg(cfg), batch, max_len),
+                                 n_sites)
+    return caches
+
+
+def init_cache(cfg: ArchConfig, batch: int, max_len: int):
+    return jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype),
+                        init_cache_specs(cfg, batch, max_len))
+
+
+def decode_step(params: dict, cfg: ArchConfig, batch: dict, caches, *,
+                cache_index, enc_out=None):
+    """One-token decode.  batch['tokens']: [B, 1].  Returns (logits, caches)."""
+    cd = cfg.compute_dtype
+    h = _embed_inputs(params, cfg, batch)
+    S_in = h.shape[1]
+    cache_len = cache_index + S_in
+    positions = jnp.arange(S_in) + cache_index
+    new_caches = dict(caches)
+
+    if cfg.is_encdec:
+        if enc_out is None:
+            enc_out = batch["enc_out"].astype(cd)
+        h, nc = _scan_layers(params["dec_layers"], h, cfg, "dec",
+                             positions=positions, caches=caches["dec"],
+                             cache_index=cache_index, cache_len=cache_len,
+                             enc_out=enc_out, remat=False)
+        new_caches["dec"] = nc
+        h = norm_apply(cfg.norm, params["final_norm"], h)
+        if S_in > 1:
+            h = h[:, -1:]
+        return logits_fn(params, cfg, h), new_caches
+
+    if cfg.moe is not None and cfg.moe.first_dense_layers:
+        dense_cfg = dataclasses.replace(cfg, d_ff=cfg.moe.d_first_dense_ff)
+        h, nc = _scan_layers(params["dense_layers"], h, dense_cfg, "dense",
+                             positions=positions, caches=caches["dense_layers"],
+                             cache_index=cache_index, cache_len=cache_len,
+                             remat=False)
+        new_caches["dense_layers"] = nc
+
+    if cfg.family == "hybrid":
+        h, nc = _hybrid_stack(params, cfg, h, positions=positions, caches=caches,
+                              cache_index=cache_index, cache_len=cache_len,
+                              remat=False)
+        new_caches.update(nc)
+    else:
+        kind = _family_block_kind(cfg)
+        h, nc = _scan_layers(params["layers"], h, cfg, kind, positions=positions,
+                             caches=caches["layers"], cache_index=cache_index,
+                             cache_len=cache_len, remat=False)
+        new_caches["layers"] = nc
+    h = norm_apply(cfg.norm, params["final_norm"], h)
+    if S_in > 1:  # prefill: only the last position's logits are needed
+        h = h[:, -1:]
+    return logits_fn(params, cfg, h), new_caches
+
+
+def encode_frames(params: dict, cfg: ArchConfig, frames, *, remat: bool = False):
+    """Run the encoder stack on (stub) frame embeddings -> enc_out."""
+    cd = cfg.compute_dtype
+    enc_h = frames.astype(cd)
+    enc_h = constrain(enc_h, "batch", None, None)
+    enc_h, _ = _scan_layers(params["enc_layers"], enc_h, cfg, "enc",
+                            positions=jnp.arange(enc_h.shape[1]),
+                            causal=False, remat=remat)
+    return norm_apply(cfg.norm, params["enc_norm"], enc_h)
+
+
+# ==========================================================================
+# Dry-run input specs
+# ==========================================================================
+def input_specs(cfg: ArchConfig, shape: ShapeSpec) -> dict:
+    """ShapeDtypeStruct stand-ins for every model input of this shape cell."""
+    B, S = shape.global_batch, shape.seq_len
+    i32 = jnp.dtype("int32")
+    f32 = jnp.dtype("float32")
+    if shape.kind in ("train", "prefill"):
+        train = shape.kind == "train"
+        specs: dict[str, Any] = {}
+        if cfg.frontend == "patch":
+            n_img = min(cfg.frontend_tokens, S // 4)
+            specs["patch_embeds"] = jax.ShapeDtypeStruct((B, n_img, cfg.frontend_dim), f32)
+            specs["tokens"] = jax.ShapeDtypeStruct((B, S - n_img), i32)
+            if train:
+                specs["targets"] = jax.ShapeDtypeStruct((B, S - n_img), i32)
+        elif cfg.is_encdec:
+            specs["frames"] = jax.ShapeDtypeStruct((B, max(S // 4, 1), cfg.d_model), f32)
+            specs["tokens"] = jax.ShapeDtypeStruct((B, S), i32)
+            if train:
+                specs["targets"] = jax.ShapeDtypeStruct((B, S), i32)
+        else:
+            specs["tokens"] = jax.ShapeDtypeStruct((B, S), i32)
+            if train:
+                specs["targets"] = jax.ShapeDtypeStruct((B, S), i32)
+        return specs
+    specs = {"tokens": jax.ShapeDtypeStruct((B, 1), i32)}
+    if cfg.is_encdec:
+        specs["enc_out"] = jax.ShapeDtypeStruct((B, max(S // 4, 1), cfg.d_model), f32)
+    return specs
+
+
+# ==========================================================================
+# Param counting (for 6ND roofline terms)
+# ==========================================================================
+@functools.lru_cache(maxsize=64)
+def _param_count_cached(cfg: ArchConfig) -> int:
+    shapes = jax.eval_shape(lambda: init_model(cfg, jax.random.key(0)))
+    return tree_param_count(shapes)
+
+
+def analytic_param_count(cfg: ArchConfig, active_only: bool = False) -> int:
+    total = _param_count_cached(cfg)
+    if not active_only or cfg.moe is None:
+        return total
+    shapes = jax.eval_shape(lambda: init_model(cfg, jax.random.key(0)))
+    from repro.utils.tree import flatten_names
+
+    expert = sum(int(np.prod(leaf.shape)) for name, leaf in flatten_names(shapes)
+                 if any(t in name for t in ("w_gate", "w_up", "w_down")))
+    active_frac = cfg.moe.top_k / cfg.moe.n_routed
+    return int(total - expert + expert * active_frac)

@@ -1,0 +1,68 @@
+"""Serving steps: prefill (fill KV caches for a full prompt, return last-token
+logits) and decode (one token against the cache).
+
+Both lower through the same zoo.decode_step machinery — prefill is simply the
+S=prompt_len case with cache_index=0, which writes all S cache rows in one
+dynamic_update_slice and runs the chunked causal attention path.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models import zoo
+
+
+def make_prefill_step(cfg: ArchConfig, max_len: int):
+    """prefill(params, batch) -> (last_logits [B,1,V], caches)."""
+
+    def prefill(params, batch):
+        B = batch["tokens"].shape[0]
+        caches = zoo.init_cache(cfg, B, max_len)
+        enc_out = None
+        if cfg.is_encdec:
+            enc_out = zoo.encode_frames(params, cfg, batch["frames"])
+        logits, caches = zoo.decode_step(params, cfg, batch, caches,
+                                         cache_index=jnp.int32(0),
+                                         enc_out=enc_out)
+        return logits, caches
+
+    return prefill
+
+
+def make_decode_step(cfg: ArchConfig):
+    """decode(params, caches, batch, index) -> (logits [B,1,V], caches)."""
+
+    def decode(params, caches, batch, index):
+        return zoo.decode_step(params, cfg, batch, caches, cache_index=index)
+
+    return decode
+
+
+def greedy_generate(params, cfg: ArchConfig, prompt: jnp.ndarray, *,
+                    max_new: int, max_len: Optional[int] = None,
+                    enc_out=None):
+    """Host-loop greedy decoding for examples/tests (jitted per-step)."""
+    B, S0 = prompt.shape
+    max_len = max_len or (S0 + max_new)
+    caches = zoo.init_cache(cfg, B, max_len)
+    batch = {"tokens": prompt}
+    if enc_out is not None:
+        batch["enc_out"] = enc_out
+
+    step = jax.jit(
+        lambda p, b, c, i: zoo.decode_step(p, cfg, b, c, cache_index=i))
+    logits, caches = step(params, batch, caches, jnp.int32(0))
+    out = [jnp.argmax(logits[:, -1], axis=-1)]
+    idx = S0
+    for _ in range(max_new - 1):
+        b = {"tokens": out[-1][:, None]}
+        if enc_out is not None:
+            b["enc_out"] = enc_out
+        logits, caches = step(params, b, caches, jnp.int32(idx))
+        out.append(jnp.argmax(logits[:, -1], axis=-1))
+        idx += 1
+    return jnp.stack(out, axis=1)

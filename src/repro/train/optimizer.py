@@ -1,0 +1,94 @@
+"""AdamW with decoupled weight decay and global-norm clipping (built here —
+no optax dependency).  Optimizer state shards exactly like the params (the
+moments inherit the FSDP+TP PartitionSpecs), giving ZeRO-style sharded state.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    beta1: float = 0.9
+    beta2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+    warmup_steps: int = 100
+    total_steps: int = 10000
+    min_lr_frac: float = 0.1
+
+
+def init_opt_state(params, *, master: bool = None) -> dict:
+    """master=True (auto when params are sub-fp32) keeps an fp32 master copy
+    in the optimizer state — params can then live/gather in bf16 while the
+    update math stays fp32 (SS Perf: halves FSDP gather + grad-sync bytes)."""
+    zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+    if master is None:
+        master = any(x.dtype != jnp.float32 for x in jax.tree.leaves(params))
+    state = {
+        "m": jax.tree.map(zeros, params),
+        "v": jax.tree.map(zeros, params),
+        "step": jnp.zeros((), jnp.int32),
+    }
+    if master:
+        state["master"] = jax.tree.map(lambda p: p.astype(jnp.float32), params)
+    return state
+
+
+def lr_schedule(cfg: AdamWConfig, step):
+    """Linear warmup then cosine decay to min_lr_frac."""
+    step = step.astype(jnp.float32)
+    warm = cfg.lr * (step + 1.0) / max(cfg.warmup_steps, 1)
+    prog = jnp.clip((step - cfg.warmup_steps)
+                    / max(cfg.total_steps - cfg.warmup_steps, 1), 0.0, 1.0)
+    cos = cfg.min_lr_frac + (1 - cfg.min_lr_frac) * 0.5 * (1 + jnp.cos(jnp.pi * prog))
+    return jnp.where(step < cfg.warmup_steps, warm, cfg.lr * cos)
+
+
+def global_norm(tree) -> jnp.ndarray:
+    leaves = [jnp.sum(jnp.square(x.astype(jnp.float32)))
+              for x in jax.tree.leaves(tree)]
+    return jnp.sqrt(jnp.sum(jnp.stack(leaves)))
+
+
+def adamw_update(grads, opt_state, params, cfg: AdamWConfig):
+    """Returns (new_params, new_opt_state, metrics)."""
+    step = opt_state["step"] + 1
+    gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, cfg.clip_norm / (gnorm + 1e-9))
+    lr = lr_schedule(cfg, step)
+    b1, b2 = cfg.beta1, cfg.beta2
+    bc1 = 1 - b1 ** step.astype(jnp.float32)
+    bc2 = 1 - b2 ** step.astype(jnp.float32)
+
+    masters = opt_state.get("master", params)
+
+    def upd(p, w, g, m, v):
+        g = g.astype(jnp.float32) * scale
+        m = b1 * m + (1 - b1) * g
+        v = b2 * v + (1 - b2) * g * g
+        mh = m / bc1
+        vh = v / bc2
+        step_delta = mh / (jnp.sqrt(vh) + cfg.eps)
+        if p.ndim >= 2:  # decay matrices only (norms/bias exempt)
+            step_delta = step_delta + cfg.weight_decay * w.astype(jnp.float32)
+        new_w = w.astype(jnp.float32) - lr * step_delta
+        return new_w.astype(p.dtype), new_w, m, v
+
+    out = jax.tree.map(upd, params, masters, grads, opt_state["m"],
+                       opt_state["v"])
+    flat, treedef = jax.tree.flatten(out, is_leaf=lambda x: isinstance(x, tuple))
+    new_p = jax.tree.unflatten(treedef, [t[0] for t in flat])
+    new_w = jax.tree.unflatten(treedef, [t[1] for t in flat])
+    new_m = jax.tree.unflatten(treedef, [t[2] for t in flat])
+    new_v = jax.tree.unflatten(treedef, [t[3] for t in flat])
+    new_state = {"m": new_m, "v": new_v, "step": step}
+    if "master" in opt_state:
+        new_state["master"] = new_w
+    return new_p, new_state, {"grad_norm": gnorm, "lr": lr}

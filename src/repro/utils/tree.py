@@ -1,0 +1,50 @@
+"""Pytree helpers used across the framework."""
+from __future__ import annotations
+
+from typing import Any, Callable
+
+import jax
+import numpy as np
+
+
+def _path_to_name(path) -> str:
+    parts = []
+    for p in path:
+        if hasattr(p, "key"):
+            parts.append(str(p.key))
+        elif hasattr(p, "idx"):
+            parts.append(str(p.idx))
+        else:
+            parts.append(str(p))
+    return "/".join(parts)
+
+
+def tree_map_with_name(fn: Callable[[str, Any], Any], tree: Any) -> Any:
+    """Map ``fn(name, leaf)`` over a pytree, where name is the '/'-joined path."""
+    return jax.tree_util.tree_map_with_path(
+        lambda path, leaf: fn(_path_to_name(path), leaf), tree
+    )
+
+
+def flatten_names(tree: Any) -> list[tuple[str, Any]]:
+    """Return [(name, leaf)] for every leaf in the tree."""
+    flat, _ = jax.tree_util.tree_flatten_with_path(tree)
+    return [(_path_to_name(path), leaf) for path, leaf in flat]
+
+
+def tree_size_bytes(tree: Any) -> int:
+    """Total bytes across all array leaves (works on ShapeDtypeStructs too)."""
+    total = 0
+    for leaf in jax.tree_util.tree_leaves(tree):
+        if hasattr(leaf, "shape") and hasattr(leaf, "dtype"):
+            total += int(np.prod(leaf.shape)) * np.dtype(leaf.dtype).itemsize
+    return total
+
+
+def tree_param_count(tree: Any) -> int:
+    """Total number of scalar parameters across all array leaves."""
+    total = 0
+    for leaf in jax.tree_util.tree_leaves(tree):
+        if hasattr(leaf, "shape"):
+            total += int(np.prod(leaf.shape))
+    return total

@@ -1,0 +1,24 @@
+"""Test fixtures.  NOTE: no XLA_FLAGS here — smoke tests must see 1 device;
+multi-device tests run in subprocesses (tests/test_distributed.py)."""
+import numpy as np
+import pytest
+
+
+@pytest.fixture(scope="session")
+def sparse_video():
+    from repro.data.video_gen import generate, sparse_spec
+
+    spec = sparse_spec(seed=3, n_frames=64, height=96, width=160)
+    frames, dets = generate(spec)
+    return frames, dets
+
+
+@pytest.fixture(scope="session")
+def small_video():
+    from repro.data.video_gen import VideoSpec, ObjectSpec, generate
+
+    spec = VideoSpec(height=96, width=160, n_frames=32, seed=5,
+                     objects=[ObjectSpec("car", 2, (16, 24), 2.0),
+                              ObjectSpec("person", 1, (18, 10), 1.0)])
+    frames, dets = generate(spec)
+    return frames, dets

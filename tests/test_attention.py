@@ -1,0 +1,176 @@
+"""Model-level attention: chunked == naive, cache paths, MLA absorbed decode."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.configs.base import get_config, reduce_config
+from repro.models.attention import (attention_apply, grouped_attention,
+                                    init_attention, init_mla_attention,
+                                    mla_apply)
+
+
+def _qkv(key, B, S, KV, G, D, Skv=None):
+    Skv = Skv or S
+    ks = jax.random.split(key, 3)
+    q = jax.random.normal(ks[0], (B, S, KV, G, D))
+    k = jax.random.normal(ks[1], (B, Skv, KV, D))
+    v = jax.random.normal(ks[2], (B, Skv, KV, D))
+    return q, k, v
+
+
+@settings(max_examples=12, deadline=None)
+@given(st.sampled_from([64, 128]), st.sampled_from([1, 2]),
+       st.sampled_from([1, 3]), st.booleans(),
+       st.sampled_from([16, 32, 64]))
+def test_chunked_equals_naive(S, KV, G, causal, chunk):
+    q, k, v = _qkv(jax.random.key(0), 2, S, KV, G, 16)
+    pos = jnp.arange(S)
+    a = grouped_attention(q, k, v, causal=causal, q_pos=pos, kv_pos=pos,
+                          impl="naive")
+    b = grouped_attention(q, k, v, causal=causal, q_pos=pos, kv_pos=pos,
+                          impl="chunked", q_chunk=chunk, kv_chunk=chunk)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=3e-5)
+
+
+def test_kv_len_masking():
+    S = 32
+    q, k, v = _qkv(jax.random.key(1), 1, 1, 2, 2, 16, Skv=S)
+    pos = jnp.asarray([10])
+    kv_pos = jnp.arange(S)
+    out_full = grouped_attention(q, k, v, causal=False, q_pos=pos,
+                                 kv_pos=kv_pos, impl="naive", kv_len=11)
+    # zeroing cache beyond kv_len must not change the output
+    k2 = k.at[:, 11:].set(99.0)
+    v2 = v.at[:, 11:].set(-99.0)
+    out_masked = grouped_attention(q, k2, v2, causal=False, q_pos=pos,
+                                   kv_pos=kv_pos, impl="naive", kv_len=11)
+    np.testing.assert_allclose(np.asarray(out_full), np.asarray(out_masked),
+                               atol=1e-6)
+
+
+def _gqa_cfg():
+    return reduce_config(get_config("qwen2-72b"))
+
+
+class TestCachePaths:
+    def test_prefill_then_decode_matches_full(self):
+        """Prefill S tokens into a cache, decode one more: logits must match
+        attention over the full S+1 sequence."""
+        cfg = _gqa_cfg()
+        p = init_attention(jax.random.key(0), cfg)
+        B, S = 2, 16
+        x_full = jax.random.normal(jax.random.key(1), (B, S + 1, cfg.d_model),
+                                   jnp.float32)
+        # full pass
+        full, _ = attention_apply(p, x_full, cfg, causal=True)
+        # prefill + decode
+        cache = {
+            "k": jnp.zeros((B, S + 1, cfg.n_kv_heads, cfg.head_dim), jnp.bfloat16),
+            "v": jnp.zeros((B, S + 1, cfg.n_kv_heads, cfg.head_dim), jnp.bfloat16),
+        }
+        _, cache = attention_apply(p, x_full[:, :S], cfg, causal=True,
+                                   kv_cache=cache, cache_index=jnp.int32(0),
+                                   cache_len=jnp.int32(S))
+        out_1, _ = attention_apply(p, x_full[:, S:], cfg, causal=False,
+                                   kv_cache=cache, cache_index=jnp.int32(S),
+                                   cache_len=jnp.int32(S + 1))
+        np.testing.assert_allclose(np.asarray(out_1, np.float32),
+                                   np.asarray(full[:, S:], np.float32),
+                                   atol=3e-2)
+
+    def test_kv_repeat_equivalence(self):
+        """kv_repeat must not change attention outputs."""
+        cfg = _gqa_cfg()
+        p = init_attention(jax.random.key(0), cfg)
+        x = jax.random.normal(jax.random.key(2), (2, 8, cfg.d_model))
+        base, _ = attention_apply(p, x, cfg, causal=True)
+        cfg2 = dataclasses.replace(cfg, kv_repeat=2)
+        rep, _ = attention_apply(p, x, cfg2, causal=True)
+        np.testing.assert_allclose(np.asarray(base, np.float32),
+                                   np.asarray(rep, np.float32), atol=2e-2)
+
+
+class TestMLA:
+    def test_absorbed_decode_matches_full(self):
+        cfg = reduce_config(get_config("deepseek-v2-lite-16b"))
+        p = init_mla_attention(jax.random.key(0), cfg)
+        B, S = 2, 12
+        x = jax.random.normal(jax.random.key(1), (B, S + 1, cfg.d_model))
+        full, _ = mla_apply(p, x, cfg, causal=True)
+        m = cfg.mla
+        cache = {
+            "c_kv": jnp.zeros((B, S + 1, m.kv_lora_rank), jnp.bfloat16),
+            "k_rope": jnp.zeros((B, S + 1, m.qk_rope_head_dim), jnp.bfloat16),
+        }
+        _, cache = mla_apply(p, x[:, :S], cfg, causal=True, kv_cache=cache,
+                             cache_index=jnp.int32(0), cache_len=jnp.int32(S))
+        out1, _ = mla_apply(p, x[:, S:], cfg, causal=False, kv_cache=cache,
+                            cache_index=jnp.int32(S), cache_len=jnp.int32(S + 1))
+        np.testing.assert_allclose(np.asarray(out1, np.float32),
+                                   np.asarray(full[:, S:], np.float32),
+                                   atol=4e-2)
+
+
+class TestMLAQuantCache:
+    def test_int8_latent_matches_bf16(self):
+        """int8-quantized latent cache decode tracks the bf16 path."""
+        import dataclasses
+
+        cfg = reduce_config(get_config("deepseek-v2-lite-16b"))
+        p = init_mla_attention(jax.random.key(0), cfg)
+        B, S = 2, 12
+        x = jax.random.normal(jax.random.key(1), (B, S + 1, cfg.d_model))
+        m = cfg.mla
+
+        def run(quant):
+            cache = {"c_kv": jnp.zeros((B, S + 1, m.kv_lora_rank), jnp.bfloat16),
+                     "k_rope": jnp.zeros((B, S + 1, m.qk_rope_head_dim),
+                                         jnp.bfloat16)}
+            if quant:
+                cache["c_kv"] = jnp.zeros((B, S + 1, m.kv_lora_rank), jnp.int8)
+                cache["c_kv_scale"] = jnp.zeros((B, S + 1), jnp.bfloat16)
+            _, cache = mla_apply(p, x[:, :S], cfg, causal=True, kv_cache=cache,
+                                 cache_index=jnp.int32(0), cache_len=jnp.int32(S))
+            out, _ = mla_apply(p, x[:, S:], cfg, causal=False, kv_cache=cache,
+                               cache_index=jnp.int32(S),
+                               cache_len=jnp.int32(S + 1))
+            return np.asarray(out, np.float32)
+
+        a, b = run(False), run(True)
+        rel = np.abs(a - b).max() / (np.abs(a).max() + 1e-9)
+        assert rel < 0.05, rel
+
+
+class TestGQAQuantCache:
+    def test_int8_kv_matches_bf16(self):
+        cfg = _gqa_cfg()
+        p = init_attention(jax.random.key(0), cfg)
+        B, S = 2, 16
+        x = jax.random.normal(jax.random.key(2), (B, S + 1, cfg.d_model))
+
+        def run(quant):
+            kv = cfg.n_kv_heads
+            cache = {"k": jnp.zeros((B, S + 1, kv, cfg.head_dim), jnp.bfloat16),
+                     "v": jnp.zeros((B, S + 1, kv, cfg.head_dim), jnp.bfloat16)}
+            if quant:
+                cache = {
+                    "k": jnp.zeros((B, S + 1, kv, cfg.head_dim), jnp.int8),
+                    "v": jnp.zeros((B, S + 1, kv, cfg.head_dim), jnp.int8),
+                    "k_scale": jnp.zeros((B, S + 1, kv), jnp.bfloat16),
+                    "v_scale": jnp.zeros((B, S + 1, kv), jnp.bfloat16),
+                }
+            _, cache = attention_apply(p, x[:, :S], cfg, causal=True,
+                                       kv_cache=cache, cache_index=jnp.int32(0),
+                                       cache_len=jnp.int32(S))
+            out, _ = attention_apply(p, x[:, S:], cfg, causal=False,
+                                     kv_cache=cache, cache_index=jnp.int32(S),
+                                     cache_len=jnp.int32(S + 1))
+            return np.asarray(out, np.float32)
+
+        a, b = run(False), run(True)
+        rel = np.abs(a - b).max() / (np.abs(a).max() + 1e-9)
+        assert rel < 0.05, rel

@@ -1,0 +1,46 @@
+"""B+-tree vs dict oracle (hypothesis)."""
+from hypothesis import given, settings, strategies as st
+
+from repro.core.btree import BPlusTree
+
+key_st = st.tuples(st.sampled_from(["v1", "v2"]),
+                   st.sampled_from(["car", "person", "boat"]),
+                   st.integers(0, 200))
+
+
+@settings(max_examples=60, deadline=None)
+@given(st.lists(st.tuples(key_st, st.integers()), max_size=200),
+       st.integers(4, 9))
+def test_btree_matches_dict(items, order):
+    tree = BPlusTree(order=order)
+    oracle: dict = {}
+    for k, v in items:
+        tree.insert(k, v)
+        oracle.setdefault(k, []).append(v)
+    # point lookups
+    for k, vs in oracle.items():
+        assert tree.get(k) == vs
+    # full ordering
+    assert list(tree.keys()) == sorted(oracle.keys())
+    # range scans
+    keys = sorted(oracle)
+    if keys:
+        lo, hi = keys[0], keys[-1]
+        got = {k: vs for k, vs in tree.scan(lo, hi)}
+        expect = {k: oracle[k] for k in oracle if lo <= k < hi}
+        assert got == expect
+
+
+def test_scan_is_sorted_and_bounded():
+    tree = BPlusTree(order=4)
+    for f in range(100):
+        tree.insert(("v", "car", f), f)
+    got = list(tree.scan(("v", "car", 10), ("v", "car", 20)))
+    assert [k[2] for k, _ in got] == list(range(10, 20))
+
+
+def test_depth_grows_logarithmically():
+    tree = BPlusTree(order=8)
+    for i in range(2000):
+        tree.insert(("v", "l", i), i)
+    assert tree.depth() <= 5

@@ -1,0 +1,72 @@
+"""Cost model: P/T accounting, calibration recovery, monotonicity."""
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core.cost import CostModel, calibrate, pixels_and_tiles, query_cost
+from repro.core.layout import single_tile_layout, uniform_layout
+
+H, W = 192, 320
+GOP = 16
+
+
+def test_untiled_pixels_whole_gop():
+    omega = single_tile_layout(H, W)
+    bbf = {3: [(0, 0, 10, 10)]}  # one box on frame 3
+    p, t = pixels_and_tiles(omega, bbf, gop=GOP, sot_frames=(0, GOP))
+    # decode frames 0..3 of the only tile
+    assert p == H * W * 4
+    assert t == 1
+
+
+def test_tiled_counts_only_touched_tiles():
+    lay = uniform_layout(H, W, 2, 2)
+    bbf = {0: [(0, 0, 10, 10)]}  # top-left corner only
+    p, t = pixels_and_tiles(lay, bbf, gop=GOP, sot_frames=(0, GOP))
+    assert t == 1
+    assert p == lay.tile_pixels(0) * 1
+
+
+def test_multi_gop_accounting():
+    omega = single_tile_layout(H, W)
+    bbf = {0: [(0, 0, 8, 8)], GOP + 4: [(0, 0, 8, 8)]}
+    p, t = pixels_and_tiles(omega, bbf, gop=GOP, sot_frames=(0, 2 * GOP))
+    assert t == 2  # the tile is opened in both GOPs
+    assert p == H * W * 1 + H * W * 5
+
+
+def test_calibrate_recovers_linear_model():
+    rng = np.random.default_rng(0)
+    beta, gamma = 2e-8, 3e-4
+    rows = []
+    for _ in range(200):
+        p = rng.uniform(1e4, 1e7)
+        t = rng.uniform(1, 30)
+        noise = rng.normal(0, 1e-6)
+        rows.append((p, t, beta * p + gamma * t + noise))
+    m = calibrate(rows)
+    assert abs(m.beta - beta) / beta < 0.05
+    assert abs(m.gamma - gamma) / gamma < 0.05
+    assert m.r_squared > 0.99
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(1, 4), st.integers(1, 4))
+def test_cost_monotone_in_boxes(r, c):
+    lay = uniform_layout(H, W, r, c)
+    m = CostModel(beta=1e-8, gamma=1e-4)
+    bbf1 = {0: [(0, 0, 16, 16)]}
+    bbf2 = {0: [(0, 0, 16, 16), (100, 200, 150, 300)]}
+    c1 = query_cost(lay, bbf1, m, gop=GOP, sot_frames=(0, GOP))
+    c2 = query_cost(lay, bbf2, m, gop=GOP, sot_frames=(0, GOP))
+    assert c2 >= c1
+
+
+def test_tiling_never_increases_pixels():
+    """P(L) <= P(omega) for any layout (tiles subset the frame)."""
+    omega = single_tile_layout(H, W)
+    bbf = {f: [(20, 30, 60, 90)] for f in range(GOP)}
+    p_o, _ = pixels_and_tiles(omega, bbf, gop=GOP, sot_frames=(0, GOP))
+    for r, c in [(2, 2), (3, 5), (4, 4)]:
+        lay = uniform_layout(H, W, r, c)
+        p_l, _ = pixels_and_tiles(lay, bbf, gop=GOP, sot_frames=(0, GOP))
+        assert p_l <= p_o

@@ -1,0 +1,36 @@
+"""Deliverable (e) in CI: one full dry-run cell — lower + compile on the
+512-host-device production mesh — in a subprocess (slow: ~1 min)."""
+import os
+import pathlib
+import subprocess
+import sys
+
+import pytest
+
+SRC = str(pathlib.Path(__file__).resolve().parents[1] / "src")
+
+
+@pytest.mark.parametrize("arch,shape", [("smollm-135m", "train_4k")])
+def test_dryrun_cell_compiles(arch, shape, tmp_path):
+    env = dict(os.environ)
+    env["PYTHONPATH"] = SRC
+    code = f"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+from repro.configs.base import get_config, get_shape
+from repro.distributed.ctx import TRAIN_RULES_1POD
+from repro.launch.dryrun import run_cell
+from repro.launch.mesh import make_production_mesh
+
+mesh = make_production_mesh()
+row = run_cell("{arch}", "{shape}", mesh, "16x16", TRAIN_RULES_1POD)
+assert row["status"] == "ok", row.get("error")
+assert row["fits_hbm"], row["memory"]
+assert row["roofline"]["hlo_flops"] > 1e14
+assert row["collectives"]["total_bytes"] > 0
+print("CELL OK", row["roofline"]["dominant"])
+"""
+    out = subprocess.run([sys.executable, "-c", code], capture_output=True,
+                         text=True, env=env, timeout=420)
+    assert out.returncode == 0, out.stdout + out.stderr
+    assert "CELL OK" in out.stdout

@@ -1,0 +1,98 @@
+"""Pallas kernels vs their jnp oracles: shape/dtype sweeps (interpret mode)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.dct.ops import dct_quant_op
+from repro.kernels.dct.ref import dct_quant_ref
+from repro.kernels.flash_attention.ops import flash_attention_op
+from repro.kernels.flash_attention.ref import attention_ref
+from repro.kernels.idct.ops import idct_dequant_op
+from repro.kernels.idct.ref import idct_dequant_ref
+from repro.kernels.sad.ops import frame_motion_blocks, sad_search_op
+from repro.kernels.sad.ref import sad_search_ref
+
+
+@pytest.mark.parametrize("n", [8, 64, 100, 500])
+@pytest.mark.parametrize("qp,intra", [(4, True), (8, False), (16, True)])
+def test_dct_kernel_sweep(n, qp, intra):
+    x = jax.random.normal(jax.random.key(n), (n, 8, 8)) * 60
+    got = dct_quant_op(x, qp=qp, intra=intra, interpret=True)
+    want = dct_quant_ref(x, qp, intra)
+    # round() at exact .5 boundaries may differ by 1 ulp of the int grid
+    assert (np.asarray(got) == np.asarray(want)).mean() > 0.999
+
+
+@pytest.mark.parametrize("n", [8, 77, 256])
+@pytest.mark.parametrize("qp,intra", [(8, True), (12, False)])
+def test_idct_kernel_sweep(n, qp, intra):
+    q = jax.random.randint(jax.random.key(n), (n, 8, 8), -300, 300)
+    q = q.astype(jnp.int16)
+    got = idct_dequant_op(q, qp=qp, intra=intra, interpret=True)
+    want = idct_dequant_ref(q, qp, intra)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               atol=1e-3, rtol=1e-5)
+
+
+def test_dct_idct_roundtrip_via_kernels():
+    x = jax.random.normal(jax.random.key(0), (64, 8, 8)) * 50
+    q = dct_quant_op(x, qp=2, intra=True, interpret=True)
+    y = idct_dequant_op(q, qp=2, intra=True, interpret=True)
+    # random gaussian blocks are worst-case for transform coding: bound the
+    # mean error by half the largest quant step at qp=2
+    assert float(jnp.abs(y - x).mean()) < 4.0
+
+
+@pytest.mark.parametrize("b,r", [(8, 4), (16, 8)])
+def test_sad_kernel_sweep(b, r):
+    n = 32
+    cur = jax.random.normal(jax.random.key(1), (n, b, b)) * 25
+    win = jax.random.normal(jax.random.key(2), (n, b + 2 * r, b + 2 * r)) * 25
+    dy, dx, sad = sad_search_op(cur, win, interpret=True)
+    rdy, rdx, rsad = sad_search_ref(cur, win)
+    np.testing.assert_allclose(np.asarray(sad), np.asarray(rsad), rtol=1e-5)
+    assert (np.asarray(dy) == np.asarray(rdy)).all()
+    assert (np.asarray(dx) == np.asarray(rdx)).all()
+
+
+def test_sad_finds_planted_motion():
+    """Plant a known shift and verify the kernel recovers it."""
+    rng = np.random.default_rng(0)
+    ref = rng.uniform(0, 255, (64, 64)).astype(np.float32)
+    cur = np.roll(ref, shift=(3, -2), axis=(0, 1))
+    blocks, windows = frame_motion_blocks(cur, ref, b=16, r=8)
+    dy, dx, sad = sad_search_op(jnp.asarray(blocks), jnp.asarray(windows),
+                                interpret=True)
+    # cur[y, x] == ref[y-3, x+2]  =>  best match at displacement (r-3, r+2)
+    inner = [5, 6, 9, 10]
+    assert all(int(dy[i]) == 8 - 3 for i in inner)
+    assert all(int(dx[i]) == 8 + 2 for i in inner)
+
+
+@pytest.mark.parametrize("s,h,kv,d", [(128, 4, 4, 32), (256, 4, 2, 64),
+                                      (256, 8, 1, 32)])
+@pytest.mark.parametrize("causal", [True, False])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_attention_sweep(s, h, kv, d, causal, dtype):
+    b = 2
+    q = jax.random.normal(jax.random.key(3), (b, h, s, d), dtype)
+    k = jax.random.normal(jax.random.key(4), (b, kv, s, d), dtype)
+    v = jax.random.normal(jax.random.key(5), (b, kv, s, d), dtype)
+    got = flash_attention_op(q, k, v, causal=causal, bq=64, bkv=64,
+                             interpret=True)
+    want = attention_ref(q, k, v, causal=causal)
+    tol = 2e-2 if dtype == jnp.bfloat16 else 2e-5
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32), atol=tol)
+
+
+def test_flash_attention_block_shapes():
+    """Non-default block shapes must not change the result."""
+    b, h, kv, s, d = 1, 2, 2, 256, 32
+    q = jax.random.normal(jax.random.key(6), (b, h, s, d))
+    k = jax.random.normal(jax.random.key(7), (b, kv, s, d))
+    v = jax.random.normal(jax.random.key(8), (b, kv, s, d))
+    a = flash_attention_op(q, k, v, bq=128, bkv=32, interpret=True)
+    bb = flash_attention_op(q, k, v, bq=32, bkv=128, interpret=True)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(bb), atol=1e-5)

@@ -1,0 +1,113 @@
+"""Tile-layout algebra: unit + hypothesis property tests."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.layout import (ALIGN, MIN_TILE, TileLayout,
+                               coarse_grained_layout, fine_grained_layout,
+                               single_tile_layout, uniform_layout)
+
+H, W = 192, 320
+
+
+def boxes_strategy(h=H, w=W, max_boxes=6):
+    def make_box(data):
+        y1 = data.draw(st.integers(0, h - 9))
+        x1 = data.draw(st.integers(0, w - 9))
+        y2 = data.draw(st.integers(y1 + 1, h))
+        x2 = data.draw(st.integers(x1 + 1, w))
+        return (y1, x1, y2, x2)
+
+    return st.lists(st.builds(lambda: None), min_size=0, max_size=0)
+
+
+box_st = st.tuples(
+    st.integers(0, H - 9), st.integers(0, W - 9),
+    st.integers(1, H), st.integers(1, W),
+).map(lambda t: (min(t[0], t[2] - 1), min(t[1], t[3] - 1),
+                 max(t[2], t[0] + 1), max(t[3], t[1] + 1)))
+
+
+class TestBasics:
+    def test_single_tile(self):
+        lay = single_tile_layout(H, W)
+        assert lay.n_tiles == 1
+        assert lay.tile_rect(0) == (0, 0, H, W)
+        assert lay.total_pixels() == H * W
+
+    def test_uniform_sums(self):
+        lay = uniform_layout(H, W, 3, 5)
+        assert sum(lay.heights) == H
+        assert sum(lay.widths) == W
+        assert lay.n_tiles == 15
+
+    def test_uniform_alignment(self):
+        lay = uniform_layout(H, W, 3, 5)
+        for b in lay.row_offsets()[1:-1]:
+            assert b % ALIGN == 0
+        for b in lay.col_offsets()[1:-1]:
+            assert b % ALIGN == 0
+
+    def test_tiles_intersecting_brute_force(self):
+        lay = uniform_layout(H, W, 4, 4)
+        box = (10, 20, 100, 200)
+        got = set(lay.tiles_intersecting(box))
+        expect = set()
+        for i in range(lay.n_tiles):
+            y1, x1, y2, x2 = lay.tile_rect(i)
+            if y1 < box[2] and box[0] < y2 and x1 < box[3] and box[1] < x2:
+                expect.add(i)
+        assert got == expect
+
+    def test_fine_isolates_separated_boxes(self):
+        boxes = [(0, 0, 32, 32), (160, 280, 190, 318)]
+        lay = fine_grained_layout(H, W, boxes)
+        t0 = set(lay.tiles_intersecting(boxes[0]))
+        t1 = set(lay.tiles_intersecting(boxes[1]))
+        assert not (t0 & t1)
+
+    def test_coarse_single_central_tile(self):
+        boxes = [(64, 96, 96, 160), (80, 120, 120, 200)]
+        lay = coarse_grained_layout(H, W, boxes)
+        tiles = {t for b in boxes for t in lay.tiles_intersecting(b)}
+        assert len(tiles) == 1  # everything inside one big tile
+
+    def test_empty_boxes_is_omega(self):
+        assert fine_grained_layout(H, W, []) == single_tile_layout(H, W)
+
+
+@settings(max_examples=40, deadline=None)
+@given(st.lists(box_st, min_size=1, max_size=6),
+       st.sampled_from(["fine", "coarse"]))
+def test_partition_invariants(boxes, granularity):
+    from repro.core.layout import partition
+
+    lay = partition(H, W, boxes, granularity=granularity)
+    # grid sums to frame
+    assert sum(lay.heights) == H and sum(lay.widths) == W
+    # no boundary crosses any box
+    for b in boxes:
+        assert not lay.boundary_crosses(b), (lay, b)
+    # min tile dims respected
+    assert all(h >= MIN_TILE or lay.n_rows == 1 for h in lay.heights)
+    assert all(w >= MIN_TILE or lay.n_cols == 1 for w in lay.widths)
+    # every box covered by its intersecting tiles
+    for b in boxes:
+        ts = lay.tiles_intersecting(b)
+        assert ts
+        area = 0
+        for t in ts:
+            y1, x1, y2, x2 = lay.tile_rect(t)
+            iy = max(0, min(y2, b[2]) - max(y1, b[0]))
+            ix = max(0, min(x2, b[3]) - max(x1, b[1]))
+            area += iy * ix
+        assert area == (b[2] - b[0]) * (b[3] - b[1])
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(1, 6), st.integers(1, 10))
+def test_uniform_layouts_valid(r, c):
+    lay = uniform_layout(H, W, r, c)
+    assert sum(lay.heights) == H and sum(lay.widths) == W
+    assert all(h > 0 for h in lay.heights)
+    assert all(w > 0 for w in lay.widths)

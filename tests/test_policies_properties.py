@@ -1,0 +1,100 @@
+"""Property tests on policy/detector invariants (hypothesis)."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.codec.encode import EncoderConfig
+from repro.core import TASM, RegretPolicy
+from repro.core.cost import CostModel, pixels_and_tiles
+from repro.core.detector import DetectorConfig, detect
+from repro.core.layout import partition, single_tile_layout
+from repro.core.policies import _alpha_ok, QueryInfo
+from repro.core.storage import SOTRecord
+
+H, W, GOP = 192, 320, 16
+MODEL = CostModel(beta=1.4e-8, gamma=1e-5)
+
+
+def _qi(boxes_by_frame):
+    rec = SOTRecord(0, 0, GOP, single_tile_layout(H, W))
+    return QueryInfo("v", ("car",), (0, GOP), boxes_by_frame, rec)
+
+
+box_st = st.tuples(
+    st.integers(0, H - 16), st.integers(0, W - 16),
+).map(lambda t: (t[0], t[1], min(t[0] + 24, H), min(t[1] + 32, W)))
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.lists(box_st, min_size=1, max_size=5))
+def test_alpha_rule_blocks_only_nonreducing_layouts(boxes):
+    """If _alpha_ok accepts a layout, it must decode < alpha * omega pixels."""
+    bbf = {0: boxes}
+    qi = _qi(bbf)
+    lay = partition(H, W, boxes)
+    omega = single_tile_layout(H, W)
+    p_l, _ = pixels_and_tiles(lay, bbf, gop=GOP, sot_frames=(0, GOP))
+    p_o, _ = pixels_and_tiles(omega, bbf, gop=GOP, sot_frames=(0, GOP))
+    assert (p_l < 0.8 * p_o) == _alpha_ok(lay, qi, GOP, 0.8)
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.lists(box_st, min_size=1, max_size=4))
+def test_partition_pixels_never_exceed_omega(boxes):
+    bbf = {f: boxes for f in range(4)}
+    omega = single_tile_layout(H, W)
+    p_o, _ = pixels_and_tiles(omega, bbf, gop=GOP, sot_frames=(0, GOP))
+    for gran in ("fine", "coarse"):
+        lay = partition(H, W, boxes, granularity=gran)
+        p_l, _ = pixels_and_tiles(lay, bbf, gop=GOP, sot_frames=(0, GOP))
+        assert p_l <= p_o
+
+
+def test_regret_never_adopts_vetoed_layout(small_video):
+    """Alpha-vetoed (SOT, layout) pairs must never be adopted."""
+    frames, dets = small_video
+    pol = RegretPolicy(eta=0.0)  # eager: adopt as soon as regret > 0
+    t = TASM("v", EncoderConfig(gop=16, qp=8), policy=pol, cost_model=MODEL)
+    t.ingest(frames)
+    t.add_detections({f: d for f, d in enumerate(dets)})
+    for _ in range(6):
+        t.scan("car", (0, 32))
+    for key in pol.vetoed:
+        sot_id, labelset = key
+        rec = t.store.sots[sot_id]
+        boxes = [b for f in range(rec.frame_start, rec.frame_end)
+                 for l, b in [(l, b) for l, b in dets[f]] if l in labelset]
+        cand = partition(*frames.shape[1:], boxes)
+        assert rec.layout != cand or cand.n_tiles == 1
+
+
+class TestDetector:
+    def test_full_detects_everything(self, small_video):
+        frames, dets = small_video
+        found, secs = detect(frames, dets, DetectorConfig(kind="full"))
+        n_gt = sum(len(d) for d in dets)
+        n_found = sum(len(v) for v in found.values())
+        assert n_found == n_gt
+        assert secs > 0
+
+    def test_tiny_misses_objects(self, small_video):
+        frames, dets = small_video
+        found, _ = detect(frames, dets, DetectorConfig(kind="tiny", seed=1))
+        n_gt = sum(len(d) for d in dets)
+        n_found = sum(len(v) for v in found.values())
+        assert n_found < n_gt * 0.8
+
+    def test_strided_cheaper_and_propagates(self, small_video):
+        frames, dets = small_video
+        full, s_full = detect(frames, dets, DetectorConfig(kind="full"))
+        strided, s_str = detect(frames, dets,
+                                DetectorConfig(kind="strided", stride=5))
+        assert s_str < s_full / 3
+        # every frame still has (propagated) detections
+        assert set(strided) == set(full)
+
+    def test_bgsub_finds_motion(self, small_video):
+        frames, dets = small_video
+        found, secs = detect(frames, dets, DetectorConfig(kind="bgsub"))
+        assert len(found) > len(frames) // 2
+        assert all(l == "object" for v in found.values() for l, _ in v)

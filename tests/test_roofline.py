@@ -1,0 +1,125 @@
+"""Roofline accounting: jaxpr FLOP counter and HLO collective-bytes walker."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.launch.analytic_cost import count_flops, hbm_bytes_per_chip
+from repro.launch.roofline import collective_bytes_from_hlo
+
+
+class TestJaxprFlops:
+    def test_matmul(self):
+        n = 64
+        a = jax.ShapeDtypeStruct((n, n), jnp.float32)
+        got = count_flops(lambda x, y: x @ y, a, a)
+        assert got == 2 * n ** 3
+
+    def test_scan_multiplies_by_length(self):
+        n, L = 32, 10
+        w = jax.ShapeDtypeStruct((n, n), jnp.float32)
+
+        def f(w):
+            def body(h, _):
+                return h @ w, None
+
+            h, _ = jax.lax.scan(body, jnp.eye(n), None, length=L)
+            return h
+
+        assert count_flops(f, w) == L * 2 * n ** 3
+
+    def test_nested_scan(self):
+        n, L1, L2 = 16, 3, 5
+        w = jax.ShapeDtypeStruct((n, n), jnp.float32)
+
+        def f(w):
+            def outer(h, _):
+                def inner(h2, _):
+                    return h2 @ w, None
+
+                h, _ = jax.lax.scan(inner, h, None, length=L2)
+                return h, None
+
+            h, _ = jax.lax.scan(outer, jnp.eye(n), None, length=L1)
+            return h
+
+        assert count_flops(f, w) == L1 * L2 * 2 * n ** 3
+
+    def test_grad_includes_backward(self):
+        n = 32
+        a = jax.ShapeDtypeStruct((n, n), jnp.float32)
+
+        def loss(w, x):
+            return jnp.sum((x @ w) ** 2)
+
+        fwd = count_flops(loss, a, a)
+        both = count_flops(jax.grad(loss), a, a)
+        assert both >= 1.9 * fwd  # fwd matmul + x^T @ g in bwd
+
+    def test_remat_recompute_counted(self):
+        n = 32
+        a = jax.ShapeDtypeStruct((n, n), jnp.float32)
+
+        def loss(w, x):
+            f = jax.checkpoint(lambda x: jnp.tanh(x @ w) @ w)
+            return jnp.sum(f(x))
+
+        plain = count_flops(jax.grad(lambda w, x: jnp.sum(jnp.tanh(x @ w) @ w)), a, a)
+        remat = count_flops(jax.grad(loss), a, a)
+        assert remat >= plain  # recompute adds forward flops
+
+
+SYNTH_HLO = """
+HloModule test
+
+%cond_comp (p: (s32[], f32[128,256])) -> pred[] {
+  %p = (s32[], f32[128,256]) parameter(0)
+  %iter = s32[] get-tuple-element(%p), index=0
+  %trip = s32[] constant(12)
+  ROOT %lt = pred[] compare(%iter, %trip), direction=LT
+}
+
+%body_comp (p: (s32[], f32[128,256])) -> (s32[], f32[128,256]) {
+  %p = (s32[], f32[128,256]) parameter(0)
+  %x = f32[128,256] get-tuple-element(%p), index=1
+  %ar = f32[128,256] all-reduce(%x), replica_groups={}, to_apply=%sum
+  %i = s32[] get-tuple-element(%p), index=0
+  ROOT %t = (s32[], f32[128,256]) tuple(%i, %ar)
+}
+
+ENTRY %main (a: f32[128,256]) -> f32[128,256] {
+  %a = f32[128,256] parameter(0)
+  %ag = f32[256,256] all-gather(%a), dimensions={0}
+  %w = (s32[], f32[128,256]) while((s32[] %c0, f32[128,256] %a)), condition=%cond_comp, body=%body_comp
+  ROOT %out = f32[128,256] get-tuple-element(%w), index=1
+}
+"""
+
+
+class TestCollectiveWalk:
+    def test_while_trip_multiplication(self):
+        got = collective_bytes_from_hlo(SYNTH_HLO)
+        ar_bytes = 128 * 256 * 4 * 2.0  # all-reduce multiplier 2
+        ag_bytes = 256 * 256 * 4
+        assert got["bytes_by_kind"]["all-reduce"] == ar_bytes * 12
+        assert got["bytes_by_kind"]["all-gather"] == ag_bytes
+        assert got["count_by_kind"] == {"all-reduce": 1, "all-gather": 1}
+
+    def test_empty_module(self):
+        got = collective_bytes_from_hlo("ENTRY %m (x: f32[4]) -> f32[4] {\n}")
+        assert got["total_bytes"] == 0.0
+
+
+class TestHbmModel:
+    def test_decode_dominated_by_weights_and_cache(self):
+        from repro.configs.base import get_config, get_shape
+        import jax as _jax
+
+        class FakeMesh:
+            shape = {"data": 16, "model": 16}
+
+        cfg = get_config("qwen2-72b")
+        flows = hbm_bytes_per_chip(cfg, get_shape("decode_32k"), FakeMesh(),
+                                   mode="decode",
+                                   cache_bytes_total=4.3e12)
+        assert flows["weights"] > 0.5 * 72e9 * 2 / 16
+        assert flows["kv_cache_read"] > flows["activations"]

@@ -1,0 +1,68 @@
+"""Semantic index: CNF predicate semantics + API."""
+from repro.core.semantic_index import SemanticIndex, parse_predicate
+
+
+def make_index():
+    ix = SemanticIndex(order=4)
+    ix.add("v", 0, "car", (0, 0, 10, 10))
+    ix.add("v", 0, "car", (50, 50, 60, 60))
+    ix.add("v", 0, "red", (5, 5, 20, 20))
+    ix.add("v", 1, "car", (2, 2, 12, 12))
+    ix.add("v", 5, "person", (30, 30, 44, 40))
+    return ix
+
+
+def test_single_label():
+    ix = make_index()
+    got = ix.query("v", "car")
+    assert set(got) == {0, 1}
+    assert len(got[0]) == 2
+
+
+def test_disjunction_union():
+    ix = make_index()
+    got = ix.query("v", ["car", "person"])  # car OR person
+    assert set(got) == {0, 1, 5}
+
+
+def test_conjunction_intersection():
+    ix = make_index()
+    got = ix.query("v", [["car"], ["red"]])  # car AND red
+    assert set(got) == {0}
+    assert got[0] == [(5, 5, 10, 10)]  # the overlap region
+
+
+def test_conjunction_empty_when_disjoint():
+    ix = make_index()
+    got = ix.query("v", [["person"], ["red"]])
+    assert got == {}
+
+
+def test_temporal_predicate():
+    ix = make_index()
+    assert set(ix.query("v", "car", (1, 10))) == {1}
+
+
+def test_add_metadata_signature_xy_order():
+    ix = SemanticIndex()
+    ix.add_metadata("v", 7, "car", 10, 20, 30, 40)  # x1,y1,x2,y2
+    got = ix.query("v", "car")
+    assert got[7] == [(20, 10, 40, 30)]  # stored as (y1,x1,y2,x2)
+
+
+def test_parse_predicate_forms():
+    assert parse_predicate("car") == (("car",),)
+    assert parse_predicate(["car", "bike"]) == (("car", "bike"),)
+    assert parse_predicate([["car"], ["red"]]) == (("car",), ("red",))
+
+
+def test_has_locations():
+    ix = make_index()
+    assert ix.has_locations("v", ["car"], (0, 2))
+    assert not ix.has_locations("v", ["person"], (0, 2))
+
+
+def test_stats_nonempty():
+    ix = make_index()
+    s = ix.stats()
+    assert s["entries"] == 5 and s["depth"] >= 1

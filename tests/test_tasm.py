@@ -1,0 +1,137 @@
+"""TASM facade + storage + policies end to end."""
+import numpy as np
+import pytest
+
+from repro.codec.encode import EncoderConfig
+from repro.core import (TASM, KQKOPolicy, LazyPolicy, MorePolicy,
+                        NoTilingPolicy, PretileAllPolicy, RegretPolicy,
+                        uniform_layout)
+from repro.core.cost import CostModel
+
+ENC = EncoderConfig(gop=16, qp=8)
+# deterministic cost model so policy tests do not depend on host speed
+MODEL = CostModel(beta=1.4e-8, gamma=1e-5)
+MODEL.encode_per_pixel = 3.4e-8
+MODEL.encode_per_tile = 1e-4
+
+
+def make_tasm(frames, dets, policy=None, **kw):
+    t = TASM("v", ENC, policy=policy or NoTilingPolicy(), cost_model=MODEL, **kw)
+    t.ingest(frames)
+    t.add_detections({f: d for f, d in enumerate(dets)})
+    return t
+
+
+class TestScan:
+    def test_scan_returns_correct_pixels(self, small_video):
+        frames, dets = small_video
+        t = make_tasm(frames, dets)
+        res = t.scan("car", (0, 16))
+        assert res.stats.regions > 0
+        for f, box, px in res.regions:
+            y1, x1, y2, x2 = box
+            src = frames[f, y1:y2, x1:x2]
+            assert np.abs(px - src).mean() < 6.0  # lossy but close
+
+    def test_scan_empty_label(self, small_video):
+        frames, dets = small_video
+        t = make_tasm(frames, dets)
+        res = t.scan("unicorn")
+        assert res.regions == [] and res.stats.pixels_decoded == 0
+
+    def test_temporal_restriction(self, small_video):
+        frames, dets = small_video
+        t = make_tasm(frames, dets)
+        res = t.scan("car", (0, 8))
+        assert all(f < 8 for f, _, _ in res.regions)
+
+    def test_tiled_scan_decodes_fewer_pixels(self, small_video):
+        frames, dets = small_video
+        t1 = make_tasm(frames, dets)
+        p1 = t1.scan("car", (0, 16)).stats.pixels_decoded
+        t2 = make_tasm(frames, dets, policy=PretileAllPolicy())
+        # re-run ingest-time pretile with detections now present
+        for rec_id, lay in t2.policy.on_ingest(t2.index, t2.store, "v",
+                                               frames.shape[1:]).items():
+            t2.store.retile(rec_id, lay)
+        p2 = t2.scan("car", (0, 16)).stats.pixels_decoded
+        assert p2 < p1
+
+    def test_what_if_interface(self, small_video):
+        frames, dets = small_video
+        t = make_tasm(frames, dets)
+        H, W = frames.shape[1:]
+        cur = t.what_if("car", {})
+        alt = t.what_if("car", {0: uniform_layout(H, W, 2, 2),
+                                1: uniform_layout(H, W, 2, 2)})
+        assert alt <= cur  # tiling can only reduce estimated pixels
+
+
+class TestPolicies:
+    def test_regret_retiles_after_repeats(self, small_video):
+        frames, dets = small_video
+        t = make_tasm(frames, dets, policy=RegretPolicy())
+        for _ in range(8):
+            t.scan("car", (0, 16))
+        assert any(rec.layout.n_tiles > 1 for rec in t.store.sots[:1])
+
+    def test_regret_respects_eta(self, small_video):
+        frames, dets = small_video
+        t = make_tasm(frames, dets, policy=RegretPolicy(eta=1e9))
+        for _ in range(8):
+            t.scan("car", (0, 16))
+        assert all(rec.layout.n_tiles == 1 for rec in t.store.sots)
+
+    def test_lazy_tiles_when_locations_known(self, small_video):
+        frames, dets = small_video
+        t = make_tasm(frames, dets, policy=LazyPolicy(["car"]))
+        t.scan("car", (0, 16))
+        assert t.store.sots[0].layout.n_tiles > 1
+
+    def test_lazy_waits_for_unknown_objects(self, small_video):
+        frames, dets = small_video
+        t = TASM("v", ENC, policy=LazyPolicy(["car", "ghost"]),
+                 cost_model=MODEL)
+        t.ingest(frames)
+        t.add_detections({f: d for f, d in enumerate(dets)})
+        t.scan("car", (0, 16))
+        # 'ghost' never detected: the SOT must remain untiled
+        assert t.store.sots[0].layout.n_tiles == 1
+
+    def test_more_policy_accumulates_labels(self, small_video):
+        frames, dets = small_video
+        t = make_tasm(frames, dets, policy=MorePolicy())
+        t.scan("car", (0, 16))
+        lay_car = t.store.sots[0].layout
+        t.scan("person", (0, 16))
+        lay_both = t.store.sots[0].layout
+        assert lay_car.n_tiles > 1
+        assert lay_both != lay_car  # re-tiled around {car, person}
+
+    def test_kqko_pretile(self, small_video):
+        frames, dets = small_video
+        t = TASM("v", ENC, policy=KQKOPolicy(["car"]), cost_model=MODEL)
+        t.add_detections({f: d for f, d in enumerate(dets)})
+        t.ingest(frames)
+        assert any(rec.layout.n_tiles > 1 for rec in t.store.sots)
+
+
+class TestStorageDisk:
+    def test_on_disk_layout(self, small_video, tmp_path):
+        frames, dets = small_video
+        t = TASM("v", ENC, cost_model=MODEL, store_root=str(tmp_path))
+        t.ingest(frames)
+        t.add_detections({f: d for f, d in enumerate(dets)})
+        # paper Fig. 1 directory structure
+        assert (tmp_path / "v" / "frames_0-15" / "tile0.npz").exists()
+        res = t.scan("car", (0, 16))
+        assert res.stats.regions > 0
+        # retile rewrites the SOT directory
+        H, W = frames.shape[1:]
+        t.store.retile(0, uniform_layout(H, W, 2, 2))
+        assert (tmp_path / "v" / "frames_0-15" / "tile3.npz").exists()
+
+    def test_storage_bytes_tracked(self, small_video):
+        frames, dets = small_video
+        t = make_tasm(frames, dets)
+        assert t.storage_bytes() > 0
