@@ -18,14 +18,12 @@ approaches eventually beat not-tiled in W6 while pre-tiling loses.
 from __future__ import annotations
 
 import os
-import time
 
 import numpy as np
 
 from benchmarks.common import ENC, corpus_video, emit, shared_cost_model
 from repro.core import (MorePolicy, NoTilingPolicy, PretileAllPolicy,
-                        RegretPolicy)
-from repro.core.tasm import TASM
+                        RegretPolicy, VideoStore)
 
 QUICK = bool(int(os.environ.get("REPRO_QUICK", "0")))
 N_FRAMES = 192 if QUICK else 384
@@ -91,14 +89,15 @@ def make_policy(strategy: str):
 
 
 def run_strategy(strategy: str, frames, dets, queries, model):
-    tasm = TASM("v", ENC, policy=make_policy(strategy), cost_model=model)
-    tasm.add_detections({f: d for f, d in enumerate(dets)})
-    t0 = time.perf_counter()
-    pretile_s = tasm.ingest(frames)
+    store = VideoStore()
+    store.add_video("v", encoder=ENC, policy=make_policy(strategy),
+                    cost_model=model)
+    store.add_detections("v", {f: d for f, d in enumerate(dets)})
+    pretile_s = store.ingest("v", frames).pretile_s
     per_query = []
     first_extra = pretile_s if strategy == "all_objects" else 0.0
     for label, t_range in queries:
-        res = tasm.scan(label, t_range)
+        res = store.scan("v").labels(label).frames(*t_range).execute()
         cost = res.stats.decode_s + res.stats.lookup_s + res.stats.retile_s
         per_query.append(cost + first_extra)
         first_extra = 0.0

@@ -22,10 +22,9 @@ import numpy as np
 
 from benchmarks.common import ENC, corpus_video, emit, shared_cost_model
 from benchmarks.fig11_workloads import _zipf_starts
-from repro.core import PretileAllPolicy, RegretPolicy
+from repro.core import PretileAllPolicy, RegretPolicy, VideoStore
 from repro.core.layout import partition
 from repro.core.detector import DetectorConfig, detect
-from repro.core.tasm import TASM
 
 QUICK = bool(int(os.environ.get("REPRO_QUICK", "0")))
 N_FRAMES = 384 if QUICK else 768
@@ -48,19 +47,20 @@ def run():
     full_cfg = DetectorConfig(kind="full")
 
     def run_one(name: str):
-        tasm = TASM("v", ENC, policy=RegretPolicy(), cost_model=model)
+        store = VideoStore()
+        entry = store.add_video("v", encoder=ENC, policy=RegretPolicy(),
+                                cost_model=model)
         upfront = 0.0
         initial_layouts = None
         if name == "pretile_detect_full":
             found, secs = detect(frames, dets, full_cfg)
-            tasm.add_detections(found)
+            store.add_detections("v", found)
             upfront += secs
-            tasm.policy = RegretPolicy()
-            pre = PretileAllPolicy()
         elif name == "pretile_bgsub":
             found, secs = detect(frames, dets, DetectorConfig(kind="bgsub"))
             upfront += secs
-            # bgsub boxes drive LAYOUTS only (labels are just "object")
+            # bgsub boxes drive LAYOUTS only (labels are just "object");
+            # edge-delivered layouts are free at ingest (pretile_s == 0)
             initial_layouts = {}
             for rec_id in range(N_FRAMES // ENC.gop):
                 lo, hi = rec_id * ENC.gop, (rec_id + 1) * ENC.gop
@@ -68,15 +68,13 @@ def run():
                          for _, b in found.get(f, [])]
                 if boxes:
                     initial_layouts[rec_id] = partition(H, W, boxes)
-            pre = None
-        else:
-            pre = None
         if name == "pretile_detect_full":
-            tasm.policy = pre
-            upfront += tasm.ingest(frames)
-            tasm.policy = RegretPolicy()
+            entry.policy = PretileAllPolicy()
+            upfront += store.ingest("v", frames).pretile_s
+            entry.policy = RegretPolicy()
         else:
-            upfront += tasm.ingest(frames, initial_layouts=initial_layouts)
+            upfront += store.ingest(
+                "v", frames, initial_layouts=initial_layouts).pretile_s
 
         detected: set[int] = set()
         if name == "pretile_detect_full":
@@ -88,21 +86,22 @@ def run():
             if todo:  # lazy detection at query time (the query processor)
                 found, secs = detect(frames, dets, full_cfg,
                                      (min(todo), max(todo) + 1))
-                tasm.add_detections(found)
+                store.add_detections("v", found)
                 detected |= set(range(*t_range))
                 cost += secs
-            res = tasm.scan(label, t_range)
+            res = store.scan("v").labels(label).frames(*t_range).execute()
             cost += res.stats.decode_s + res.stats.lookup_s + res.stats.retile_s
             per_query.append(cost)
         return np.cumsum(per_query)
 
     # baseline: untiled, but queries still pay lazy detection (same for all)
-    base_t = TASM("v", ENC, cost_model=model)
-    base_t.add_detections({f: d for f, d in enumerate(dets)})
-    base_t.ingest(frames)
+    base_store = VideoStore()
+    base_store.add_video("v", encoder=ENC, cost_model=model)
+    base_store.add_detections("v", {f: d for f, d in enumerate(dets)})
+    base_store.ingest("v", frames)
     base = [0.0]
     for label, t_range in queries:
-        r = base_t.scan(label, t_range)
+        r = base_store.scan("v").labels(label).frames(*t_range).execute()
         base.append(r.stats.decode_s + r.stats.lookup_s)
     base = np.cumsum(base)
 

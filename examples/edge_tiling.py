@@ -2,14 +2,15 @@
 captured — full YOLO every k frames (an edge GPU can't run every frame) —
 and the video arrives at the VDBMS already tiled around O_Q, with the
 semantic index pre-initialized.  Compare against bgsub- and tiny-detector
-edge configurations (§5.2.4).
+edge configurations (§5.2.4).  Each configuration is one video in a single
+VideoStore catalog, so one engine serves them all.
 
     PYTHONPATH=src python examples/edge_tiling.py
 """
 import numpy as np
 
 from repro.codec.encode import EncoderConfig
-from repro.core import TASM, NoTilingPolicy
+from repro.core import NoTilingPolicy, VideoStore
 from repro.core.calibrate import calibrated_cost_model
 from repro.core.detector import DetectorConfig, detect
 from repro.core.layout import partition
@@ -22,6 +23,9 @@ H, W = frames.shape[1:]
 model = calibrated_cost_model(ENC, seeds=(0,), repeats=1)
 O_Q = ["car"]  # the VDBMS tells the camera which objects queries will target
 
+store = VideoStore(default_encoder=ENC, default_cost_model=model,
+                   default_policy=NoTilingPolicy())
+
 
 def edge_ingest(det_cfg: DetectorConfig, name: str):
     found, det_secs = detect(frames, gt, det_cfg)
@@ -32,24 +36,25 @@ def edge_ingest(det_cfg: DetectorConfig, name: str):
                  for l, b in found.get(f, []) if l in O_Q or l == "object"]
         if boxes:
             layouts[g] = partition(H, W, boxes)
-    tasm = TASM(name, ENC, policy=NoTilingPolicy(), cost_model=model)
-    tasm.add_detections(found)          # pre-initialized semantic index
-    tasm.ingest(frames, initial_layouts=layouts)
+    store.add_video(name)
+    store.add_detections(name, found)   # pre-initialized semantic index
+    store.ingest(name, frames, initial_layouts=layouts)
     # ground truth boxes are what queries ultimately retrieve
-    tasm.add_detections({f: d for f, d in enumerate(gt)})
+    store.add_detections(name, {f: d for f, d in enumerate(gt)})
     secs = 0.0
     for _ in range(6):
-        st = tasm.scan("car", (0, 64)).stats
+        st = store.scan(name).labels("car").frames(0, 64).execute().stats
         secs += st.decode_s + st.lookup_s
     return det_secs, secs, layouts
 
 
-# baseline: cloud ingest, no tiles
-base = TASM("untiled", ENC, cost_model=model)
-base.ingest(frames)
-base.add_detections({f: d for f, d in enumerate(gt)})
-base_secs = sum((base.scan("car", (0, 64)).stats.decode_s
-                 + base.scan("car", (0, 64)).stats.lookup_s) for _ in range(3))
+# baseline: cloud ingest, no tiles — just another catalog entry
+store.add_video("untiled")
+store.ingest("untiled", frames)
+store.add_detections("untiled", {f: d for f, d in enumerate(gt)})
+base_q = store.scan("untiled").labels("car").frames(0, 64)
+base_secs = sum((base_q.execute().stats.decode_s
+                 + base_q.execute().stats.lookup_s) for _ in range(3))
 
 print(f"{'edge detector':28s} {'on-camera s':>12s} {'6-query decode s':>17s}")
 for name, cfg in [
@@ -62,3 +67,7 @@ for name, cfg in [
     print(f"{name:28s} {det_secs:12.2f} {q_secs:17.3f}   "
           f"({len(layouts)} GOPs pre-tiled)")
 print(f"{'(untiled cloud ingest)':28s} {'-':>12s} {base_secs * 2:17.3f}")
+print(f"\ncatalog now holds {len(store)} videos: {store.videos()}")
+plan = store.scan(store.videos()).labels("car").frames(0, 16).explain()
+print(f"one cross-video plan touches {len(plan.sot_scans)} SOTs, "
+      f"est {plan.est_cost_s * 1e3:.1f} ms")

@@ -6,8 +6,8 @@ queries move car -> person -> car) and print the cumulative cost table.
 import numpy as np
 
 from repro.codec.encode import EncoderConfig
-from repro.core import (TASM, MorePolicy, NoTilingPolicy, PretileAllPolicy,
-                        RegretPolicy)
+from repro.core import (MorePolicy, NoTilingPolicy, PretileAllPolicy,
+                        RegretPolicy, VideoStore)
 from repro.core.calibrate import calibrated_cost_model
 from repro.data.video_gen import generate, sparse_spec
 
@@ -29,18 +29,20 @@ for name, policy_cls in [("not_tiled", NoTilingPolicy),
                          ("all_objects", PretileAllPolicy),
                          ("incremental_more", MorePolicy),
                          ("incremental_regret", RegretPolicy)]:
-    tasm = TASM("v", ENC, policy=policy_cls(), cost_model=model)
-    tasm.add_detections({f: d for f, d in enumerate(dets)})
-    pre = tasm.ingest(frames)
+    store = VideoStore()
+    store.add_video("v", encoder=ENC, policy=policy_cls(), cost_model=model)
+    store.add_detections("v", {f: d for f, d in enumerate(dets)})
+    pre = store.ingest("v", frames).pretile_s
     cum = pre if name == "all_objects" else 0.0
     series = []
     for label, t_range in queries:
-        st = tasm.scan(label, t_range).stats
+        st = store.scan("v").labels(label).frames(*t_range).execute().stats
         cum += st.decode_s + st.lookup_s + st.retile_s
         series.append(cum)
     results[name] = np.array(series)
-    print(f"{name:20s} final cumulative = {cum:6.2f}s  "
-          f"layouts: {[r.layout.describe() for r in tasm.store.sots[:6]]}...")
+    print(f"{name:20s} final cumulative = {cum:6.2f}s  layouts: "
+          f"{[r.layout.describe() for r in store.video('v').store.sots[:6]]}"
+          "...")
 
 base = results["not_tiled"]
 print("\ncumulative cost normalized to not_tiled (paper Fig. 11d):")

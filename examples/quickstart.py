@@ -1,12 +1,15 @@
-"""Quickstart: ingest a video into TASM, run object queries, watch the
-storage manager adapt its tile layout (paper §1's amber-alert flow).
+"""Quickstart: ingest a camera feed into the VideoStore engine, run
+declarative scan queries, watch the storage manager adapt its tile layout
+(paper §1's amber-alert flow) — and reopen the catalog from its manifest.
 
     PYTHONPATH=src python examples/quickstart.py
 """
+import tempfile
+
 import numpy as np
 
 from repro.codec.encode import EncoderConfig
-from repro.core import TASM, RegretPolicy
+from repro.core import RegretPolicy, VideoStore
 from repro.core.calibrate import calibrated_cost_model
 from repro.data.video_gen import generate, sparse_spec
 
@@ -16,36 +19,56 @@ frames, detections = generate(spec)
 print(f"video: {frames.shape}, objects: "
       f"{sorted({l for d in detections for l, _ in d})}")
 
-# 2. TASM with the regret-based incremental tiling policy (§4.4)
+# 2. a VideoStore catalog backed by disk, with the regret-based incremental
+#    tiling policy (§4.4) for this camera
+root = tempfile.mkdtemp(prefix="tasm_store_")
 model = calibrated_cost_model(EncoderConfig(), seeds=(0,), repeats=1)
-tasm = TASM("traffic", EncoderConfig(gop=16, qp=8),
-            policy=RegretPolicy(), cost_model=model)
-tasm.ingest(frames)
-print(f"ingested untiled: {tasm.storage_bytes() / 1e3:.0f} KB")
+store = VideoStore(store_root=root)
+store.add_video("traffic", encoder=EncoderConfig(gop=16, qp=8),
+                policy=RegretPolicy(), cost_model=model)
+store.ingest("traffic", frames)
+print(f"ingested untiled: {store.storage_bytes('traffic') / 1e3:.0f} KB "
+      f"-> manifest at {store.manifest_path}")
 
 # 3. the query processor detects objects as a byproduct of queries and feeds
 #    the semantic index via ADDMETADATA
 for f, dets in enumerate(detections):
     for label, (y1, x1, y2, x2) in dets:
-        tasm.add_metadata("traffic", f, label, x1, y1, x2, y2)
-print("semantic index:", tasm.index.stats())
+        store.add_metadata("traffic", f, label, x1, y1, x2, y2)
+print("semantic index:", store.video("traffic").index.stats())
 
-# 4. issue repeated SCAN(video, L, T) queries; the layout evolves
+# 4. plan/execute split: EXPLAIN shows the SOTs/tiles the engine would
+#    decode, with estimated cost from the what-if interface — no decoding
+query = store.scan("traffic").labels("car").frames(0, 64)
+print("\n" + query.explain().describe() + "\n")
+
+# 5. issue repeated declarative queries; the layout evolves under the policy
 for i in range(14):
-    res = tasm.scan("car", (0, 64))
-    s = res.stats
+    s = query.execute().stats
     print(f"q{i}: decode={s.decode_s * 1e3:6.1f} ms  "
           f"pixels={s.pixels_decoded / 1e6:5.2f} M  tiles={s.tiles_decoded:3.0f}"
           f"  retile={s.retile_s * 1e3:6.1f} ms")
 
-print("final layouts:", [r.layout.describe() for r in tasm.store.sots])
+print("final layouts:",
+      [r.layout.describe() for r in store.video("traffic").store.sots])
+print("\nafter adaptation:\n" + query.explain().describe())
 
-# 5. a CNF query: red AND car would intersect label boxes; here: car OR person
-res = tasm.scan(["car", "person"], (0, 32))
-print(f"disjunctive query returned {len(res.regions)} regions")
+# 6. disjunctive predicate (one clause: car OR person), limited
+res = store.scan("traffic").labels("car", "person").frames(0, 32) \
+           .limit(50).execute()
+print(f"\ndisjunctive query returned {len(res.regions)} regions (limit 50)")
 
-# 6. verify pixels: the decoded crop matches the source (lossy codec)
+# 7. verify pixels: the decoded crop matches the source (lossy codec)
 f, box, px = res.regions[0]
 y1, x1, y2, x2 = box
 err = np.abs(px - frames[f, y1:y2, x1:x2]).mean()
 print(f"mean |decoded - source| = {err:.2f} (8-bit scale)")
+
+# 8. reopen the catalog from its on-disk manifest: no re-ingest needed
+reopened = VideoStore(store_root=root)
+res2 = reopened.scan("traffic").labels("car").frames(0, 64).execute()
+same = all(np.array_equal(p1, p2) for (_, _, p1), (_, _, p2)
+           in zip(store.scan("traffic").labels("car").frames(0, 64)
+                  .execute().regions, res2.regions))
+print(f"reopened {reopened.videos()} from manifest; "
+      f"scan bit-identical: {same}")

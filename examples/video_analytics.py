@@ -1,5 +1,5 @@
-"""Full paper pipeline (Fig. 2): TASM storage manager feeds pixel regions to
-an analytics model (the VLM family from the assigned pool, reduced) — the
+"""Full paper pipeline (Fig. 2): the VideoStore engine feeds pixel regions
+to an analytics model (the VLM family from the assigned pool, reduced) — the
 query processor writes its detections back through ADDMETADATA, closing the
 loop that the regret policy learns layouts from.
 
@@ -13,7 +13,7 @@ import numpy as np
 
 from repro.codec.encode import EncoderConfig
 from repro.configs.base import get_config, reduce_config
-from repro.core import TASM, RegretPolicy
+from repro.core import RegretPolicy, VideoStore
 from repro.core.calibrate import calibrated_cost_model
 from repro.data.video_gen import generate, sparse_spec
 from repro.models import zoo
@@ -21,22 +21,25 @@ from repro.train.data import tasm_region_batches
 
 ENC = EncoderConfig(gop=16, qp=8)
 
-# --- storage layer: TASM with incremental tiling -------------------------
+# --- storage layer: VideoStore engine with incremental tiling ------------
 spec = sparse_spec(seed=4, n_frames=96)
 frames, dets = generate(spec)
 model = calibrated_cost_model(ENC, seeds=(0,), repeats=1)
-tasm = TASM("cam0", ENC, policy=RegretPolicy(), cost_model=model)
-tasm.ingest(frames)
-tasm.add_detections({f: d for f, d in enumerate(dets)})
+store = VideoStore()
+store.add_video("cam0", encoder=ENC, policy=RegretPolicy(),
+                cost_model=model)
+store.ingest("cam0", frames)
+store.add_detections("cam0", {f: d for f, d in enumerate(dets)})
 
 # --- analytics model: internvl2-family backbone (reduced) ----------------
 cfg = reduce_config(get_config("internvl2-26b"))
 params = zoo.init_model(cfg, jax.random.key(0))
 print(f"analytics backbone: {cfg.name} ({cfg.param_count() / 1e3:.0f}K params)")
 
-# TASM streams decoded object crops; the 'frontend stub' turns each crop
-# into patch embeddings for the backbone
-batches = tasm_region_batches(tasm, ["car", "person"], batch=4, crop=16)
+# the engine streams decoded object crops; the 'frontend stub' turns each
+# crop into patch embeddings for the backbone
+batches = tasm_region_batches(store, ["car", "person"], batch=4, crop=16,
+                              video="cam0")
 
 
 @jax.jit
@@ -60,6 +63,6 @@ for i in range(3):
           f"-> logits {logits.shape}, finite={bool(np.isfinite(np.asarray(logits)).all())}")
 
 print("layouts after analytics queries:",
-      [r.layout.describe() for r in tasm.store.sots])
+      [r.layout.describe() for r in store.video("cam0").store.sots])
 print("per-query history (decode ms):",
-      [f"{s.decode_s * 1e3:.0f}" for s in tasm.history[-8:]])
+      [f"{s.decode_s * 1e3:.0f}" for s in store.video("cam0").history[-8:]])

@@ -1,10 +1,13 @@
 """TASM core — the paper's primary contribution.
 
 Tile layouts, cost model + what-if, B+-tree semantic index, KQKO optimizer,
-incremental (lazy / more / regret) tiling policies, tile store, and the TASM
-facade (SCAN / ADDMETADATA).
+incremental (lazy / more / regret) tiling policies, tile store, and the
+VideoStore engine: a multi-video catalog with a declarative scan-query
+builder and an explicit plan/execute split (the deprecated single-video
+``TASM`` facade remains as a shim).
 """
 from repro.core.cost import CostModel, calibrate, pixels_and_tiles, query_cost
+from repro.core.engine import IngestStats, VideoEntry, VideoStore
 from repro.core.layout import (
     TileLayout,
     coarse_grained_layout,
@@ -21,6 +24,8 @@ from repro.core.policies import (
     PretileAllPolicy,
     RegretPolicy,
 )
+from repro.core.query import (PhysicalPlan, ScanPlan, ScanQuery, ScanResult,
+                              ScanStats, SOTScan)
 from repro.core.semantic_index import SemanticIndex
 from repro.core.storage import TileStore
-from repro.core.tasm import TASM, ScanResult, ScanStats
+from repro.core.tasm import TASM

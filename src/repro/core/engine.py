@@ -1,0 +1,481 @@
+"""VideoStore: the multi-video storage engine (paper §3, Fig. 2, scaled up).
+
+Where the seed exposed a per-video ``TASM`` facade, :class:`VideoStore` is a
+*catalog*: many named videos, each with its own physical configuration
+(:class:`EncoderConfig`, tiling :class:`Policy`, calibrated
+:class:`CostModel`, :class:`TileStore`, :class:`SemanticIndex`), behind one
+declarative query surface::
+
+    store = VideoStore(store_root="/data/tasm")
+    store.add_video("cam0", encoder=EncoderConfig(gop=16), policy=RegretPolicy())
+    store.ingest("cam0", frames)
+    store.add_detections("cam0", dets_by_frame)
+    res  = store.scan("cam0").labels("car").frames(0, 96).execute()
+    plan = store.scan(["cam0", "cam1"]).labels("car").explain()  # no decode
+
+Plan/execute split: the builder produces a logical :class:`ScanPlan`;
+:meth:`VideoStore.lower` turns it into a :class:`PhysicalPlan` (the exact
+SOTs and tile indices to decode, costed through the §4.1 what-if interface);
+:meth:`VideoStore.execute` batches the planned tile decodes across SOTs
+through a thread pool, assembles regions deterministically (identical pixels
+and ordering to the old serial loop), then runs the per-SOT policy hooks.
+
+Persistence: with ``store_root`` set, the catalog writes a JSON manifest
+(``<root>/manifest.json``) holding every video's encoder, policy spec, cost
+model, SOT records (frame spans, layouts, epochs, sizes) and semantic-index
+entries.  A ``VideoStore(store_root=...)`` in a fresh process reopens the
+manifest and serves scans without re-ingesting.  Policy *state* (e.g.
+accumulated regret) is intentionally not persisted — policies restart cold.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+import pathlib
+import shutil
+import time
+from concurrent.futures import ThreadPoolExecutor
+from dataclasses import dataclass, field
+from typing import Iterator, Optional
+
+import numpy as np
+
+from repro.codec.encode import EncoderConfig
+from repro.core.cost import CostModel, pixels_and_tiles
+from repro.core.layout import BBox, TileLayout
+from repro.core.policies import (NoTilingPolicy, Policy, QueryInfo,
+                                 policy_from_spec, policy_spec)
+from repro.core.query import (PhysicalPlan, ScanPlan, ScanQuery, ScanResult,
+                              ScanStats, SOTScan)
+from repro.core.semantic_index import SemanticIndex
+from repro.core.storage import SOTRecord, TileStore
+
+MANIFEST_NAME = "manifest.json"
+MANIFEST_VERSION = 1
+
+
+@dataclass
+class IngestStats:
+    """Unified ingest accounting (one contract for every ingest path).
+
+    - ``encode_s``  — seconds encoding the incoming frames (always paid).
+    - ``pretile_s`` — *extra* seconds re-tiling beyond the plain encode
+      (policy-driven pre-tiling).  0.0 when layouts arrive with the video
+      (edge tiling: the camera already paid for them) or nothing pre-tiles.
+    """
+    encode_s: float = 0.0
+    pretile_s: float = 0.0
+
+    @property
+    def total_s(self) -> float:
+        return self.encode_s + self.pretile_s
+
+
+@dataclass
+class VideoEntry:
+    """One catalog entry: a video plus its physical configuration."""
+    name: str
+    encoder: EncoderConfig
+    policy: Policy
+    cost_model: CostModel
+    store: TileStore
+    index: SemanticIndex
+    frame_hw: Optional[tuple[int, int]] = None
+    history: list = field(default_factory=list)
+
+
+class VideoStore:
+    """Catalog of videos + declarative scan queries with plan/execute split."""
+
+    def __init__(self, store_root: Optional[str] = None, *,
+                 default_encoder: Optional[EncoderConfig] = None,
+                 default_policy: Optional[Policy] = None,
+                 default_cost_model: Optional[CostModel] = None,
+                 max_decode_workers: Optional[int] = None,
+                 autoload: bool = True):
+        self.root = pathlib.Path(store_root) if store_root else None
+        self.default_encoder = default_encoder or EncoderConfig()
+        self.default_policy = default_policy
+        self.default_cost_model = default_cost_model
+        self.max_decode_workers = max_decode_workers or min(
+            8, os.cpu_count() or 4)
+        self._videos: dict[str, VideoEntry] = {}
+        self.history: list[ScanStats] = []
+        self._dirty = False
+        if self.root is not None and autoload and self.manifest_path.exists():
+            self._load_manifest()
+
+    # ------------------------------------------------------------- catalog
+    @property
+    def manifest_path(self) -> pathlib.Path:
+        assert self.root is not None
+        return self.root / MANIFEST_NAME
+
+    def videos(self) -> list[str]:
+        return sorted(self._videos)
+
+    def video(self, name: str) -> VideoEntry:
+        try:
+            return self._videos[name]
+        except KeyError:
+            raise KeyError(f"unknown video {name!r}; catalog has "
+                           f"{self.videos()}") from None
+
+    def __contains__(self, name: str) -> bool:
+        return name in self._videos
+
+    def __len__(self) -> int:
+        return len(self._videos)
+
+    def __iter__(self) -> Iterator[str]:
+        return iter(self.videos())
+
+    def add_video(self, name: str, *,
+                  encoder: Optional[EncoderConfig] = None,
+                  policy: Optional[Policy] = None,
+                  cost_model: Optional[CostModel] = None,
+                  sot_len: Optional[int] = None) -> VideoEntry:
+        if name in self._videos:
+            raise ValueError(f"video {name!r} already in catalog")
+        enc = encoder or self.default_encoder
+        if policy is None:
+            # clone the default so stateful policies (regret accumulators)
+            # never share state across videos
+            policy = (policy_from_spec(self.default_policy.spec())
+                      if self.default_policy else NoTilingPolicy())
+        entry = VideoEntry(
+            name=name, encoder=enc, policy=policy,
+            cost_model=cost_model or self.default_cost_model or CostModel(),
+            store=TileStore(name, enc,
+                            root=str(self.root) if self.root else None,
+                            sot_len=sot_len),
+            index=SemanticIndex())
+        self._videos[name] = entry
+        return entry
+
+    def drop_video(self, name: str) -> None:
+        entry = self.video(name)
+        del self._videos[name]
+        if self.root is not None:
+            d = self.root / entry.name
+            if d.exists():
+                shutil.rmtree(d)
+            self.save()
+
+    # -------------------------------------------------------------- ingest
+    def ingest(self, name: str, frames: np.ndarray, *, detections=None,
+               initial_layouts: Optional[dict[int, TileLayout]] = None,
+               **video_kw) -> IngestStats:
+        """Encode ``frames`` into video ``name`` (auto-registered if absent).
+
+        ``detections``: per-frame ``[(label, bbox)]`` preloading the semantic
+        index before the policy's ``on_ingest`` runs (eager/edge strategies).
+        ``initial_layouts``: sot_id -> layout applied at encode time (the
+        edge-tiling path); when given, the policy's ``on_ingest`` is skipped.
+        Returns :class:`IngestStats` — see its docstring for the contract.
+        """
+        entry = self._videos.get(name)
+        if entry is None:
+            entry = self.add_video(name, **video_kw)
+        elif video_kw:
+            raise ValueError(
+                f"video {name!r} already configured; per-video kwargs "
+                f"{sorted(video_kw)} only apply on first ingest")
+        entry.frame_hw = frames.shape[1:]
+        if detections is not None:
+            for f, dets in enumerate(detections):
+                for label, bbox in dets:
+                    entry.index.add(name, f, label, bbox)
+        stats = IngestStats()
+        if initial_layouts:
+            stats.encode_s = entry.store.ingest(frames, layouts=dict(initial_layouts))
+        else:
+            # encode untiled first so the store has SOT records for the policy
+            stats.encode_s = entry.store.ingest(frames, layouts=None)
+            pre = entry.policy.on_ingest(entry.index, entry.store, name,
+                                         entry.frame_hw)
+            for sot_id, layout in (pre or {}).items():
+                stats.pretile_s += entry.store.retile(sot_id, layout)
+        self._dirty = True
+        self.save()
+        return stats
+
+    # ------------------------------------------------------------ metadata
+    def add_metadata(self, video: str, frame: int, label: str,
+                     x1: int, y1: int, x2: int, y2: int) -> None:
+        """The paper's ADDMETADATA(v, f, label, x1, y1, x2, y2)."""
+        self.video(video).index.add_metadata(video, frame, label,
+                                             x1, y1, x2, y2)
+        self._dirty = True
+
+    def add_detections(self, video: str, detections_by_frame: dict) -> None:
+        entry = self.video(video)
+        for f, dets in detections_by_frame.items():
+            for label, bbox in dets:
+                entry.index.add(video, f, label, bbox)
+        self._dirty = True
+        self.save()
+
+    # ---------------------------------------------------------------- scan
+    def scan(self, videos, labels=None,
+             frames: Optional[tuple[int, int]] = None) -> ScanQuery:
+        """Start a scan-query builder over one video or a list of videos.
+
+        ``labels``/``frames`` are optional shortcuts for the corresponding
+        builder calls: ``store.scan("cam0", "car", (0, 96))``.
+        """
+        q = ScanQuery(self, videos)
+        if labels is not None:
+            q = q.labels(labels)
+        if frames is not None:
+            q = q.frames(*frames)
+        return q
+
+    # ---------------------------------------------------------- plan/lower
+    def lower(self, plan: ScanPlan) -> PhysicalPlan:
+        """Lower a logical plan to the exact SOTs + tile indices to decode,
+        costing each SOT through the what-if interface.  Pure: touches only
+        the semantic index, never tile data."""
+        pplan = PhysicalPlan(logical=plan)
+        remaining = plan.limit
+        for name in plan.videos:
+            entry = self.video(name)
+            if plan.cnf == ():   # all-labels sentinel from .labels()
+                all_labels = tuple(sorted(entry.index.labels(name)))
+                if not all_labels:
+                    continue
+                cnf = (all_labels,)
+            else:
+                cnf = plan.cnf
+            flat_labels = tuple(sorted({l for clause in cnf for l in clause}))
+            t0 = time.perf_counter()
+            boxes_by_frame = entry.index.query(name, cnf, plan.frame_range)
+            pplan.lookup_s += time.perf_counter() - t0
+            if remaining is not None:
+                boxes_by_frame = _apply_limit(boxes_by_frame, remaining)
+                remaining -= sum(len(b) for b in boxes_by_frame.values())
+            if not boxes_by_frame:
+                continue
+            f_lo = min(boxes_by_frame)
+            f_hi = max(boxes_by_frame) + 1
+            qrange = plan.frame_range or (f_lo, f_hi)
+            for rec in entry.store.sots_in_range(f_lo, f_hi):
+                span = (rec.frame_start, rec.frame_end)
+                local = {f: b for f, b in boxes_by_frame.items()
+                         if span[0] <= f < span[1]}
+                if not local:
+                    continue
+                needed: set[int] = set()
+                for f, boxes in local.items():
+                    for box in boxes:
+                        needed.update(rec.layout.tiles_intersecting(box))
+                p, t = pixels_and_tiles(rec.layout, local,
+                                        gop=entry.encoder.gop,
+                                        sot_frames=span)
+                pplan.sot_scans.append(SOTScan(
+                    video=name, sot_id=rec.sot_id, epoch=rec.epoch,
+                    tile_idxs=tuple(sorted(needed)),
+                    n_frames=max(local) - rec.frame_start + 1,
+                    boxes_by_frame=local, query_range=qrange,
+                    labels=flat_labels, est_pixels=p, est_tiles=t,
+                    est_cost_s=entry.cost_model.cost(p, t)))
+        return pplan
+
+    # -------------------------------------------------------------- execute
+    def execute(self, pplan: PhysicalPlan) -> ScanResult:
+        """Run a physical plan: batched tile decodes across SOTs (thread
+        pool), deterministic region assembly, then per-SOT policy hooks."""
+        plan = pplan.logical
+        stats = ScanStats(lookup_s=pplan.lookup_s)
+        for ss in pplan.sot_scans:
+            stats.pixels_decoded += ss.est_pixels
+            stats.tiles_decoded += ss.est_tiles
+
+        regions_by_video: dict[str, list] = {v: [] for v in plan.videos}
+        if plan.decode and pplan.sot_scans:
+            t0 = time.perf_counter()
+            if len(pplan.sot_scans) == 1:
+                decoded = [self._decode_one(pplan.sot_scans[0])]
+            else:
+                workers = min(self.max_decode_workers, len(pplan.sot_scans))
+                with ThreadPoolExecutor(max_workers=workers) as pool:
+                    decoded = list(pool.map(self._decode_one,
+                                            pplan.sot_scans))
+            stats.decode_s = time.perf_counter() - t0
+            # deterministic assembly, in plan order (same ordering as the
+            # old serial loop: SOTs ascending, frames ascending within each)
+            for ss, (tiles, layout) in zip(pplan.sot_scans, decoded):
+                rec = self.video(ss.video).store.sots[ss.sot_id]
+                out = regions_by_video[ss.video]
+                for f, boxes in sorted(ss.boxes_by_frame.items()):
+                    rel = f - rec.frame_start
+                    for box in boxes:
+                        out.append((f, box, _crop(layout, tiles, rel, box)))
+
+        # policy hooks, serially per SOT (policies mutate shared state)
+        for ss in pplan.sot_scans:
+            entry = self.video(ss.video)
+            rec = entry.store.sots[ss.sot_id]
+            qi = QueryInfo(ss.video, ss.labels, ss.query_range,
+                           ss.boxes_by_frame, rec)
+            new_layout = entry.policy.observe(qi, entry.index, entry.store,
+                                              entry.cost_model)
+            if new_layout is not None:
+                stats.retile_s += entry.store.retile(rec.sot_id, new_layout)
+                self._dirty = True
+
+        regions: list = []
+        if len(plan.videos) == 1:
+            regions = regions_by_video[plan.videos[0]]
+        else:
+            for v in plan.videos:
+                regions.extend((v, f, box, px)
+                               for f, box, px in regions_by_video[v])
+        stats.regions = len(regions)
+        self.history.append(stats)
+        for v in plan.videos:
+            self.video(v).history.append(stats)
+        if self._dirty:
+            self.save()
+        return ScanResult(regions=regions, stats=stats, plan=pplan,
+                          regions_by_video=regions_by_video)
+
+    def _decode_one(self, ss: SOTScan):
+        """Decode one planned SOT's tile streams.  If the SOT was re-tiled
+        since planning (stale epoch), recompute the needed tiles against the
+        current layout."""
+        entry = self.video(ss.video)
+        rec = entry.store.sots[ss.sot_id]
+        tile_idxs = ss.tile_idxs
+        if rec.epoch != ss.epoch:
+            needed: set[int] = set()
+            for boxes in ss.boxes_by_frame.values():
+                for box in boxes:
+                    needed.update(rec.layout.tiles_intersecting(box))
+            tile_idxs = tuple(sorted(needed))
+        tiles = entry.store.decode_tiles(ss.sot_id, tile_idxs,
+                                         n_frames=ss.n_frames)
+        return tiles, rec.layout
+
+    # -------------------------------------------------------------- what-if
+    def what_if(self, video: str, labels,
+                layout_by_sot: dict[int, TileLayout],
+                t_range: Optional[tuple[int, int]] = None) -> float:
+        """§4.1 what-if interface: estimated cost of a query under alternate
+        layouts, without touching tile data."""
+        entry = self.video(video)
+        boxes_by_frame = entry.index.query(video, labels, t_range)
+        total = 0.0
+        for rec in entry.store.sots:
+            span = (rec.frame_start, rec.frame_end)
+            local = {f: b for f, b in boxes_by_frame.items()
+                     if span[0] <= f < span[1]}
+            if not local:
+                continue
+            layout = layout_by_sot.get(rec.sot_id, rec.layout)
+            p, t = pixels_and_tiles(layout, local, gop=entry.encoder.gop,
+                                    sot_frames=span)
+            total += entry.cost_model.cost(p, t)
+        return total
+
+    # ---------------------------------------------------------------- stats
+    def storage_bytes(self, video: Optional[str] = None) -> float:
+        if video is not None:
+            return self.video(video).store.storage_bytes()
+        return float(sum(e.store.storage_bytes()
+                         for e in self._videos.values()))
+
+    # ------------------------------------------------------------- manifest
+    def save(self) -> None:
+        """Write the catalog manifest (atomic) when backed by disk."""
+        if self.root is None:
+            self._dirty = False
+            return
+        self.root.mkdir(parents=True, exist_ok=True)
+        doc = {"version": MANIFEST_VERSION,
+               "videos": {name: self._entry_doc(e)
+                          for name, e in self._videos.items()}}
+        tmp = self.manifest_path.with_suffix(".tmp")
+        tmp.write_text(json.dumps(doc, indent=1))
+        tmp.rename(self.manifest_path)
+        self._dirty = False
+
+    def _entry_doc(self, e: VideoEntry) -> dict:
+        cm = e.cost_model
+        return {
+            "encoder": dataclasses.asdict(e.encoder),
+            "sot_len": e.store.sot_len,
+            "frame_hw": list(e.frame_hw) if e.frame_hw else None,
+            "policy": policy_spec(e.policy),
+            "cost_model": {"beta": cm.beta, "gamma": cm.gamma,
+                           "r_squared": cm.r_squared,
+                           "encode_per_pixel": cm.encode_per_pixel,
+                           "encode_per_tile": cm.encode_per_tile},
+            "sots": [{"sot_id": r.sot_id, "frame_start": r.frame_start,
+                      "frame_end": r.frame_end, "epoch": r.epoch,
+                      "size_bytes": r.size_bytes,
+                      "heights": list(r.layout.heights),
+                      "widths": list(r.layout.widths)}
+                     for r in e.store.sots],
+            "index": e.index.dump(e.name),
+        }
+
+    def _load_manifest(self) -> None:
+        doc = json.loads(self.manifest_path.read_text())
+        assert doc.get("version") == MANIFEST_VERSION, doc.get("version")
+        for name, v in doc["videos"].items():
+            enc = EncoderConfig(**v["encoder"])
+            cmd = v["cost_model"]
+            cm = CostModel(beta=cmd["beta"], gamma=cmd["gamma"],
+                           r_squared=cmd["r_squared"])
+            cm.encode_per_pixel = cmd["encode_per_pixel"]
+            cm.encode_per_tile = cmd["encode_per_tile"]
+            entry = VideoEntry(
+                name=name, encoder=enc, policy=policy_from_spec(v["policy"]),
+                cost_model=cm,
+                store=TileStore(name, enc, root=str(self.root),
+                                sot_len=v["sot_len"]),
+                index=SemanticIndex(),
+                frame_hw=tuple(v["frame_hw"]) if v["frame_hw"] else None)
+            entry.store.restore([
+                SOTRecord(s["sot_id"], s["frame_start"], s["frame_end"],
+                          TileLayout(tuple(s["heights"]), tuple(s["widths"])),
+                          epoch=s["epoch"], size_bytes=s["size_bytes"])
+                for s in v["sots"]])
+            entry.index.load(name, v["index"])
+            self._videos[name] = entry
+
+
+# ------------------------------------------------------------------ helpers
+def _apply_limit(boxes_by_frame: dict[int, list], limit: int
+                 ) -> dict[int, list]:
+    """Keep at most ``limit`` regions, frames ascending (deterministic)."""
+    out: dict[int, list] = {}
+    left = limit
+    for f in sorted(boxes_by_frame):
+        if left <= 0:
+            break
+        take = boxes_by_frame[f][:left]
+        out[f] = take
+        left -= len(take)
+    return out
+
+
+def _crop(layout: TileLayout, tiles: dict[int, np.ndarray],
+          rel_frame: int, box: BBox) -> np.ndarray:
+    """Assemble the pixels of ``box`` from decoded tiles of one frame
+    (bit-identical to the old serial TASM path)."""
+    y1, x1, y2, x2 = box
+    out = np.zeros((y2 - y1, x2 - x1), dtype=np.float32)
+    for t in layout.tiles_intersecting(box):
+        if t not in tiles:
+            continue
+        ty1, tx1, ty2, tx2 = layout.tile_rect(t)
+        iy1, ix1 = max(y1, ty1), max(x1, tx1)
+        iy2, ix2 = min(y2, ty2), min(x2, tx2)
+        if iy1 >= iy2 or ix1 >= ix2:
+            continue
+        out[iy1 - y1:iy2 - y1, ix1 - x1:ix2 - x1] = \
+            tiles[t][rel_frame, iy1 - ty1:iy2 - ty1, ix1 - tx1:ix2 - tx1]
+    return out

@@ -51,6 +51,12 @@ class Policy:
         to re-tile this SOT with, or None."""
         return None
 
+    def spec(self) -> dict:
+        """JSON-serializable constructor spec for manifest persistence.
+        Runtime state (accumulated regret, seen labels) is NOT captured —
+        a reopened policy restarts cold."""
+        return {"name": self.name}
+
 
 class NoTilingPolicy(Policy):
     name = "not_tiled"
@@ -84,6 +90,9 @@ class PretileAllPolicy(Policy):
     def __init__(self, granularity: str = "fine"):
         self.granularity = granularity
 
+    def spec(self):
+        return {"name": self.name, "granularity": self.granularity}
+
     def on_ingest(self, index, store, video, frame_hw):
         H, W = frame_hw
         layouts = {}
@@ -105,6 +114,10 @@ class KQKOPolicy(Policy):
     def __init__(self, query_objects: Iterable[str], alpha: float = ALPHA):
         self.o_q = tuple(query_objects)
         self.alpha = alpha
+
+    def spec(self):
+        return {"name": self.name, "query_objects": list(self.o_q),
+                "alpha": self.alpha}
 
     def on_ingest(self, index, store, video, frame_hw):
         H, W = frame_hw
@@ -137,6 +150,10 @@ class LazyPolicy(Policy):
     def __init__(self, query_objects: Iterable[str], alpha: float = ALPHA):
         self.o_q = tuple(query_objects)
         self.alpha = alpha
+
+    def spec(self):
+        return {"name": self.name, "query_objects": list(self.o_q),
+                "alpha": self.alpha}
 
     def observe(self, q, index, store, model):
         rec = q.sot
@@ -196,6 +213,10 @@ class RegretPolicy(Policy):
         # (sot_id, labelset) vetoed by the alpha rule on some observed query
         self.vetoed: set[tuple[int, frozenset]] = set()
 
+    def spec(self):
+        return {"name": self.name, "eta": self.eta, "alpha": self.alpha,
+                "max_subsets": self.max_subsets}
+
     def _alternatives(self) -> list[frozenset]:
         alts = [frozenset([l]) for l in sorted(self.seen)]
         if len(self.seen) > 1:
@@ -247,3 +268,33 @@ class RegretPolicy(Policy):
         _, key, cand = best
         self.regret[key] = 0.0
         return cand
+
+
+# ---------------------------------------------------------------------------
+# Manifest persistence: JSON-serializable policy specs (engine.py manifest)
+# ---------------------------------------------------------------------------
+def policy_spec(policy: Policy) -> dict:
+    """Serialize a policy's *construction* (not its runtime state)."""
+    return policy.spec()
+
+
+_REGISTRY: dict[str, type] = {
+    NoTilingPolicy.name: NoTilingPolicy,
+    PretileAllPolicy.name: PretileAllPolicy,
+    KQKOPolicy.name: KQKOPolicy,
+    LazyPolicy.name: LazyPolicy,
+    MorePolicy.name: MorePolicy,
+    RegretPolicy.name: RegretPolicy,
+}
+
+
+def policy_from_spec(spec: dict) -> Policy:
+    """Rebuild a policy from :func:`policy_spec` output.  Unknown names fall
+    back to :class:`NoTilingPolicy` (manifests stay readable across
+    versions)."""
+    kwargs = {k: v for k, v in spec.items() if k != "name"}
+    cls = _REGISTRY.get(spec.get("name", ""), NoTilingPolicy)
+    try:
+        return cls(**kwargs)
+    except TypeError:
+        return NoTilingPolicy()

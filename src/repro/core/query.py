@@ -1,0 +1,212 @@
+"""Declarative scan queries with an explicit plan/execute split.
+
+The engine's query surface is a chainable builder::
+
+    store.scan("cam0").labels("car").frames(0, 96).execute()
+    store.scan(["cam0", "cam1"]).labels("car", "person").limit(32).explain()
+
+Three stages, each a first-class object:
+
+- :class:`ScanQuery`    — the builder; immutable, every chained call returns
+                          a fresh query, so partial queries can be forked.
+- :class:`ScanPlan`     — the *logical* plan: videos, CNF predicate, frame
+                          range, limit.  No storage details.
+- :class:`PhysicalPlan` — the lowered plan: the exact SOTs and tile indices
+                          to decode per video, with pixel/tile/cost estimates
+                          from the §4.1 what-if cost interface.  Produced by
+                          ``VideoStore.lower``; ``.explain()`` returns it
+                          without decoding anything.
+
+The executor (``VideoStore.execute``) consumes a :class:`PhysicalPlan` and
+batches tile decodes across SOTs through a thread pool; see ``engine.py``.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Optional
+
+from repro.core.semantic_index import parse_predicate
+
+
+# --------------------------------------------------------------------- stats
+@dataclass
+class ScanStats:
+    lookup_s: float = 0.0
+    decode_s: float = 0.0
+    retile_s: float = 0.0
+    detect_s: float = 0.0
+    pixels_decoded: float = 0.0
+    tiles_decoded: float = 0.0
+    regions: int = 0
+
+    @property
+    def query_s(self) -> float:
+        """Paper's per-query time: index lookup + decode."""
+        return self.lookup_s + self.decode_s
+
+    @property
+    def total_s(self) -> float:
+        return self.lookup_s + self.decode_s + self.retile_s + self.detect_s
+
+
+@dataclass
+class ScanResult:
+    regions: list  # (frame, bbox, pixels) — single video; see regions_by_video
+    stats: ScanStats
+    plan: Optional["PhysicalPlan"] = None
+    regions_by_video: dict = field(default_factory=dict)
+
+
+# ------------------------------------------------------------- logical plan
+@dataclass(frozen=True)
+class ScanPlan:
+    """Logical plan: what to retrieve, with no storage details."""
+    videos: tuple[str, ...]
+    cnf: tuple[tuple[str, ...], ...]          # CNF over labels; () = all
+    frame_range: Optional[tuple[int, int]] = None
+    limit: Optional[int] = None
+    decode: bool = True
+
+    @property
+    def flat_labels(self) -> tuple[str, ...]:
+        return tuple(sorted({l for clause in self.cnf for l in clause}))
+
+    def describe(self) -> str:
+        pred = " AND ".join("(" + " OR ".join(c) + ")" for c in self.cnf) \
+            or "<all labels>"
+        rng = f" FRAMES [{self.frame_range[0]}, {self.frame_range[1]})" \
+            if self.frame_range else ""
+        lim = f" LIMIT {self.limit}" if self.limit is not None else ""
+        return f"SCAN {','.join(self.videos)} WHERE {pred}{rng}{lim}"
+
+
+# ------------------------------------------------------------ physical plan
+@dataclass
+class SOTScan:
+    """One physical work unit: decode `tile_idxs` of one SOT."""
+    video: str
+    sot_id: int
+    epoch: int                      # layout epoch the plan was made against
+    tile_idxs: tuple[int, ...]
+    n_frames: int                   # relative frames to decode (from SOT start)
+    boxes_by_frame: dict            # frame -> [BBox], restricted to this SOT
+    query_range: tuple[int, int]    # effective temporal range (for policies)
+    labels: tuple[str, ...] = ()    # resolved flat labels (for policies)
+    est_pixels: float = 0.0
+    est_tiles: float = 0.0
+    est_cost_s: float = 0.0
+
+
+@dataclass
+class PhysicalPlan:
+    """Lowered plan: exact SOTs/tiles to decode plus cost estimates."""
+    logical: ScanPlan
+    sot_scans: list[SOTScan] = field(default_factory=list)
+    lookup_s: float = 0.0
+
+    @property
+    def est_pixels(self) -> float:
+        return sum(s.est_pixels for s in self.sot_scans)
+
+    @property
+    def est_tiles(self) -> float:
+        return sum(s.est_tiles for s in self.sot_scans)
+
+    @property
+    def est_cost_s(self) -> float:
+        return sum(s.est_cost_s for s in self.sot_scans)
+
+    @property
+    def n_regions(self) -> int:
+        return sum(len(b) for s in self.sot_scans
+                   for b in s.boxes_by_frame.values())
+
+    def describe(self) -> str:
+        lines = [self.logical.describe()]
+        for s in self.sot_scans:
+            lines.append(
+                f"  {s.video} sot={s.sot_id} epoch={s.epoch} "
+                f"tiles={list(s.tile_idxs)} frames<={s.n_frames} "
+                f"~{s.est_pixels / 1e6:.2f}Mpx est={s.est_cost_s * 1e3:.2f}ms")
+        lines.append(
+            f"  total: {len(self.sot_scans)} SOTs, {self.est_tiles:.0f} tile "
+            f"streams, {self.est_pixels / 1e6:.2f}Mpx, "
+            f"est {self.est_cost_s * 1e3:.2f}ms, {self.n_regions} regions")
+        return "\n".join(lines)
+
+    def __str__(self) -> str:  # pragma: no cover - convenience
+        return self.describe()
+
+
+# ------------------------------------------------------------------ builder
+class ScanQuery:
+    """Chainable, immutable scan-query builder bound to a ``VideoStore``.
+
+    ``labels`` accepts a single label, several labels (one disjunctive
+    clause, matching the old ``scan(["car", "person"])``), or a full CNF
+    (sequence of clauses).  With no ``labels`` call the scan targets every
+    label known to the index.
+    """
+
+    def __init__(self, engine, videos):
+        self._engine = engine
+        if isinstance(videos, str):
+            videos = (videos,)
+        self._videos: tuple[str, ...] = tuple(videos)
+        self._cnf: Optional[tuple[tuple[str, ...], ...]] = None
+        self._range: Optional[tuple[int, int]] = None
+        self._limit: Optional[int] = None
+        self._decode: bool = True
+
+    # -- chain ---------------------------------------------------------------
+    def _clone(self) -> "ScanQuery":
+        q = ScanQuery(self._engine, self._videos)
+        q._cnf, q._range = self._cnf, self._range
+        q._limit, q._decode = self._limit, self._decode
+        return q
+
+    def labels(self, *labels) -> "ScanQuery":
+        q = self._clone()
+        if not labels:
+            q._cnf = ()  # sentinel: all labels, resolved at lowering
+        elif len(labels) == 1 and not isinstance(labels[0], str):
+            q._cnf = parse_predicate(labels[0])  # list or CNF
+        else:
+            q._cnf = parse_predicate(list(labels))  # one disjunctive clause
+        return q
+
+    def frames(self, lo: int, hi: int) -> "ScanQuery":
+        if lo >= hi:
+            raise ValueError(f"empty frame range [{lo}, {hi})")
+        q = self._clone()
+        q._range = (int(lo), int(hi))
+        return q
+
+    def limit(self, n: int) -> "ScanQuery":
+        if n < 0:
+            raise ValueError("limit must be >= 0")
+        q = self._clone()
+        q._limit = int(n)
+        return q
+
+    def decode(self, flag: bool = True) -> "ScanQuery":
+        q = self._clone()
+        q._decode = bool(flag)
+        return q
+
+    # -- plan / execute ------------------------------------------------------
+    def plan(self) -> ScanPlan:
+        if self._cnf is None:
+            raise ValueError("no predicate: call .labels(...) before "
+                             ".plan()/.explain()/.execute()")
+        return ScanPlan(videos=self._videos, cnf=self._cnf,
+                        frame_range=self._range, limit=self._limit,
+                        decode=self._decode)
+
+    def explain(self) -> PhysicalPlan:
+        """Lower to a physical plan (SOTs, tiles, estimated cost) WITHOUT
+        decoding, running policies, or recording history."""
+        return self._engine.lower(self.plan())
+
+    def execute(self) -> ScanResult:
+        return self._engine.execute(self._engine.lower(self.plan()))

@@ -119,3 +119,21 @@ class SemanticIndex:
 
     def stats(self) -> dict:
         return {"entries": len(self._tree), "depth": self._tree.depth()}
+
+    # -- persistence (engine manifest) --------------------------------------
+    def dump(self, video: str) -> list:
+        """JSON-serializable records for one video:
+        ``[[frame, label, [y1,x1,y2,x2], tile_epoch], ...]`` in
+        (label, frame) order."""
+        out = []
+        for label in sorted(self._labels.get(video, ())):
+            for (v, l, f), dets in self._tree.scan((video, label, -1),
+                                                   (video, label, 2 ** 60)):
+                for d in dets:
+                    out.append([f, l, list(d.bbox), d.tile_epoch])
+        return out
+
+    def load(self, video: str, records: Iterable) -> None:
+        """Re-insert :meth:`dump` records for one video."""
+        for frame, label, bbox, tile_epoch in records:
+            self.add(video, int(frame), label, tuple(bbox), int(tile_epoch))

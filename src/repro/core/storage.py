@@ -20,6 +20,7 @@ from typing import Optional
 import numpy as np
 
 from repro.codec.encode import EncoderConfig, decode_tile, encode_tile
+from repro.core.btree import BPlusTree
 from repro.core.layout import TileLayout, single_tile_layout
 
 
@@ -43,6 +44,8 @@ class TileStore:
         self.root = pathlib.Path(root) if root else None
         self._mem: dict[tuple[int, int, int], dict] = {}
         self.sots: list[SOTRecord] = []
+        # B+-tree keyed on frame_start: interval lookup for sots_in_range
+        self._intervals = BPlusTree(order=16)
         self.encode_seconds_total = 0.0
 
     # -- paths ---------------------------------------------------------------
@@ -86,10 +89,21 @@ class TileStore:
             layout = (layouts or {}).get(s, single_tile_layout(H, W))
             rec = SOTRecord(s, a, b, layout)
             self._encode_sot(rec, frames[a:b])
-            self.sots.append(rec)
+            self._register(rec)
         dt = time.perf_counter() - t0
         self.encode_seconds_total += dt
         return dt
+
+    def _register(self, rec: SOTRecord) -> None:
+        self.sots.append(rec)
+        self._intervals.insert(rec.frame_start, rec)
+
+    def restore(self, records: list[SOTRecord]) -> None:
+        """Adopt SOT records from a persisted manifest (tile data already on
+        disk); only valid for on-disk stores."""
+        assert self.root is not None, "cannot restore an in-memory store"
+        for rec in records:
+            self._register(rec)
 
     def _encode_sot(self, rec: SOTRecord, frames: np.ndarray) -> None:
         total = 0.0
@@ -163,5 +177,9 @@ class TileStore:
         return float(sum(r.size_bytes for r in self.sots))
 
     def sots_in_range(self, f_lo: int, f_hi: int) -> list[SOTRecord]:
-        return [r for r in self.sots
-                if r.frame_start < f_hi and r.frame_end > f_lo]
+        """SOTs overlapping [f_lo, f_hi), ascending — an O(log n + k)
+        range scan of the frame-interval B+-tree (SOTs are fixed-length, so
+        any overlapping SOT starts at or after f_lo - sot_len + 1)."""
+        lo_key = max(0, f_lo - self.sot_len + 1)
+        return [rec for _, recs in self._intervals.scan(lo_key, f_hi)
+                for rec in recs if rec.frame_end > f_lo]

@@ -1,202 +1,138 @@
-"""TASM facade (paper §3, Fig. 2): the storage-manager API a VDBMS sits on.
+"""DEPRECATED single-video facade over the :class:`VideoStore` engine.
 
-    tasm = TASM(video_id, encoder_cfg, policy=RegretPolicy(), ...)
-    tasm.ingest(frames, detections=...)            # optional pre-detections
-    res = tasm.scan(labels="car", t_range=(0, 96)) # SCAN(v, L, T)
-    tasm.add_metadata(video, frame, label, x1,y1,x2,y2)
+The seed of this repo exposed TASM (paper §3, Fig. 2) as a per-video object
+with a positional ``scan()``.  The storage manager is now an engine-level
+catalog — ``repro.core.engine.VideoStore`` — managing many named videos, a
+persistent on-disk manifest, and a declarative query builder with an explicit
+plan/execute split::
 
-``scan`` looks the predicate up in the semantic index, decodes only the tile
-streams containing the requested regions, returns the cropped pixels, and
-lets the installed policy re-tile SOTs afterwards (incremental tiling).  All
-timings (index lookup, decode, re-tile, detection) are tracked per query so
-the benchmark harness reproduces the paper's cumulative-cost figures.
+    # old (still works, emits DeprecationWarning)
+    tasm = TASM("cam0", enc, policy=RegretPolicy())
+    tasm.ingest(frames)
+    res = tasm.scan("car", (0, 96))
+
+    # new
+    store = VideoStore(store_root=...)
+    store.add_video("cam0", encoder=enc, policy=RegretPolicy())
+    store.ingest("cam0", frames)
+    res  = store.scan("cam0").labels("car").frames(0, 96).execute()
+    plan = store.scan("cam0").labels("car").frames(0, 96).explain()
+
+This module keeps the old constructor signature as a thin shim over a
+one-video ``VideoStore`` so external callers migrate at their own pace.
+``ScanStats``/``ScanResult`` now live in ``repro.core.query`` and are
+re-exported here.  Differences from the seed facade:
+
+- ``ingest`` returns :class:`~repro.core.engine.IngestStats` (one unified
+  contract: ``encode_s`` = encoding seconds, always paid; ``pretile_s`` =
+  extra policy-driven re-tiling seconds, 0.0 when layouts arrive with the
+  video).  The seed returned retile-seconds on the policy path but
+  encode-seconds on the ``initial_layouts`` path.
+- tile decodes are batched across SOTs through the engine's thread pool;
+  regions and pixels are bit-identical to the seed's serial loop.
 """
 from __future__ import annotations
 
-import time
-from dataclasses import dataclass, field
-from typing import Iterable, Optional
+import warnings
+from typing import Optional
 
 import numpy as np
 
 from repro.codec.encode import EncoderConfig
-from repro.core.cost import CostModel, pixels_and_tiles
-from repro.core.layout import BBox, TileLayout
-from repro.core.policies import NoTilingPolicy, Policy, QueryInfo
-from repro.core.semantic_index import SemanticIndex, parse_predicate
-from repro.core.storage import TileStore
-
-
-@dataclass
-class ScanStats:
-    lookup_s: float = 0.0
-    decode_s: float = 0.0
-    retile_s: float = 0.0
-    detect_s: float = 0.0
-    pixels_decoded: float = 0.0
-    tiles_decoded: float = 0.0
-    regions: int = 0
-
-    @property
-    def query_s(self) -> float:
-        """Paper's per-query time: index lookup + decode."""
-        return self.lookup_s + self.decode_s
-
-    @property
-    def total_s(self) -> float:
-        return self.lookup_s + self.decode_s + self.retile_s + self.detect_s
-
-
-@dataclass
-class ScanResult:
-    regions: list  # (frame, bbox, pixel array)
-    stats: ScanStats
+from repro.core.cost import CostModel
+from repro.core.engine import IngestStats, VideoStore
+from repro.core.layout import TileLayout
+from repro.core.policies import Policy
+from repro.core.query import ScanResult, ScanStats  # noqa: F401 (re-export)
 
 
 class TASM:
+    """Deprecated one-video shim over :class:`VideoStore`."""
+
     def __init__(self, video: str, encoder: Optional[EncoderConfig] = None, *,
                  policy: Optional[Policy] = None,
                  cost_model: Optional[CostModel] = None,
                  sot_len: Optional[int] = None,
                  store_root: Optional[str] = None):
+        warnings.warn(
+            "TASM is deprecated; use repro.core.engine.VideoStore "
+            "(catalog + store.scan(video).labels(...).frames(...).execute())",
+            DeprecationWarning, stacklevel=2)
+        # autoload=False keeps the seed facade's semantics: a reused
+        # store_root is re-encoded, not adopted from its manifest
+        self._engine = VideoStore(store_root=store_root, autoload=False)
+        self._entry = self._engine.add_video(
+            video, encoder=encoder, policy=policy, cost_model=cost_model,
+            sot_len=sot_len)
         self.video = video
-        self.encoder = encoder or EncoderConfig()
-        self.policy = policy or NoTilingPolicy()
-        self.cost_model = cost_model or CostModel()
-        self.index = SemanticIndex()
-        self.store = TileStore(video, self.encoder, root=store_root,
-                               sot_len=sot_len)
-        self.frame_hw: Optional[tuple[int, int]] = None
-        self.history: list[ScanStats] = []
 
-    # ------------------------------------------------------------------ ingest
+    # -- configuration passthrough ------------------------------------------
+    @property
+    def engine(self) -> VideoStore:
+        return self._engine
+
+    @property
+    def encoder(self) -> EncoderConfig:
+        return self._entry.encoder
+
+    @property
+    def policy(self) -> Policy:
+        return self._entry.policy
+
+    @policy.setter
+    def policy(self, p: Policy) -> None:
+        self._entry.policy = p
+
+    @property
+    def cost_model(self) -> CostModel:
+        return self._entry.cost_model
+
+    @property
+    def index(self):
+        return self._entry.index
+
+    @property
+    def store(self):
+        return self._entry.store
+
+    @property
+    def frame_hw(self):
+        return self._entry.frame_hw
+
+    @property
+    def history(self) -> list[ScanStats]:
+        return self._entry.history
+
+    # -- old API, delegating -------------------------------------------------
     def ingest(self, frames: np.ndarray, *, detections=None,
-               initial_layouts: Optional[dict[int, TileLayout]] = None) -> float:
-        """Encode the video.  detections: per-frame [(label, bbox)] to preload
-        the semantic index (eager / edge strategies).  The policy's
-        ``on_ingest`` may install initial layouts (pre-tiling)."""
-        self.frame_hw = frames.shape[1:]
-        if detections is not None:
-            for f, dets in enumerate(detections):
-                for label, bbox in dets:
-                    self.index.add(self.video, f, label, bbox)
-        # ingest untiled first so the store has SOT records for the policy
-        layouts = dict(initial_layouts or {})
-        if not layouts:
-            # policy may pre-tile using whatever the index knows
-            tmp_layouts = None
-            self.store.ingest(frames, layouts=None)
-            tmp_layouts = self.policy.on_ingest(self.index, self.store,
-                                                self.video, self.frame_hw)
-            t_retile = 0.0
-            for sot_id, layout in (tmp_layouts or {}).items():
-                t_retile += self.store.retile(sot_id, layout)
-            return t_retile
-        return self.store.ingest(frames, layouts=layouts)
+               initial_layouts: Optional[dict[int, TileLayout]] = None
+               ) -> IngestStats:
+        """Encode the video; see ``VideoStore.ingest`` for the contract."""
+        return self._engine.ingest(self.video, frames, detections=detections,
+                                   initial_layouts=initial_layouts)
 
-    # ---------------------------------------------------------------- metadata
     def add_metadata(self, video_id: str, frame: int, label: str,
                      x1: int, y1: int, x2: int, y2: int) -> None:
-        self.index.add_metadata(video_id, frame, label, x1, y1, x2, y2)
+        self._entry.index.add_metadata(video_id, frame, label, x1, y1, x2, y2)
 
     def add_detections(self, detections_by_frame: dict[int, list]) -> float:
         """Bulk-add (label, bbox) detections; returns 0 (timed by caller)."""
-        for f, dets in detections_by_frame.items():
-            for label, bbox in dets:
-                self.index.add(self.video, f, label, bbox)
+        self._engine.add_detections(self.video, detections_by_frame)
         return 0.0
 
-    # -------------------------------------------------------------------- scan
     def scan(self, labels, t_range: Optional[tuple[int, int]] = None,
              *, decode: bool = True) -> ScanResult:
         """SCAN(video, L, T).  labels: str | [str] | CNF."""
-        stats = ScanStats()
-        cnf = parse_predicate(labels)
-        flat_labels = tuple(sorted({l for clause in cnf for l in clause}))
-
-        t0 = time.perf_counter()
-        boxes_by_frame = self.index.query(self.video, cnf, t_range)
-        stats.lookup_s = time.perf_counter() - t0
-
-        regions: list = []
-        f_lo = min(boxes_by_frame) if boxes_by_frame else 0
-        f_hi = max(boxes_by_frame) + 1 if boxes_by_frame else 0
-        touched = self.store.sots_in_range(f_lo, f_hi) if boxes_by_frame else []
-
-        for rec in touched:
-            span = (rec.frame_start, rec.frame_end)
-            local = {f: b for f, b in boxes_by_frame.items()
-                     if span[0] <= f < span[1]}
-            if not local:
-                continue
-            p, t = pixels_and_tiles(rec.layout, local, gop=self.encoder.gop,
-                                    sot_frames=span)
-            stats.pixels_decoded += p
-            stats.tiles_decoded += t
-
-            if decode:
-                needed: set[int] = set()
-                for f, boxes in local.items():
-                    for box in boxes:
-                        needed.update(rec.layout.tiles_intersecting(box))
-                last_rel = max(local) - rec.frame_start + 1
-                t1 = time.perf_counter()
-                tiles = self.store.decode_tiles(rec.sot_id, sorted(needed),
-                                                n_frames=last_rel)
-                stats.decode_s += time.perf_counter() - t1
-                for f, boxes in sorted(local.items()):
-                    rel = f - rec.frame_start
-                    for box in boxes:
-                        regions.append(
-                            (f, box, self._crop(rec.layout, tiles, rel, box)))
-
-            # policy hook (per SOT)
-            qi = QueryInfo(self.video, flat_labels,
-                           t_range or (f_lo, f_hi), local, rec)
-            new_layout = self.policy.observe(qi, self.index, self.store,
-                                             self.cost_model)
-            if new_layout is not None:
-                stats.retile_s += self.store.retile(rec.sot_id, new_layout)
-
-        stats.regions = len(regions)
-        self.history.append(stats)
-        return ScanResult(regions=regions, stats=stats)
-
-    def _crop(self, layout: TileLayout, tiles: dict[int, np.ndarray],
-              rel_frame: int, box: BBox) -> np.ndarray:
-        """Assemble the pixels of `box` from decoded tiles of one frame."""
-        y1, x1, y2, x2 = box
-        out = np.zeros((y2 - y1, x2 - x1), dtype=np.float32)
-        for t in layout.tiles_intersecting(box):
-            if t not in tiles:
-                continue
-            ty1, tx1, ty2, tx2 = layout.tile_rect(t)
-            iy1, ix1 = max(y1, ty1), max(x1, tx1)
-            iy2, ix2 = min(y2, ty2), min(x2, tx2)
-            if iy1 >= iy2 or ix1 >= ix2:
-                continue
-            out[iy1 - y1:iy2 - y1, ix1 - x1:ix2 - x1] = \
-                tiles[t][rel_frame, iy1 - ty1:iy2 - ty1, ix1 - tx1:ix2 - tx1]
-        return out
-
-    # -------------------------------------------------------------------- misc
-    def storage_bytes(self) -> float:
-        return self.store.storage_bytes()
+        q = self._engine.scan(self.video).labels(labels).decode(decode)
+        if t_range is not None:
+            q = q.frames(*t_range)
+        return q.execute()
 
     def what_if(self, labels, layout_by_sot: dict[int, TileLayout],
                 t_range=None) -> float:
-        """§4.1 what-if interface: estimated cost of a query under alternate
-        layouts, without touching the store."""
-        boxes_by_frame = self.index.query(self.video, labels, t_range)
-        total = 0.0
-        for rec in self.store.sots:
-            span = (rec.frame_start, rec.frame_end)
-            local = {f: b for f, b in boxes_by_frame.items()
-                     if span[0] <= f < span[1]}
-            if not local:
-                continue
-            layout = layout_by_sot.get(rec.sot_id, rec.layout)
-            p, t = pixels_and_tiles(layout, local, gop=self.encoder.gop,
-                                    sot_frames=span)
-            total += self.cost_model.cost(p, t)
-        return total
+        """§4.1 what-if interface (delegates to the engine)."""
+        return self._engine.what_if(self.video, labels, layout_by_sot,
+                                    t_range)
+
+    def storage_bytes(self) -> float:
+        return self._engine.storage_bytes(self.video)

@@ -175,6 +175,8 @@ def run_cell(arch: str, shape_name: str, mesh, mesh_name: str, rules) -> dict:
         mem = compiled.memory_analysis()
         row["memory"] = _memory_dict(mem, row["chips"])
         cost = compiled.cost_analysis()
+        if isinstance(cost, (list, tuple)):  # jax <= 0.4: one dict per program
+            cost = cost[0] if cost else {}
         row["cost"] = {k: float(v) for k, v in cost.items()
                        if isinstance(v, (int, float)) and k in (
                            "flops", "bytes accessed", "transcendentals",

@@ -103,21 +103,33 @@ def synthetic_token_batches(vocab: int, batch: int, seq: int, *,
         i += 1
 
 
-def tasm_region_batches(tasm, labels, *, batch: int, crop: int = 32,
-                        frame_step: int = 16, seed: int = 0):
-    """Stream fixed-size crops of TASM-scanned object regions (VLM fuel).
+def tasm_region_batches(source, labels, *, batch: int, crop: int = 32,
+                        frame_step: int = 16, seed: int = 0,
+                        video: Optional[str] = None):
+    """Stream fixed-size crops of storage-manager object regions (VLM fuel).
 
-    Each batch: {'pixels': [B, crop, crop] float32, 'labels': [B] int32}.
+    ``source`` is a ``VideoStore`` (pass ``video=``; defaults to the only
+    catalog entry) or a legacy ``TASM`` facade.  Each batch:
+    {'pixels': [B, crop, crop] float32, 'labels': [B] int32}.
     """
     rng = np.random.default_rng(seed)
     label_ids = {l: i for i, l in enumerate(sorted(labels))}
-    n_frames = tasm.store.sots[-1].frame_end if tasm.store.sots else 0
+    if hasattr(source, "add_video"):  # VideoStore engine
+        name = video or source.videos()[0]
+        store = source.video(name).store
+
+        def scan(label, t_range):
+            return (source.scan(name).labels(label)
+                    .frames(*t_range).execute())
+    else:  # deprecated TASM shim
+        store, scan = source.store, source.scan
+    n_frames = store.sots[-1].frame_end if store.sots else 0
     while True:
         pixels, ys = [], []
         while len(pixels) < batch:
             f0 = int(rng.integers(0, max(n_frames - frame_step, 1)))
             label = sorted(labels)[int(rng.integers(0, len(labels)))]
-            res = tasm.scan(label, (f0, f0 + frame_step))
+            res = scan(label, (f0, f0 + frame_step))
             for _, _, px in res.regions:
                 if min(px.shape) < 8:
                     continue

@@ -1,0 +1,26 @@
+"""Version compatibility shims for jax APIs the repo uses.
+
+``shard_map`` graduated from ``jax.experimental.shard_map`` (kwarg
+``check_rep``) to ``jax.shard_map`` (kwarg ``check_vma``).  The container
+pins jax 0.4.37, which only has the experimental spelling; newer jax only
+documents the graduated one.  Call sites use :func:`shard_map` below with
+the new-style ``check_vma`` kwarg and run on either version.
+"""
+from __future__ import annotations
+
+import jax
+
+try:
+    from jax import shard_map as _shard_map_new  # jax >= 0.5
+    _HAS_NEW = True
+except ImportError:
+    from jax.experimental.shard_map import shard_map as _shard_map_old
+    _HAS_NEW = False
+
+
+def shard_map(f, *, mesh, in_specs, out_specs, check_vma: bool = True):
+    if _HAS_NEW:
+        return _shard_map_new(f, mesh=mesh, in_specs=in_specs,
+                              out_specs=out_specs, check_vma=check_vma)
+    return _shard_map_old(f, mesh=mesh, in_specs=in_specs,
+                          out_specs=out_specs, check_rep=check_vma)

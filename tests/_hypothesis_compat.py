@@ -1,0 +1,190 @@
+"""Minimal stand-in for the ``hypothesis`` package.
+
+The tier-1 suite property-tests several modules with hypothesis, but the
+container does not ship it.  Importing this module installs a tiny
+API-compatible shim into ``sys.modules`` — *only when the real package is
+absent* — covering exactly the strategy surface the suite uses:
+
+    given, settings, assume, note, HealthCheck
+    st.integers / booleans / floats / sampled_from / tuples / lists /
+    builds / just / none, plus Strategy.map / .filter
+
+Drawing is pseudo-random but deterministic per test (seeded from the test's
+qualified name), with no shrinking: a failing example is re-raised with the
+drawn values attached.  If the real hypothesis is installed, this module is
+a no-op and the real package wins.
+"""
+from __future__ import annotations
+
+import random
+import sys
+import types
+
+
+class _Unsatisfied(Exception):
+    """Raised by assume(False); the example is skipped."""
+
+
+def assume(condition) -> bool:
+    if not condition:
+        raise _Unsatisfied()
+    return True
+
+
+def note(_msg) -> None:
+    pass
+
+
+class HealthCheck:
+    all = staticmethod(lambda: [])
+    too_slow = "too_slow"
+    filter_too_much = "filter_too_much"
+    data_too_large = "data_too_large"
+
+
+class Strategy:
+    def __init__(self, draw):
+        self._draw = draw
+
+    def example(self, rng: random.Random):
+        return self._draw(rng)
+
+    def map(self, fn) -> "Strategy":
+        return Strategy(lambda rng: fn(self._draw(rng)))
+
+    def filter(self, pred) -> "Strategy":
+        def draw(rng):
+            for _ in range(200):
+                v = self._draw(rng)
+                if pred(v):
+                    return v
+            raise _Unsatisfied()
+        return Strategy(draw)
+
+
+def integers(min_value=None, max_value=None) -> Strategy:
+    lo = -(2 ** 31) if min_value is None else min_value
+    hi = 2 ** 31 if max_value is None else max_value
+    return Strategy(lambda rng: rng.randint(lo, hi))
+
+
+def floats(min_value=0.0, max_value=1.0, **_kw) -> Strategy:
+    return Strategy(lambda rng: rng.uniform(min_value, max_value))
+
+
+def booleans() -> Strategy:
+    return Strategy(lambda rng: rng.random() < 0.5)
+
+
+def sampled_from(seq) -> Strategy:
+    seq = list(seq)
+    return Strategy(lambda rng: seq[rng.randrange(len(seq))])
+
+
+def just(value) -> Strategy:
+    return Strategy(lambda rng: value)
+
+
+def none() -> Strategy:
+    return just(None)
+
+
+def tuples(*strategies) -> Strategy:
+    return Strategy(lambda rng: tuple(s.example(rng) for s in strategies))
+
+
+def lists(elements: Strategy, *, min_size: int = 0,
+          max_size=None, unique=False) -> Strategy:
+    hi = min_size + 10 if max_size is None else max_size
+
+    def draw(rng):
+        n = rng.randint(min_size, hi)
+        out = []
+        for _ in range(n):
+            for _attempt in range(200):
+                v = elements.example(rng)
+                if not unique or v not in out:
+                    out.append(v)
+                    break
+        return out
+    return Strategy(draw)
+
+
+def builds(fn, *strategies, **kw_strategies) -> Strategy:
+    return Strategy(lambda rng: fn(
+        *(s.example(rng) for s in strategies),
+        **{k: s.example(rng) for k, s in kw_strategies.items()}))
+
+
+class settings:
+    """Decorator storing run options on the test (order-independent with
+    @given — whichever wraps last, options are found at call time)."""
+
+    def __init__(self, **kw):
+        self.kw = kw
+
+    def __call__(self, fn):
+        merged = dict(getattr(fn, "_compat_settings", {}))
+        merged.update(self.kw)
+        fn._compat_settings = merged
+        return fn
+
+
+def given(*strategies, **kw_strategies):
+    def decorate(fn):
+        def wrapper():
+            cfg = getattr(wrapper, "_compat_settings", {})
+            n = cfg.get("max_examples", 25)
+            rng = random.Random(
+                int.from_bytes(fn.__qualname__.encode(), "little") % (2 ** 32))
+            ran = 0
+            for i in range(n * 4):
+                if ran >= n:
+                    break
+                try:
+                    args = [s.example(rng) for s in strategies]
+                    kwargs = {k: s.example(rng)
+                              for k, s in kw_strategies.items()}
+                except _Unsatisfied:
+                    continue
+                try:
+                    fn(*args, **kwargs)
+                    ran += 1
+                except _Unsatisfied:
+                    continue
+                except Exception as e:
+                    raise AssertionError(
+                        f"falsifying example #{i} for {fn.__name__}: "
+                        f"args={args!r} kwargs={kwargs!r}: {e}") from e
+        wrapper.__name__ = fn.__name__
+        wrapper.__qualname__ = fn.__qualname__
+        wrapper.__doc__ = fn.__doc__
+        wrapper.__module__ = fn.__module__
+        wrapper._compat_settings = dict(getattr(fn, "_compat_settings", {}))
+        wrapper.is_hypothesis_compat = True
+        return wrapper
+    return decorate
+
+
+def install() -> None:
+    """Register the shim as ``hypothesis`` + ``hypothesis.strategies`` if
+    the real package is missing."""
+    try:
+        import hypothesis  # noqa: F401  (real package present: no-op)
+        return
+    except ModuleNotFoundError:
+        pass
+    mod = types.ModuleType("hypothesis")
+    st = types.ModuleType("hypothesis.strategies")
+    for name in ("integers", "floats", "booleans", "sampled_from", "just",
+                 "none", "tuples", "lists", "builds"):
+        setattr(st, name, globals()[name])
+    mod.given = given
+    mod.settings = settings
+    mod.assume = assume
+    mod.note = note
+    mod.HealthCheck = HealthCheck
+    mod.strategies = st
+    mod.__version__ = "0.0-compat"
+    sys.modules["hypothesis"] = mod
+    sys.modules["hypothesis.strategies"] = st

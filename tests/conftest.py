@@ -3,6 +3,12 @@ multi-device tests run in subprocesses (tests/test_distributed.py)."""
 import numpy as np
 import pytest
 
+import _hypothesis_compat
+
+# the container has no `hypothesis`; install the API-compatible shim so the
+# property-test modules collect and run (no-op when the real package exists)
+_hypothesis_compat.install()
+
 
 @pytest.fixture(scope="session")
 def sparse_video():

@@ -37,13 +37,14 @@ def test_straggler_substitution():
 
 def test_tasm_region_batches(small_video):
     from repro.codec.encode import EncoderConfig
-    from repro.core import TASM
+    from repro.core import VideoStore
 
     frames, dets = small_video
-    t = TASM("v", EncoderConfig(gop=16, qp=8))
-    t.ingest(frames)
-    t.add_detections({f: d for f, d in enumerate(dets)})
-    it = tasm_region_batches(t, ["car", "person"], batch=4, crop=16)
+    store = VideoStore()
+    store.add_video("v", encoder=EncoderConfig(gop=16, qp=8))
+    store.ingest("v", frames)
+    store.add_detections("v", {f: d for f, d in enumerate(dets)})
+    it = tasm_region_batches(store, ["car", "person"], batch=4, crop=16)
     b = next(it)
     assert b["pixels"].shape == (4, 16, 16)
     assert b["labels"].shape == (4,)

@@ -4,7 +4,7 @@ import pytest
 from hypothesis import given, settings, strategies as st
 
 from repro.codec.encode import EncoderConfig
-from repro.core import TASM, RegretPolicy
+from repro.core import RegretPolicy, VideoStore
 from repro.core.cost import CostModel, pixels_and_tiles
 from repro.core.detector import DetectorConfig, detect
 from repro.core.layout import partition, single_tile_layout
@@ -54,14 +54,16 @@ def test_regret_never_adopts_vetoed_layout(small_video):
     """Alpha-vetoed (SOT, layout) pairs must never be adopted."""
     frames, dets = small_video
     pol = RegretPolicy(eta=0.0)  # eager: adopt as soon as regret > 0
-    t = TASM("v", EncoderConfig(gop=16, qp=8), policy=pol, cost_model=MODEL)
-    t.ingest(frames)
-    t.add_detections({f: d for f, d in enumerate(dets)})
+    store = VideoStore()
+    store.add_video("v", encoder=EncoderConfig(gop=16, qp=8), policy=pol,
+                    cost_model=MODEL)
+    store.ingest("v", frames)
+    store.add_detections("v", {f: d for f, d in enumerate(dets)})
     for _ in range(6):
-        t.scan("car", (0, 32))
+        store.scan("v").labels("car").frames(0, 32).execute()
     for key in pol.vetoed:
         sot_id, labelset = key
-        rec = t.store.sots[sot_id]
+        rec = store.video("v").store.sots[sot_id]
         boxes = [b for f in range(rec.frame_start, rec.frame_end)
                  for l, b in [(l, b) for l, b in dets[f]] if l in labelset]
         cand = partition(*frames.shape[1:], boxes)

@@ -1,11 +1,12 @@
-"""TASM facade + storage + policies end to end."""
+"""VideoStore engine + storage + policies end to end (plus the deprecated
+TASM shim)."""
 import numpy as np
 import pytest
 
 from repro.codec.encode import EncoderConfig
 from repro.core import (TASM, KQKOPolicy, LazyPolicy, MorePolicy,
                         NoTilingPolicy, PretileAllPolicy, RegretPolicy,
-                        uniform_layout)
+                        VideoStore, uniform_layout)
 from repro.core.cost import CostModel
 
 ENC = EncoderConfig(gop=16, qp=8)
@@ -15,18 +16,27 @@ MODEL.encode_per_pixel = 3.4e-8
 MODEL.encode_per_tile = 1e-4
 
 
-def make_tasm(frames, dets, policy=None, **kw):
-    t = TASM("v", ENC, policy=policy or NoTilingPolicy(), cost_model=MODEL, **kw)
-    t.ingest(frames)
-    t.add_detections({f: d for f, d in enumerate(dets)})
-    return t
+def make_store(frames, dets, policy=None, **kw):
+    store = VideoStore(store_root=kw.pop("store_root", None))
+    store.add_video("v", encoder=ENC, policy=policy or NoTilingPolicy(),
+                    cost_model=MODEL, **kw)
+    store.ingest("v", frames)
+    store.add_detections("v", {f: d for f, d in enumerate(dets)})
+    return store
+
+
+def scan(store, labels, t_range=None, **kw):
+    q = store.scan("v").labels(labels)
+    if t_range is not None:
+        q = q.frames(*t_range)
+    return q.execute()
 
 
 class TestScan:
     def test_scan_returns_correct_pixels(self, small_video):
         frames, dets = small_video
-        t = make_tasm(frames, dets)
-        res = t.scan("car", (0, 16))
+        store = make_store(frames, dets)
+        res = scan(store, "car", (0, 16))
         assert res.stats.regions > 0
         for f, box, px in res.regions:
             y1, x1, y2, x2 = box
@@ -35,103 +45,144 @@ class TestScan:
 
     def test_scan_empty_label(self, small_video):
         frames, dets = small_video
-        t = make_tasm(frames, dets)
-        res = t.scan("unicorn")
+        store = make_store(frames, dets)
+        res = scan(store, "unicorn")
         assert res.regions == [] and res.stats.pixels_decoded == 0
 
     def test_temporal_restriction(self, small_video):
         frames, dets = small_video
-        t = make_tasm(frames, dets)
-        res = t.scan("car", (0, 8))
+        store = make_store(frames, dets)
+        res = scan(store, "car", (0, 8))
         assert all(f < 8 for f, _, _ in res.regions)
 
     def test_tiled_scan_decodes_fewer_pixels(self, small_video):
         frames, dets = small_video
-        t1 = make_tasm(frames, dets)
-        p1 = t1.scan("car", (0, 16)).stats.pixels_decoded
-        t2 = make_tasm(frames, dets, policy=PretileAllPolicy())
+        s1 = make_store(frames, dets)
+        p1 = scan(s1, "car", (0, 16)).stats.pixels_decoded
+        s2 = make_store(frames, dets, policy=PretileAllPolicy())
         # re-run ingest-time pretile with detections now present
-        for rec_id, lay in t2.policy.on_ingest(t2.index, t2.store, "v",
+        e2 = s2.video("v")
+        for rec_id, lay in e2.policy.on_ingest(e2.index, e2.store, "v",
                                                frames.shape[1:]).items():
-            t2.store.retile(rec_id, lay)
-        p2 = t2.scan("car", (0, 16)).stats.pixels_decoded
+            e2.store.retile(rec_id, lay)
+        p2 = scan(s2, "car", (0, 16)).stats.pixels_decoded
         assert p2 < p1
 
     def test_what_if_interface(self, small_video):
         frames, dets = small_video
-        t = make_tasm(frames, dets)
+        store = make_store(frames, dets)
         H, W = frames.shape[1:]
-        cur = t.what_if("car", {})
-        alt = t.what_if("car", {0: uniform_layout(H, W, 2, 2),
-                                1: uniform_layout(H, W, 2, 2)})
+        cur = store.what_if("v", "car", {})
+        alt = store.what_if("v", "car", {0: uniform_layout(H, W, 2, 2),
+                                        1: uniform_layout(H, W, 2, 2)})
         assert alt <= cur  # tiling can only reduce estimated pixels
 
 
 class TestPolicies:
     def test_regret_retiles_after_repeats(self, small_video):
         frames, dets = small_video
-        t = make_tasm(frames, dets, policy=RegretPolicy())
+        store = make_store(frames, dets, policy=RegretPolicy())
         for _ in range(8):
-            t.scan("car", (0, 16))
-        assert any(rec.layout.n_tiles > 1 for rec in t.store.sots[:1])
+            scan(store, "car", (0, 16))
+        assert any(rec.layout.n_tiles > 1
+                   for rec in store.video("v").store.sots[:1])
 
     def test_regret_respects_eta(self, small_video):
         frames, dets = small_video
-        t = make_tasm(frames, dets, policy=RegretPolicy(eta=1e9))
+        store = make_store(frames, dets, policy=RegretPolicy(eta=1e9))
         for _ in range(8):
-            t.scan("car", (0, 16))
-        assert all(rec.layout.n_tiles == 1 for rec in t.store.sots)
+            scan(store, "car", (0, 16))
+        assert all(rec.layout.n_tiles == 1
+                   for rec in store.video("v").store.sots)
 
     def test_lazy_tiles_when_locations_known(self, small_video):
         frames, dets = small_video
-        t = make_tasm(frames, dets, policy=LazyPolicy(["car"]))
-        t.scan("car", (0, 16))
-        assert t.store.sots[0].layout.n_tiles > 1
+        store = make_store(frames, dets, policy=LazyPolicy(["car"]))
+        scan(store, "car", (0, 16))
+        assert store.video("v").store.sots[0].layout.n_tiles > 1
 
     def test_lazy_waits_for_unknown_objects(self, small_video):
         frames, dets = small_video
-        t = TASM("v", ENC, policy=LazyPolicy(["car", "ghost"]),
-                 cost_model=MODEL)
-        t.ingest(frames)
-        t.add_detections({f: d for f, d in enumerate(dets)})
-        t.scan("car", (0, 16))
+        store = VideoStore()
+        store.add_video("v", encoder=ENC,
+                        policy=LazyPolicy(["car", "ghost"]), cost_model=MODEL)
+        store.ingest("v", frames)
+        store.add_detections("v", {f: d for f, d in enumerate(dets)})
+        scan(store, "car", (0, 16))
         # 'ghost' never detected: the SOT must remain untiled
-        assert t.store.sots[0].layout.n_tiles == 1
+        assert store.video("v").store.sots[0].layout.n_tiles == 1
 
     def test_more_policy_accumulates_labels(self, small_video):
         frames, dets = small_video
-        t = make_tasm(frames, dets, policy=MorePolicy())
-        t.scan("car", (0, 16))
-        lay_car = t.store.sots[0].layout
-        t.scan("person", (0, 16))
-        lay_both = t.store.sots[0].layout
+        store = make_store(frames, dets, policy=MorePolicy())
+        scan(store, "car", (0, 16))
+        lay_car = store.video("v").store.sots[0].layout
+        scan(store, "person", (0, 16))
+        lay_both = store.video("v").store.sots[0].layout
         assert lay_car.n_tiles > 1
         assert lay_both != lay_car  # re-tiled around {car, person}
 
     def test_kqko_pretile(self, small_video):
         frames, dets = small_video
-        t = TASM("v", ENC, policy=KQKOPolicy(["car"]), cost_model=MODEL)
-        t.add_detections({f: d for f, d in enumerate(dets)})
-        t.ingest(frames)
-        assert any(rec.layout.n_tiles > 1 for rec in t.store.sots)
+        store = VideoStore()
+        store.add_video("v", encoder=ENC, policy=KQKOPolicy(["car"]),
+                        cost_model=MODEL)
+        store.add_detections("v", {f: d for f, d in enumerate(dets)})
+        store.ingest("v", frames)
+        assert any(rec.layout.n_tiles > 1
+                   for rec in store.video("v").store.sots)
 
 
 class TestStorageDisk:
     def test_on_disk_layout(self, small_video, tmp_path):
         frames, dets = small_video
-        t = TASM("v", ENC, cost_model=MODEL, store_root=str(tmp_path))
-        t.ingest(frames)
-        t.add_detections({f: d for f, d in enumerate(dets)})
+        store = VideoStore(store_root=str(tmp_path))
+        store.add_video("v", encoder=ENC, cost_model=MODEL)
+        store.ingest("v", frames)
+        store.add_detections("v", {f: d for f, d in enumerate(dets)})
         # paper Fig. 1 directory structure
         assert (tmp_path / "v" / "frames_0-15" / "tile0.npz").exists()
-        res = t.scan("car", (0, 16))
+        res = scan(store, "car", (0, 16))
         assert res.stats.regions > 0
         # retile rewrites the SOT directory
         H, W = frames.shape[1:]
-        t.store.retile(0, uniform_layout(H, W, 2, 2))
+        store.video("v").store.retile(0, uniform_layout(H, W, 2, 2))
         assert (tmp_path / "v" / "frames_0-15" / "tile3.npz").exists()
 
     def test_storage_bytes_tracked(self, small_video):
         frames, dets = small_video
-        t = make_tasm(frames, dets)
+        store = make_store(frames, dets)
+        assert store.storage_bytes() > 0
+        assert store.storage_bytes("v") == store.storage_bytes()
+
+
+class TestDeprecatedShim:
+    """The old single-video TASM facade still works, via VideoStore."""
+
+    def test_shim_warns_and_matches_engine(self, small_video):
+        frames, dets = small_video
+        with pytest.warns(DeprecationWarning):
+            t = TASM("v", ENC, policy=NoTilingPolicy(), cost_model=MODEL)
+        t.ingest(frames)
+        t.add_detections({f: d for f, d in enumerate(dets)})
+        res_old = t.scan("car", (0, 16))
+
+        store = make_store(frames, dets)
+        res_new = scan(store, "car", (0, 16))
+        assert len(res_old.regions) == len(res_new.regions)
+        for (f1, b1, p1), (f2, b2, p2) in zip(res_old.regions,
+                                              res_new.regions):
+            assert f1 == f2 and b1 == b2
+            np.testing.assert_array_equal(p1, p2)
         assert t.storage_bytes() > 0
+        assert t.store.sots and t.index.stats()["entries"] > 0
+        assert len(t.history) == 1
+
+    def test_shim_ingest_contract(self, small_video):
+        frames, dets = small_video
+        with pytest.warns(DeprecationWarning):
+            t = TASM("v", ENC, policy=PretileAllPolicy(), cost_model=MODEL)
+        t.add_detections({f: d for f, d in enumerate(dets)})
+        st = t.ingest(frames)
+        assert st.encode_s > 0 and st.pretile_s > 0
+        assert st.total_s == st.encode_s + st.pretile_s
