@@ -89,7 +89,9 @@ def make_policy(strategy: str):
 
 
 def run_strategy(strategy: str, frames, dets, queries, model):
-    store = VideoStore()
+    # cache disabled: the figure compares per-layout decode cost, so repeat
+    # queries must actually decode (the serving cache would zero them out)
+    store = VideoStore(tile_cache_bytes=0)
     store.add_video("v", encoder=ENC, policy=make_policy(strategy),
                     cost_model=model)
     store.add_detections("v", {f: d for f, d in enumerate(dets)})
@@ -101,6 +103,7 @@ def run_strategy(strategy: str, frames, dets, queries, model):
         cost = res.stats.decode_s + res.stats.lookup_s + res.stats.retile_s
         per_query.append(cost + first_extra)
         first_extra = 0.0
+    store.close()  # release the decode worker pool
     return np.array(per_query)
 
 

@@ -47,7 +47,8 @@ def run():
     full_cfg = DetectorConfig(kind="full")
 
     def run_one(name: str):
-        store = VideoStore()
+        # cache disabled: decode cost per layout is the measured quantity
+        store = VideoStore(tile_cache_bytes=0)
         entry = store.add_video("v", encoder=ENC, policy=RegretPolicy(),
                                 cost_model=model)
         upfront = 0.0
@@ -92,10 +93,11 @@ def run():
             res = store.scan("v").labels(label).frames(*t_range).execute()
             cost += res.stats.decode_s + res.stats.lookup_s + res.stats.retile_s
             per_query.append(cost)
+        store.close()  # release the decode worker pool
         return np.cumsum(per_query)
 
     # baseline: untiled, but queries still pay lazy detection (same for all)
-    base_store = VideoStore()
+    base_store = VideoStore(tile_cache_bytes=0)
     base_store.add_video("v", encoder=ENC, cost_model=model)
     base_store.add_detections("v", {f: d for f, d in enumerate(dets)})
     base_store.ingest("v", frames)
@@ -103,6 +105,7 @@ def run():
     for label, t_range in queries:
         r = base_store.scan("v").labels(label).frames(*t_range).execute()
         base.append(r.stats.decode_s + r.stats.lookup_s)
+    base_store.close()  # release the decode worker pool
     base = np.cumsum(base)
 
     for name in ("pretile_detect_full", "pretile_bgsub", "incremental_regret"):

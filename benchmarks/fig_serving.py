@@ -1,0 +1,133 @@
+"""Serving-layer benchmark: concurrent-scan throughput and tile-cache hit
+rate, emitting ``BENCH_serving.json``.
+
+Three regimes over the same overlapping scan workload (several clients
+issuing car/person scans over sliding windows):
+
+- ``serial_cold``  — N serial ``execute()`` calls, cache disabled: the
+                     pre-serving-layer baseline (every tile decoded per
+                     query).
+- ``batched``      — the same scans through ``execute_many()`` on a fresh
+                     store: overlapping SOTScans merge, each shared
+                     ``(sot, tile)`` decodes at most once.
+- ``served_warm``  — the same scans again through a ``serve()`` session on
+                     the now-warm store: steady-state serving, cache hits
+                     absorb (nearly) all decode work.
+
+    PYTHONPATH=src python benchmarks/fig_serving.py              # full
+    REPRO_QUICK=1 PYTHONPATH=src python benchmarks/fig_serving.py  # smoke
+
+Also prints the usual ``name,us_per_call,derived`` CSV rows so it can ride
+in ``benchmarks.run``.
+"""
+from __future__ import annotations
+
+import json
+import os
+import pathlib
+import time
+
+from benchmarks.common import ENC, corpus_video, emit, shared_cost_model
+from repro.core import NoTilingPolicy, VideoStore
+
+QUICK = bool(int(os.environ.get("REPRO_QUICK", "0")))
+N_FRAMES = 128 if QUICK else 256
+N_CLIENTS = 4 if QUICK else 8
+SCANS_PER_CLIENT = 3 if QUICK else 6
+WINDOW = 32
+OUT = os.environ.get("REPRO_BENCH_OUT", "BENCH_serving.json")
+
+
+def build_store(frames, dets, *, cache: bool) -> VideoStore:
+    store = VideoStore(tile_cache_bytes=None if cache else 0)
+    store.add_video("cam0", encoder=ENC, policy=NoTilingPolicy(),
+                    cost_model=shared_cost_model())
+    store.ingest("cam0", frames)
+    store.add_detections("cam0", {f: d for f, d in enumerate(dets)})
+    return store
+
+
+def workload(store) -> list:
+    """Overlapping windows from several logical clients (deterministic)."""
+    queries = []
+    for c in range(N_CLIENTS):
+        label = "car" if c % 2 == 0 else "person"
+        for i in range(SCANS_PER_CLIENT):
+            lo = ((c + 2 * i) * ENC.gop) % (N_FRAMES - WINDOW)
+            queries.append(store.scan("cam0").labels(label)
+                           .frames(lo, lo + WINDOW))
+    return queries
+
+
+def decoded(store) -> int:
+    return store.video("cam0").store.tiles_decoded_total
+
+
+def main() -> None:
+    frames, dets, _ = corpus_video("sparse", 0, N_FRAMES)
+    n_queries = N_CLIENTS * SCANS_PER_CLIENT
+    report: dict = {"n_queries": n_queries, "n_frames": N_FRAMES}
+
+    # -- serial, cache disabled (baseline) ---------------------------------
+    store = build_store(frames, dets, cache=False)
+    base = decoded(store)
+    t0 = time.perf_counter()
+    serial_res = [q.execute() for q in workload(store)]
+    serial_s = time.perf_counter() - t0
+    report["serial_cold"] = {
+        "seconds": serial_s,
+        "tiles_decoded": decoded(store) - base,
+        "regions": sum(len(r.regions) for r in serial_res)}
+    store.close()
+
+    # -- batched through execute_many (cold cache) -------------------------
+    store = build_store(frames, dets, cache=True)
+    base = decoded(store)
+    t0 = time.perf_counter()
+    batch_res = store.execute_many(workload(store))
+    batched_s = time.perf_counter() - t0
+    hits = sum(r.stats.cache_hits for r in batch_res)
+    misses = sum(r.stats.cache_misses for r in batch_res)
+    report["batched"] = {
+        "seconds": batched_s,
+        "tiles_decoded": decoded(store) - base,
+        "cache_hits": hits, "cache_misses": misses,
+        "cache_hit_rate": hits / max(1, hits + misses)}
+
+    # -- steady state: same workload again through a serving session -------
+    base = decoded(store)
+    t0 = time.perf_counter()
+    with store.serve() as session:
+        futs = [session.submit(q) for q in workload(store)]
+        warm_res = [f.result() for f in futs]
+    warm_s = time.perf_counter() - t0
+    hits = sum(r.stats.cache_hits for r in warm_res)
+    misses = sum(r.stats.cache_misses for r in warm_res)
+    report["served_warm"] = {
+        "seconds": warm_s,
+        "tiles_decoded": decoded(store) - base,
+        "cache_hits": hits, "cache_misses": misses,
+        "cache_hit_rate": hits / max(1, hits + misses)}
+
+    store.close()
+    report["speedup_batched"] = serial_s / max(batched_s, 1e-9)
+    report["speedup_warm"] = serial_s / max(warm_s, 1e-9)
+    report["qps_serial"] = n_queries / max(serial_s, 1e-9)
+    report["qps_warm"] = n_queries / max(warm_s, 1e-9)
+
+    pathlib.Path(OUT).write_text(json.dumps(report, indent=1))
+    emit("serving_serial_cold", 1e6 * serial_s / n_queries,
+         f"tiles={report['serial_cold']['tiles_decoded']}")
+    emit("serving_batched", 1e6 * batched_s / n_queries,
+         f"tiles={report['batched']['tiles_decoded']};"
+         f"hit_rate={report['batched']['cache_hit_rate']:.2f}")
+    emit("serving_warm", 1e6 * warm_s / n_queries,
+         f"tiles={report['served_warm']['tiles_decoded']};"
+         f"hit_rate={report['served_warm']['cache_hit_rate']:.2f}")
+    print(f"# wrote {OUT}: batched speedup "
+          f"{report['speedup_batched']:.2f}x, warm speedup "
+          f"{report['speedup_warm']:.2f}x")
+
+
+if __name__ == "__main__":
+    main()

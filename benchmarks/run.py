@@ -18,6 +18,7 @@ MODULES = [
     "benchmarks.fig10_threshold",
     "benchmarks.fig11_workloads",
     "benchmarks.fig12_upfront",
+    "benchmarks.fig_serving",
     "benchmarks.kernel_bench",
     "benchmarks.roofline_report",
 ]

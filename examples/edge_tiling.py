@@ -23,8 +23,9 @@ H, W = frames.shape[1:]
 model = calibrated_cost_model(ENC, seeds=(0,), repeats=1)
 O_Q = ["car"]  # the VDBMS tells the camera which objects queries will target
 
+# cache off: this example compares repeat-decode cost across edge layouts
 store = VideoStore(default_encoder=ENC, default_cost_model=model,
-                   default_policy=NoTilingPolicy())
+                   default_policy=NoTilingPolicy(), tile_cache_bytes=0)
 
 
 def edge_ingest(det_cfg: DetectorConfig, name: str):

@@ -29,7 +29,8 @@ for name, policy_cls in [("not_tiled", NoTilingPolicy),
                          ("all_objects", PretileAllPolicy),
                          ("incremental_more", MorePolicy),
                          ("incremental_regret", RegretPolicy)]:
-    store = VideoStore()
+    # cache off: this example compares decode cost across tiling policies
+    store = VideoStore(tile_cache_bytes=0)
     store.add_video("v", encoder=ENC, policy=policy_cls(), cost_model=model)
     store.add_detections("v", {f: d for f, d in enumerate(dets)})
     pre = store.ingest("v", frames).pretile_s

@@ -28,7 +28,7 @@ store.add_video("traffic", encoder=EncoderConfig(gop=16, qp=8),
                 policy=RegretPolicy(), cost_model=model)
 store.ingest("traffic", frames)
 print(f"ingested untiled: {store.storage_bytes('traffic') / 1e3:.0f} KB "
-      f"-> manifest at {store.manifest_path}")
+      f"-> catalog at {store.catalog_path}")
 
 # 3. the query processor detects objects as a byproduct of queries and feeds
 #    the semantic index via ADDMETADATA
@@ -43,10 +43,12 @@ query = store.scan("traffic").labels("car").frames(0, 64)
 print("\n" + query.explain().describe() + "\n")
 
 # 5. issue repeated declarative queries; the layout evolves under the policy
+#    and the tile cache absorbs repeat decodes (epoch bumps invalidate it)
 for i in range(14):
     s = query.execute().stats
     print(f"q{i}: decode={s.decode_s * 1e3:6.1f} ms  "
           f"pixels={s.pixels_decoded / 1e6:5.2f} M  tiles={s.tiles_decoded:3.0f}"
+          f"  cache={s.cache_hits}h/{s.cache_misses}m"
           f"  retile={s.retile_s * 1e3:6.1f} ms")
 
 print("final layouts:",
@@ -64,7 +66,18 @@ y1, x1, y2, x2 = box
 err = np.abs(px - frames[f, y1:y2, x1:x2]).mean()
 print(f"mean |decoded - source| = {err:.2f} (8-bit scale)")
 
-# 8. reopen the catalog from its on-disk manifest: no re-ingest needed
+# 8. concurrent serving: overlapping scans submitted together merge their
+#    SOT decodes (each shared tile decoded at most once, then cached)
+with store.serve() as session:
+    futs = [session.submit(store.scan("traffic").labels("car").frames(0, 64))
+            for _ in range(4)]
+    batch = [f.result() for f in futs]
+hits = sum(r.stats.cache_hits for r in batch)
+misses = sum(r.stats.cache_misses for r in batch)
+print(f"\nserved 4 overlapping scans: {hits} cache hits, "
+      f"{misses} fresh tile decodes")
+
+# 9. reopen the catalog from its on-disk manifest: no re-ingest needed
 reopened = VideoStore(store_root=root)
 res2 = reopened.scan("traffic").labels("car").frames(0, 64).execute()
 same = all(np.array_equal(p1, p2) for (_, _, p1), (_, _, p2)

@@ -64,5 +64,6 @@ for i in range(3):
 
 print("layouts after analytics queries:",
       [r.layout.describe() for r in store.video("cam0").store.sots])
-print("per-query history (decode ms):",
-      [f"{s.decode_s * 1e3:.0f}" for s in store.video("cam0").history[-8:]])
+print("per-query history (decode ms / cache h:m):",
+      [f"{s.decode_s * 1e3:.0f} {s.cache_hits}:{s.cache_misses}"
+       for s in store.video("cam0").history[-8:]])

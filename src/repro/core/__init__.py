@@ -3,8 +3,10 @@
 Tile layouts, cost model + what-if, B+-tree semantic index, KQKO optimizer,
 incremental (lazy / more / regret) tiling policies, tile store, and the
 VideoStore engine: a multi-video catalog with a declarative scan-query
-builder and an explicit plan/execute split (the deprecated single-video
-``TASM`` facade remains as a shim).
+builder, an explicit plan/execute split, and a concurrent serving layer —
+an epoch-keyed tile cache (``tile_cache.py``) plus a merging scan scheduler
+(``scheduler.py``) behind ``execute``/``execute_many``/``serve`` (the
+deprecated single-video ``TASM`` facade remains as a shim).
 """
 from repro.core.cost import CostModel, calibrate, pixels_and_tiles, query_cost
 from repro.core.engine import IngestStats, VideoEntry, VideoStore
@@ -26,6 +28,8 @@ from repro.core.policies import (
 )
 from repro.core.query import (PhysicalPlan, ScanPlan, ScanQuery, ScanResult,
                               ScanStats, SOTScan)
+from repro.core.scheduler import ScanScheduler, ServingSession
 from repro.core.semantic_index import SemanticIndex
 from repro.core.storage import TileStore
 from repro.core.tasm import TASM
+from repro.core.tile_cache import CacheStats, TileCache

@@ -1,10 +1,10 @@
-"""VideoStore: the multi-video storage engine (paper §3, Fig. 2, scaled up).
+"""VideoStore: the multi-video storage engine with a concurrent serving
+layer (paper §3, Fig. 2, scaled up).
 
-Where the seed exposed a per-video ``TASM`` facade, :class:`VideoStore` is a
-*catalog*: many named videos, each with its own physical configuration
-(:class:`EncoderConfig`, tiling :class:`Policy`, calibrated
-:class:`CostModel`, :class:`TileStore`, :class:`SemanticIndex`), behind one
-declarative query surface::
+:class:`VideoStore` is a *catalog*: many named videos, each with its own
+physical configuration (:class:`EncoderConfig`, tiling :class:`Policy`,
+calibrated :class:`CostModel`, :class:`TileStore`, :class:`SemanticIndex`),
+behind one declarative query surface::
 
     store = VideoStore(store_root="/data/tasm")
     store.add_video("cam0", encoder=EncoderConfig(gop=16), policy=RegretPolicy())
@@ -15,17 +15,35 @@ declarative query surface::
 
 Plan/execute split: the builder produces a logical :class:`ScanPlan`;
 :meth:`VideoStore.lower` turns it into a :class:`PhysicalPlan` (the exact
-SOTs and tile indices to decode, costed through the §4.1 what-if interface);
-:meth:`VideoStore.execute` batches the planned tile decodes across SOTs
-through a thread pool, assembles regions deterministically (identical pixels
-and ordering to the old serial loop), then runs the per-SOT policy hooks.
+SOTs and tile indices to decode, costed through the §4.1 what-if
+interface).  Execution then goes through the **serving layer**:
 
-Persistence: with ``store_root`` set, the catalog writes a JSON manifest
-(``<root>/manifest.json``) holding every video's encoder, policy spec, cost
-model, SOT records (frame spans, layouts, epochs, sizes) and semantic-index
-entries.  A ``VideoStore(store_root=...)`` in a fresh process reopens the
-manifest and serves scans without re-ingesting.  Policy *state* (e.g.
-accumulated regret) is intentionally not persisted — policies restart cold.
+- **Tile cache** (``core/tile_cache.py``) — a byte-budgeted LRU of decoded
+  tile arrays keyed ``(video, sot_id, epoch, tile_idx)``.  Every tile fetch
+  consults it before decoding, so overlapping scans stop re-decoding shared
+  tiles; the epoch in the key means a ``retile`` invalidates naturally and
+  the cache can never serve pre-retile pixels.  Size it with
+  ``VideoStore(tile_cache_bytes=...)`` (0 disables).
+- **Scan scheduler** (``core/scheduler.py``) — :meth:`execute` is a thin
+  client of a :class:`ScanScheduler` that accepts physical plans from
+  concurrent callers, merges SOTScans targeting the same ``(video, sot_id,
+  epoch)`` into one decode with the union of tile indices on a shared
+  worker pool, and fans per-query results back out.  Batch submission:
+  :meth:`execute_many`; concurrent submission: ``with store.serve() as s:
+  s.submit(query)``.  Region assembly and policy hooks stay deterministic
+  and bit-identical per query (plans finish strictly in submission order;
+  a mid-batch retile triggers a re-fetch at the new epoch).
+
+Persistence: with ``store_root`` set, durable state is sharded per video —
+a small catalog file (``<root>/catalog.json``: version + video names) plus
+one manifest per video (``<root>/<video>/manifest.json`` holding its
+encoder, policy spec, cost model, SOT records and semantic-index entries).
+A durable mutation to one video re-serializes only that video's shard, not
+the whole catalog.  The v1 monolithic ``<root>/manifest.json`` is migrated
+on open (shards are written, the old file is kept as ``*.v1.bak``); either
+format reopens and serves scans without re-ingesting.  Policy *state*
+(e.g. accumulated regret) is intentionally not persisted — policies
+restart cold.
 """
 from __future__ import annotations
 
@@ -35,7 +53,6 @@ import os
 import pathlib
 import shutil
 import time
-from concurrent.futures import ThreadPoolExecutor
 from dataclasses import dataclass, field
 from typing import Iterator, Optional
 
@@ -43,16 +60,20 @@ import numpy as np
 
 from repro.codec.encode import EncoderConfig
 from repro.core.cost import CostModel, pixels_and_tiles
-from repro.core.layout import BBox, TileLayout
-from repro.core.policies import (NoTilingPolicy, Policy, QueryInfo,
-                                 policy_from_spec, policy_spec)
+from repro.core.layout import TileLayout
+from repro.core.policies import (NoTilingPolicy, Policy, policy_from_spec,
+                                 policy_spec)
 from repro.core.query import (PhysicalPlan, ScanPlan, ScanQuery, ScanResult,
                               ScanStats, SOTScan)
+from repro.core.scheduler import ScanScheduler, ServingSession
 from repro.core.semantic_index import SemanticIndex
 from repro.core.storage import SOTRecord, TileStore
+from repro.core.tile_cache import DEFAULT_CACHE_BYTES, TileCache
 
-MANIFEST_NAME = "manifest.json"
-MANIFEST_VERSION = 1
+CATALOG_NAME = "catalog.json"      # v2: version + video names, O(#videos)
+MANIFEST_NAME = "manifest.json"    # v2: per-video shard; v1: the monolith
+MANIFEST_VERSION = 2
+LEGACY_MANIFEST_VERSION = 1
 
 
 @dataclass
@@ -86,13 +107,15 @@ class VideoEntry:
 
 
 class VideoStore:
-    """Catalog of videos + declarative scan queries with plan/execute split."""
+    """Catalog of videos + declarative scan queries served through a
+    cached, merging scheduler."""
 
     def __init__(self, store_root: Optional[str] = None, *,
                  default_encoder: Optional[EncoderConfig] = None,
                  default_policy: Optional[Policy] = None,
                  default_cost_model: Optional[CostModel] = None,
                  max_decode_workers: Optional[int] = None,
+                 tile_cache_bytes: Optional[int] = None,
                  autoload: bool = True):
         self.root = pathlib.Path(store_root) if store_root else None
         self.default_encoder = default_encoder or EncoderConfig()
@@ -102,15 +125,33 @@ class VideoStore:
             8, os.cpu_count() or 4)
         self._videos: dict[str, VideoEntry] = {}
         self.history: list[ScanStats] = []
-        self._dirty = False
-        if self.root is not None and autoload and self.manifest_path.exists():
-            self._load_manifest()
+        self._dirty_videos: set[str] = set()
+        self._catalog_dirty = False
+        self.tile_cache = TileCache(
+            DEFAULT_CACHE_BYTES if tile_cache_bytes is None
+            else tile_cache_bytes)
+        self.scheduler = ScanScheduler(self, cache=self.tile_cache)
+        if self.root is not None and autoload:
+            if self.catalog_path.exists():
+                self._load_catalog()
+            elif self.legacy_manifest_path.exists():
+                self._migrate_v1()
 
     # ------------------------------------------------------------- catalog
     @property
-    def manifest_path(self) -> pathlib.Path:
+    def catalog_path(self) -> pathlib.Path:
+        assert self.root is not None
+        return self.root / CATALOG_NAME
+
+    @property
+    def legacy_manifest_path(self) -> pathlib.Path:
+        """The v1 monolithic manifest (pre-sharding)."""
         assert self.root is not None
         return self.root / MANIFEST_NAME
+
+    def video_manifest_path(self, name: str) -> pathlib.Path:
+        assert self.root is not None
+        return self.root / name / MANIFEST_NAME
 
     def videos(self) -> list[str]:
         return sorted(self._videos)
@@ -152,16 +193,33 @@ class VideoStore:
                             sot_len=sot_len),
             index=SemanticIndex())
         self._videos[name] = entry
+        self._catalog_dirty = True
+        self._dirty_videos.add(name)
         return entry
 
     def drop_video(self, name: str) -> None:
-        entry = self.video(name)
-        del self._videos[name]
-        if self.root is not None:
-            d = self.root / entry.name
-            if d.exists():
-                shutil.rmtree(d)
-            self.save()
+        with self.scheduler.lock:
+            entry = self.video(name)
+            del self._videos[name]
+            self._dirty_videos.discard(name)
+            self.tile_cache.invalidate(video=name)
+            if self.root is not None:
+                # catalog first: a crash after it lands leaves only an
+                # orphaned shard directory (harmless), never a catalog
+                # pointing at a missing shard (unopenable store)
+                self._catalog_dirty = True
+                self.save()
+                d = self.root / entry.name
+                if d.exists():
+                    shutil.rmtree(d)   # tiles + the video's manifest shard
+
+    # ---------------------------------------------------------- dirtiness
+    def _mark_dirty(self, *names: str) -> None:
+        self._dirty_videos.update(names)
+
+    @property
+    def dirty(self) -> bool:
+        return bool(self._dirty_videos or self._catalog_dirty)
 
     # -------------------------------------------------------------- ingest
     def ingest(self, name: str, frames: np.ndarray, *, detections=None,
@@ -175,47 +233,61 @@ class VideoStore:
         edge-tiling path); when given, the policy's ``on_ingest`` is skipped.
         Returns :class:`IngestStats` — see its docstring for the contract.
         """
-        entry = self._videos.get(name)
-        if entry is None:
-            entry = self.add_video(name, **video_kw)
-        elif video_kw:
-            raise ValueError(
-                f"video {name!r} already configured; per-video kwargs "
-                f"{sorted(video_kw)} only apply on first ingest")
-        entry.frame_hw = frames.shape[1:]
-        if detections is not None:
-            for f, dets in enumerate(detections):
-                for label, bbox in dets:
-                    entry.index.add(name, f, label, bbox)
-        stats = IngestStats()
-        if initial_layouts:
-            stats.encode_s = entry.store.ingest(frames, layouts=dict(initial_layouts))
-        else:
-            # encode untiled first so the store has SOT records for the policy
-            stats.encode_s = entry.store.ingest(frames, layouts=None)
-            pre = entry.policy.on_ingest(entry.index, entry.store, name,
-                                         entry.frame_hw)
-            for sot_id, layout in (pre or {}).items():
-                stats.pretile_s += entry.store.retile(sot_id, layout)
-        self._dirty = True
-        self.save()
+        with self.scheduler.lock:   # no scan observes a half-ingested video
+            entry = self._videos.get(name)
+            if entry is None:
+                entry = self.add_video(name, **video_kw)
+            elif video_kw:
+                raise ValueError(
+                    f"video {name!r} already configured; per-video kwargs "
+                    f"{sorted(video_kw)} only apply on first ingest")
+            if entry.store.sots:
+                # appending footage needs sot_id offsetting the store does
+                # not do; a second ingest would collide sot_ids 0..n-1 with
+                # the existing records and duplicate every scan's regions
+                raise ValueError(
+                    f"video {name!r} already has ingested frames; "
+                    "re-ingest/append is not supported")
+            entry.frame_hw = frames.shape[1:]
+            if detections is not None:
+                for f, dets in enumerate(detections):
+                    for label, bbox in dets:
+                        entry.index.add(name, f, label, bbox)
+            stats = IngestStats()
+            if initial_layouts:
+                stats.encode_s = entry.store.ingest(
+                    frames, layouts=dict(initial_layouts))
+            else:
+                # encode untiled first so the store has SOT records for the
+                # policy
+                stats.encode_s = entry.store.ingest(frames, layouts=None)
+                pre = entry.policy.on_ingest(entry.index, entry.store, name,
+                                             entry.frame_hw)
+                for sot_id, layout in (pre or {}).items():
+                    stats.pretile_s += entry.store.retile(sot_id, layout)
+            self._mark_dirty(name)
+            self.save()
         return stats
 
     # ------------------------------------------------------------ metadata
     def add_metadata(self, video: str, frame: int, label: str,
                      x1: int, y1: int, x2: int, y2: int) -> None:
-        """The paper's ADDMETADATA(v, f, label, x1, y1, x2, y2)."""
-        self.video(video).index.add_metadata(video, frame, label,
-                                             x1, y1, x2, y2)
-        self._dirty = True
+        """The paper's ADDMETADATA(v, f, label, x1, y1, x2, y2); durable —
+        the mutation is persisted before returning."""
+        with self.scheduler.lock:
+            self.video(video).index.add_metadata(video, frame, label,
+                                                 x1, y1, x2, y2)
+            self._mark_dirty(video)
+            self.save()
 
     def add_detections(self, video: str, detections_by_frame: dict) -> None:
-        entry = self.video(video)
-        for f, dets in detections_by_frame.items():
-            for label, bbox in dets:
-                entry.index.add(video, f, label, bbox)
-        self._dirty = True
-        self.save()
+        with self.scheduler.lock:
+            entry = self.video(video)
+            for f, dets in detections_by_frame.items():
+                for label, bbox in dets:
+                    entry.index.add(video, f, label, bbox)
+            self._mark_dirty(video)
+            self.save()
 
     # ---------------------------------------------------------------- scan
     def scan(self, videos, labels=None,
@@ -236,7 +308,13 @@ class VideoStore:
     def lower(self, plan: ScanPlan) -> PhysicalPlan:
         """Lower a logical plan to the exact SOTs + tile indices to decode,
         costing each SOT through the what-if interface.  Pure: touches only
-        the semantic index, never tile data."""
+        the semantic index, never tile data.  Takes the scheduler lock so a
+        concurrent ingest/add_detections can't mutate the B+-trees under a
+        running index scan."""
+        with self.scheduler.lock:
+            return self._lower(plan)
+
+    def _lower(self, plan: ScanPlan) -> PhysicalPlan:
         pplan = PhysicalPlan(logical=plan)
         remaining = plan.limit
         for name in plan.videos:
@@ -266,15 +344,23 @@ class VideoStore:
                          if span[0] <= f < span[1]}
                 if not local:
                     continue
+                # epoch BEFORE layout: engine-level retiles hold the
+                # scheduler lock we're under, but store-level retile()
+                # calls bypass it — if one interleaves (it installs the
+                # layout, then bumps the epoch), reading the epoch first
+                # leaves this SOTScan detectably stale, and execution
+                # recomputes its tiles against the layout of record
+                epoch = rec.epoch
+                layout = rec.layout
                 needed: set[int] = set()
                 for f, boxes in local.items():
                     for box in boxes:
-                        needed.update(rec.layout.tiles_intersecting(box))
-                p, t = pixels_and_tiles(rec.layout, local,
+                        needed.update(layout.tiles_intersecting(box))
+                p, t = pixels_and_tiles(layout, local,
                                         gop=entry.encoder.gop,
                                         sot_frames=span)
                 pplan.sot_scans.append(SOTScan(
-                    video=name, sot_id=rec.sot_id, epoch=rec.epoch,
+                    video=name, sot_id=rec.sot_id, epoch=epoch,
                     tile_idxs=tuple(sorted(needed)),
                     n_frames=max(local) - rec.frame_start + 1,
                     boxes_by_frame=local, query_range=qrange,
@@ -284,100 +370,94 @@ class VideoStore:
 
     # -------------------------------------------------------------- execute
     def execute(self, pplan: PhysicalPlan) -> ScanResult:
-        """Run a physical plan: batched tile decodes across SOTs (thread
-        pool), deterministic region assembly, then per-SOT policy hooks."""
-        plan = pplan.logical
-        stats = ScanStats(lookup_s=pplan.lookup_s)
-        for ss in pplan.sot_scans:
-            stats.pixels_decoded += ss.est_pixels
-            stats.tiles_decoded += ss.est_tiles
+        """Run a physical plan through the serving layer (cached, merged
+        decodes on the shared worker pool; deterministic region assembly;
+        per-SOT policy hooks)."""
+        return self.scheduler.execute(pplan)
 
-        regions_by_video: dict[str, list] = {v: [] for v in plan.videos}
-        if plan.decode and pplan.sot_scans:
-            t0 = time.perf_counter()
-            if len(pplan.sot_scans) == 1:
-                decoded = [self._decode_one(pplan.sot_scans[0])]
-            else:
-                workers = min(self.max_decode_workers, len(pplan.sot_scans))
-                with ThreadPoolExecutor(max_workers=workers) as pool:
-                    decoded = list(pool.map(self._decode_one,
-                                            pplan.sot_scans))
-            stats.decode_s = time.perf_counter() - t0
-            # deterministic assembly, in plan order (same ordering as the
-            # old serial loop: SOTs ascending, frames ascending within each)
-            for ss, (tiles, layout) in zip(pplan.sot_scans, decoded):
-                rec = self.video(ss.video).store.sots[ss.sot_id]
-                out = regions_by_video[ss.video]
-                for f, boxes in sorted(ss.boxes_by_frame.items()):
-                    rel = f - rec.frame_start
-                    for box in boxes:
-                        out.append((f, box, _crop(layout, tiles, rel, box)))
+    def execute_many(self, plans) -> list[ScanResult]:
+        """Execute several scans as one batch: SOTScans targeting the same
+        ``(video, sot_id, epoch)`` are merged into one decode (union of tile
+        indices), so each shared tile is decoded at most once.  Accepts
+        :class:`ScanQuery`, :class:`ScanPlan` or :class:`PhysicalPlan`
+        items; results come back in submission order, each bit-identical to
+        a serial :meth:`execute` of the same plan."""
+        return self.scheduler.execute_many(plans)
 
-        # policy hooks, serially per SOT (policies mutate shared state)
-        for ss in pplan.sot_scans:
-            entry = self.video(ss.video)
-            rec = entry.store.sots[ss.sot_id]
-            qi = QueryInfo(ss.video, ss.labels, ss.query_range,
-                           ss.boxes_by_frame, rec)
-            new_layout = entry.policy.observe(qi, entry.index, entry.store,
-                                              entry.cost_model)
-            if new_layout is not None:
-                stats.retile_s += entry.store.retile(rec.sot_id, new_layout)
-                self._dirty = True
+    def serve(self, **kw) -> ServingSession:
+        """Open a concurrent serving session (micro-batching dispatcher)::
 
-        regions: list = []
-        if len(plan.videos) == 1:
-            regions = regions_by_video[plan.videos[0]]
-        else:
-            for v in plan.videos:
-                regions.extend((v, f, box, px)
-                               for f, box, px in regions_by_video[v])
-        stats.regions = len(regions)
-        self.history.append(stats)
-        for v in plan.videos:
-            self.video(v).history.append(stats)
-        if self._dirty:
-            self.save()
-        return ScanResult(regions=regions, stats=stats, plan=pplan,
-                          regions_by_video=regions_by_video)
+            with store.serve() as session:
+                futs = [session.submit(q) for q in queries]
+                results = [f.result() for f in futs]
+        """
+        return self.scheduler.session(**kw)
 
-    def _decode_one(self, ss: SOTScan):
-        """Decode one planned SOT's tile streams.  If the SOT was re-tiled
-        since planning (stale epoch), recompute the needed tiles against the
-        current layout."""
-        entry = self.video(ss.video)
-        rec = entry.store.sots[ss.sot_id]
-        tile_idxs = ss.tile_idxs
-        if rec.epoch != ss.epoch:
-            needed: set[int] = set()
-            for boxes in ss.boxes_by_frame.values():
-                for box in boxes:
-                    needed.update(rec.layout.tiles_intersecting(box))
-            tile_idxs = tuple(sorted(needed))
-        tiles = entry.store.decode_tiles(ss.sot_id, tile_idxs,
-                                         n_frames=ss.n_frames)
-        return tiles, rec.layout
+    def close(self) -> None:
+        """Flush dirty durable state and release the decode worker pool.
+        The store remains usable; a later scan re-creates the pool."""
+        with self.scheduler.lock:
+            if self.dirty:
+                self.save()
+        self.scheduler.shutdown()
+
+    def __enter__(self) -> "VideoStore":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()
+
+    # -------------------------------------------------------------- retile
+    def retile(self, video: str, sot_id: int, new_layout: TileLayout
+               ) -> float:
+        """Durably re-tile one SOT through the serving layer: takes the
+        scheduler's lock (no scan observes a half-retiled SOT), bumps the
+        epoch, purges stale cache entries, persists the video's shard.
+        Returns re-encode seconds (0.0 if the layout is unchanged)."""
+        with self.scheduler.lock:
+            dt = self._retile(video, sot_id, new_layout)
+            if self.dirty:
+                self.save()
+        return dt
+
+    def _retile(self, video: str, sot_id: int, new_layout: TileLayout
+                ) -> float:
+        """Retile without persisting (scheduler policy-hook path; the batch
+        saves once at the end).  Caller must hold ``scheduler.lock``."""
+        entry = self.video(video)
+        dt = entry.store.retile(sot_id, new_layout)
+        if dt:
+            rec = entry.store.sots[sot_id]
+            self.tile_cache.invalidate(video, sot_id,
+                                       before_epoch=rec.epoch)
+            self._mark_dirty(video)
+        return dt
 
     # -------------------------------------------------------------- what-if
     def what_if(self, video: str, labels,
                 layout_by_sot: dict[int, TileLayout],
                 t_range: Optional[tuple[int, int]] = None) -> float:
         """§4.1 what-if interface: estimated cost of a query under alternate
-        layouts, without touching tile data."""
-        entry = self.video(video)
-        boxes_by_frame = entry.index.query(video, labels, t_range)
-        total = 0.0
-        for rec in entry.store.sots:
-            span = (rec.frame_start, rec.frame_end)
-            local = {f: b for f, b in boxes_by_frame.items()
-                     if span[0] <= f < span[1]}
-            if not local:
-                continue
-            layout = layout_by_sot.get(rec.sot_id, rec.layout)
-            p, t = pixels_and_tiles(layout, local, gop=entry.encoder.gop,
-                                    sot_frames=span)
-            total += entry.cost_model.cost(p, t)
-        return total
+        layouts, without touching tile data.  Locked like :meth:`lower`, so
+        concurrent durable mutations can't shift the B+-trees mid-scan."""
+        with self.scheduler.lock:
+            entry = self.video(video)
+            boxes_by_frame = entry.index.query(video, labels, t_range)
+            if not boxes_by_frame:
+                return 0.0
+            total = 0.0
+            f_lo, f_hi = min(boxes_by_frame), max(boxes_by_frame) + 1
+            for rec in entry.store.sots_in_range(f_lo, f_hi):
+                span = (rec.frame_start, rec.frame_end)
+                local = {f: b for f, b in boxes_by_frame.items()
+                         if span[0] <= f < span[1]}
+                if not local:
+                    continue
+                layout = layout_by_sot.get(rec.sot_id, rec.layout)
+                p, t = pixels_and_tiles(layout, local, gop=entry.encoder.gop,
+                                        sot_frames=span)
+                total += entry.cost_model.cost(p, t)
+            return total
 
     # ---------------------------------------------------------------- stats
     def storage_bytes(self, video: Optional[str] = None) -> float:
@@ -387,19 +467,30 @@ class VideoStore:
                          for e in self._videos.values()))
 
     # ------------------------------------------------------------- manifest
-    def save(self) -> None:
-        """Write the catalog manifest (atomic) when backed by disk."""
-        if self.root is None:
-            self._dirty = False
-            return
-        self.root.mkdir(parents=True, exist_ok=True)
-        doc = {"version": MANIFEST_VERSION,
-               "videos": {name: self._entry_doc(e)
-                          for name, e in self._videos.items()}}
-        tmp = self.manifest_path.with_suffix(".tmp")
-        tmp.write_text(json.dumps(doc, indent=1))
-        tmp.rename(self.manifest_path)
-        self._dirty = False
+    def save(self, *, full: bool = False) -> None:
+        """Persist durable state when backed by disk: the shards of dirty
+        videos plus, when membership changed, the catalog file.  Each write
+        is atomic (tmp + rename); ``full=True`` rewrites everything.
+        Takes the scheduler lock, so saves never race a batch's end-of-run
+        save or a concurrent durable mutation."""
+        with self.scheduler.lock:
+            if self.root is None:
+                self._dirty_videos.clear()
+                self._catalog_dirty = False
+                return
+            self.root.mkdir(parents=True, exist_ok=True)
+            names = set(self._videos) if full \
+                else self._dirty_videos & set(self._videos)
+            for name in sorted(names):
+                doc = {"version": MANIFEST_VERSION, "name": name,
+                       **self._entry_doc(self._videos[name])}
+                _atomic_write_json(self.video_manifest_path(name), doc)
+            if full or self._catalog_dirty or not self.catalog_path.exists():
+                _atomic_write_json(self.catalog_path,
+                                   {"version": MANIFEST_VERSION,
+                                    "videos": self.videos()})
+            self._dirty_videos.clear()
+            self._catalog_dirty = False
 
     def _entry_doc(self, e: VideoEntry) -> dict:
         cm = e.cost_model
@@ -421,33 +512,67 @@ class VideoStore:
             "index": e.index.dump(e.name),
         }
 
-    def _load_manifest(self) -> None:
-        doc = json.loads(self.manifest_path.read_text())
-        assert doc.get("version") == MANIFEST_VERSION, doc.get("version")
+    def _entry_from_doc(self, name: str, v: dict) -> VideoEntry:
+        enc = EncoderConfig(**v["encoder"])
+        cmd = v["cost_model"]
+        cm = CostModel(beta=cmd["beta"], gamma=cmd["gamma"],
+                       r_squared=cmd["r_squared"])
+        cm.encode_per_pixel = cmd["encode_per_pixel"]
+        cm.encode_per_tile = cmd["encode_per_tile"]
+        entry = VideoEntry(
+            name=name, encoder=enc, policy=policy_from_spec(v["policy"]),
+            cost_model=cm,
+            store=TileStore(name, enc, root=str(self.root),
+                            sot_len=v["sot_len"]),
+            index=SemanticIndex(),
+            frame_hw=tuple(v["frame_hw"]) if v["frame_hw"] else None)
+        entry.store.restore([
+            SOTRecord(s["sot_id"], s["frame_start"], s["frame_end"],
+                      TileLayout(tuple(s["heights"]), tuple(s["widths"])),
+                      epoch=s["epoch"], size_bytes=s["size_bytes"])
+            for s in v["sots"]])
+        entry.index.load(name, v["index"])
+        return entry
+
+    def _load_catalog(self) -> None:
+        doc = json.loads(self.catalog_path.read_text())
+        if doc.get("version") != MANIFEST_VERSION:
+            raise ValueError(f"unsupported catalog version "
+                             f"{doc.get('version')!r} in {self.catalog_path}")
+        for name in doc["videos"]:
+            v = json.loads(self.video_manifest_path(name).read_text())
+            if v.get("version") != MANIFEST_VERSION:
+                raise ValueError(
+                    f"unsupported manifest version {v.get('version')!r} "
+                    f"for video {name!r}")
+            self._videos[name] = self._entry_from_doc(name, v)
+
+    def _migrate_v1(self) -> None:
+        """Adopt a v1 monolithic manifest and rewrite it as v2 per-video
+        shards + catalog.  The old file is kept as ``manifest.json.v1.bak``;
+        tile data is untouched (no re-ingest)."""
+        legacy = self.legacy_manifest_path
+        doc = json.loads(legacy.read_text())
+        ver = doc.get("version")
+        if ver != LEGACY_MANIFEST_VERSION:
+            raise ValueError(f"cannot migrate manifest version {ver!r} "
+                             f"at {legacy}")
         for name, v in doc["videos"].items():
-            enc = EncoderConfig(**v["encoder"])
-            cmd = v["cost_model"]
-            cm = CostModel(beta=cmd["beta"], gamma=cmd["gamma"],
-                           r_squared=cmd["r_squared"])
-            cm.encode_per_pixel = cmd["encode_per_pixel"]
-            cm.encode_per_tile = cmd["encode_per_tile"]
-            entry = VideoEntry(
-                name=name, encoder=enc, policy=policy_from_spec(v["policy"]),
-                cost_model=cm,
-                store=TileStore(name, enc, root=str(self.root),
-                                sot_len=v["sot_len"]),
-                index=SemanticIndex(),
-                frame_hw=tuple(v["frame_hw"]) if v["frame_hw"] else None)
-            entry.store.restore([
-                SOTRecord(s["sot_id"], s["frame_start"], s["frame_end"],
-                          TileLayout(tuple(s["heights"]), tuple(s["widths"])),
-                          epoch=s["epoch"], size_bytes=s["size_bytes"])
-                for s in v["sots"]])
-            entry.index.load(name, v["index"])
-            self._videos[name] = entry
+            self._videos[name] = self._entry_from_doc(name, v)
+        self._dirty_videos = set(self._videos)
+        self._catalog_dirty = True
+        self.save()
+        legacy.rename(legacy.parent / (legacy.name + ".v1.bak"))
 
 
 # ------------------------------------------------------------------ helpers
+def _atomic_write_json(path: pathlib.Path, doc: dict) -> None:
+    path.parent.mkdir(parents=True, exist_ok=True)
+    tmp = path.parent / f".{path.name}.tmp"
+    tmp.write_text(json.dumps(doc, indent=1))
+    tmp.rename(path)
+
+
 def _apply_limit(boxes_by_frame: dict[int, list], limit: int
                  ) -> dict[int, list]:
     """Keep at most ``limit`` regions, frames ascending (deterministic)."""
@@ -459,23 +584,4 @@ def _apply_limit(boxes_by_frame: dict[int, list], limit: int
         take = boxes_by_frame[f][:left]
         out[f] = take
         left -= len(take)
-    return out
-
-
-def _crop(layout: TileLayout, tiles: dict[int, np.ndarray],
-          rel_frame: int, box: BBox) -> np.ndarray:
-    """Assemble the pixels of ``box`` from decoded tiles of one frame
-    (bit-identical to the old serial TASM path)."""
-    y1, x1, y2, x2 = box
-    out = np.zeros((y2 - y1, x2 - x1), dtype=np.float32)
-    for t in layout.tiles_intersecting(box):
-        if t not in tiles:
-            continue
-        ty1, tx1, ty2, tx2 = layout.tile_rect(t)
-        iy1, ix1 = max(y1, ty1), max(x1, tx1)
-        iy2, ix2 = min(y2, ty2), min(x2, tx2)
-        if iy1 >= iy2 or ix1 >= ix2:
-            continue
-        out[iy1 - y1:iy2 - y1, ix1 - x1:ix2 - x1] = \
-            tiles[t][rel_frame, iy1 - ty1:iy2 - ty1, ix1 - tx1:ix2 - tx1]
     return out

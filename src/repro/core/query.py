@@ -17,8 +17,11 @@ Three stages, each a first-class object:
                           ``VideoStore.lower``; ``.explain()`` returns it
                           without decoding anything.
 
-The executor (``VideoStore.execute``) consumes a :class:`PhysicalPlan` and
-batches tile decodes across SOTs through a thread pool; see ``engine.py``.
+Execution goes through the serving layer (``scheduler.py``): plans are
+batches of explicit :class:`SOTScan` work units, so a scheduler can merge
+overlapping SOT scans from concurrent queries into one decode and serve
+repeat tiles from the epoch-keyed tile cache (``tile_cache.py``); see
+``engine.py`` for the full picture.
 """
 from __future__ import annotations
 
@@ -31,13 +34,35 @@ from repro.core.semantic_index import parse_predicate
 # --------------------------------------------------------------------- stats
 @dataclass
 class ScanStats:
+    """Per-query accounting.  ``pixels_decoded``/``tiles_decoded`` are the
+    *planned* (estimated) decode volume — they fill even for ``.decode(False)``
+    estimation-only scans.  ``cache_hits``/``cache_misses`` count what the
+    serving layer actually did: of the tiles this query needed, how many were
+    served from the tile cache (or a merged batch decode) vs freshly decoded.
+    A freshly decoded tile shared by several merged queries is charged as a
+    miss only to the first query (submission order) that needed it; likewise
+    in a merged batch each group's decode wall seconds land in the first
+    consumer's ``decode_s``, so summing over history counts shared work once
+    (a solo ``execute`` keeps the old wall-clock-of-decode-phase meaning)."""
     lookup_s: float = 0.0
     decode_s: float = 0.0
     retile_s: float = 0.0
     detect_s: float = 0.0
     pixels_decoded: float = 0.0
     tiles_decoded: float = 0.0
+    cache_hits: int = 0
+    cache_misses: int = 0
     regions: int = 0
+
+    @property
+    def tiles_fetched(self) -> int:
+        """Tiles this query obtained through the serving layer."""
+        return self.cache_hits + self.cache_misses
+
+    @property
+    def cache_hit_rate(self) -> float:
+        return self.cache_hits / self.tiles_fetched if self.tiles_fetched \
+            else 0.0
 
     @property
     def query_s(self) -> float:

@@ -13,6 +13,7 @@ from __future__ import annotations
 
 import pathlib
 import shutil
+import threading
 import time
 from dataclasses import dataclass, field
 from typing import Optional
@@ -47,6 +48,11 @@ class TileStore:
         # B+-tree keyed on frame_start: interval lookup for sots_in_range
         self._intervals = BPlusTree(order=16)
         self.encode_seconds_total = 0.0
+        # actual tile-stream decodes (cache hits in the serving layer never
+        # reach this counter) — lets tests/benchmarks verify dedup exactly;
+        # locked: group fetches decode concurrently on the worker pool
+        self.tiles_decoded_total = 0
+        self._stats_lock = threading.Lock()
 
     # -- paths ---------------------------------------------------------------
     def _sot_dir(self, rec: SOTRecord) -> pathlib.Path:
@@ -127,6 +133,9 @@ class TileStore:
         n_full = n_frames // gop
         tail = n_frames - n_full * gop
         out = {}
+        tile_idxs = list(tile_idxs)
+        with self._stats_lock:
+            self.tiles_decoded_total += len(tile_idxs)
         for t in tile_idxs:
             enc = self._read_tile(rec, t)
             parts = []

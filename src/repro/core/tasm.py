@@ -113,7 +113,8 @@ class TASM:
 
     def add_metadata(self, video_id: str, frame: int, label: str,
                      x1: int, y1: int, x2: int, y2: int) -> None:
-        self._entry.index.add_metadata(video_id, frame, label, x1, y1, x2, y2)
+        """ADDMETADATA through the engine, so it is locked and durable."""
+        self._engine.add_metadata(video_id, frame, label, x1, y1, x2, y2)
 
     def add_detections(self, detections_by_frame: dict[int, list]) -> float:
         """Bulk-add (label, bbox) detections; returns 0 (timed by caller)."""

@@ -1,0 +1,144 @@
+"""Byte-budgeted LRU cache of decoded tile arrays (serving layer, part 1).
+
+Decoded tiles are the engine's most expensive artifact: every scan that
+touches a SOT pays a full tile-stream decode even when an earlier query
+already materialized the same pixels.  ``TileCache`` keeps those arrays
+across queries, keyed::
+
+    (video, sot_id, epoch, tile_idx)
+
+The ``epoch`` component makes invalidation *structural*: ``TileStore.retile``
+bumps the SOT's epoch, so every key minted against the old layout simply
+stops being asked for — the cache can never serve pre-retile pixels.  Stale
+epochs are additionally purged eagerly (:meth:`invalidate`) so dead entries
+do not squat on the byte budget.
+
+Frame-depth semantics: a cached array of ``n`` frames serves any request for
+``<= n`` frames as a prefix view.  Decode is GOP-independent and
+deterministic, so ``arr[:k]`` is bit-identical to a fresh ``k``-frame decode
+of the same tile.  A request for *more* frames than cached is a miss; the
+deeper decode then replaces the shallower entry.
+
+Thread safety: every public method takes the internal lock; returned arrays
+are shared read-only views — callers must not write into them (the executor
+only crops from them).
+"""
+from __future__ import annotations
+
+import threading
+from collections import OrderedDict
+from dataclasses import dataclass
+
+import numpy as np
+
+#: cache key: (video, sot_id, epoch, tile_idx)
+TileKey = tuple[str, int, int, int]
+
+DEFAULT_CACHE_BYTES = 256 << 20  # 256 MiB
+
+
+@dataclass
+class CacheStats:
+    """Cumulative counters (monotone except ``bytes_cached``/``entries``)."""
+    hits: int = 0
+    misses: int = 0
+    evictions: int = 0
+    invalidations: int = 0
+    bytes_cached: int = 0
+    entries: int = 0
+
+    @property
+    def hit_rate(self) -> float:
+        total = self.hits + self.misses
+        return self.hits / total if total else 0.0
+
+
+class TileCache:
+    """Thread-safe byte-budgeted LRU of decoded tile arrays.
+
+    ``budget_bytes <= 0`` disables the cache: every ``get`` misses and
+    ``put`` is a no-op (useful for measuring cold-cache behaviour).
+    """
+
+    def __init__(self, budget_bytes: int = DEFAULT_CACHE_BYTES):
+        self.budget_bytes = int(budget_bytes)
+        self._lru: OrderedDict[TileKey, np.ndarray] = OrderedDict()
+        self._lock = threading.Lock()
+        self._hits = 0
+        self._misses = 0
+        self._evictions = 0
+        self._invalidations = 0
+        self._bytes = 0
+
+    # ------------------------------------------------------------- access
+    def get(self, key: TileKey, n_frames: int | None = None
+            ) -> np.ndarray | None:
+        """Return the cached decode for ``key`` (first ``n_frames`` frames),
+        or None.  A cached array shallower than ``n_frames`` is a miss."""
+        with self._lock:
+            arr = self._lru.get(key)
+            if arr is None or (n_frames is not None
+                               and arr.shape[0] < n_frames):
+                self._misses += 1
+                return None
+            self._lru.move_to_end(key)
+            self._hits += 1
+            return arr if n_frames is None else arr[:n_frames]
+
+    def put(self, key: TileKey, arr: np.ndarray) -> None:
+        """Insert (or deepen) a decoded tile; evicts LRU entries over
+        budget.  Arrays larger than the whole budget are not cached."""
+        nbytes = int(arr.nbytes)
+        if nbytes > self.budget_bytes:
+            return
+        with self._lock:
+            old = self._lru.pop(key, None)
+            if old is not None:
+                if old.shape[0] > arr.shape[0]:
+                    # never shrink: the deeper decode serves more requests
+                    self._lru[key] = old
+                    return
+                self._bytes -= old.nbytes
+            self._lru[key] = arr
+            self._bytes += nbytes
+            while self._bytes > self.budget_bytes and self._lru:
+                _, victim = self._lru.popitem(last=False)
+                self._bytes -= victim.nbytes
+                self._evictions += 1
+
+    # ------------------------------------------------------- invalidation
+    def invalidate(self, video: str | None = None,
+                   sot_id: int | None = None,
+                   before_epoch: int | None = None) -> int:
+        """Drop entries matching the given components; ``before_epoch``
+        keeps entries at or above that epoch (purge-stale).  Returns the
+        number of entries dropped."""
+        with self._lock:
+            doomed = [k for k in self._lru
+                      if (video is None or k[0] == video)
+                      and (sot_id is None or k[1] == sot_id)
+                      and (before_epoch is None or k[2] < before_epoch)]
+            for k in doomed:
+                self._bytes -= self._lru.pop(k).nbytes
+            self._invalidations += len(doomed)
+            return len(doomed)
+
+    def clear(self) -> int:
+        return self.invalidate()
+
+    # --------------------------------------------------------------- stats
+    def stats(self) -> CacheStats:
+        with self._lock:
+            return CacheStats(hits=self._hits, misses=self._misses,
+                              evictions=self._evictions,
+                              invalidations=self._invalidations,
+                              bytes_cached=self._bytes,
+                              entries=len(self._lru))
+
+    def __len__(self) -> int:
+        with self._lock:
+            return len(self._lru)
+
+    def __contains__(self, key: TileKey) -> bool:
+        with self._lock:
+            return key in self._lru

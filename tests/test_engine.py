@@ -247,16 +247,71 @@ class TestManifest:
             assert f1 == f2 and b1 == b2
             np.testing.assert_array_equal(p1, p2)
 
-    def test_manifest_is_versioned_json(self, small_video, tmp_path):
+    def test_manifest_is_versioned_and_sharded(self, small_video, tmp_path):
         frames, dets = small_video
         store = VideoStore(store_root=str(tmp_path))
         fill(store, "cam0", frames, dets)
-        doc = json.loads((tmp_path / "manifest.json").read_text())
-        assert doc["version"] == 1
-        v = doc["videos"]["cam0"]
+        cat = json.loads((tmp_path / "catalog.json").read_text())
+        assert cat["version"] == 2 and cat["videos"] == ["cam0"]
+        v = json.loads((tmp_path / "cam0" / "manifest.json").read_text())
+        assert v["version"] == 2 and v["name"] == "cam0"
         assert v["encoder"]["gop"] == 16 and v["sot_len"] == 16
         assert len(v["sots"]) == len(frames) // 16
         assert v["index"]  # semantic-index entries persisted
+
+    def test_mutation_rewrites_only_the_touched_shard(self, small_video,
+                                                      tmp_path):
+        frames, dets = small_video
+        store = VideoStore(store_root=str(tmp_path))
+        fill(store, "cam0", frames, dets)
+        fill(store, "cam1", frames, dets)
+        other = tmp_path / "cam0" / "manifest.json"
+        before = other.stat().st_mtime_ns
+        store.add_metadata("cam1", 0, "bus", 1, 1, 9, 9)
+        assert other.stat().st_mtime_ns == before  # cam0 shard untouched
+        v1 = json.loads((tmp_path / "cam1" / "manifest.json").read_text())
+        assert any(lbl == "bus" for _, lbl, _, _ in v1["index"])
+
+    def test_add_metadata_survives_reopen(self, small_video, tmp_path):
+        frames, dets = small_video
+        store = VideoStore(store_root=str(tmp_path))
+        fill(store, "cam0", frames, dets)
+        store.add_metadata("cam0", 3, "bicycle", 10, 20, 30, 40)
+        del store
+        reopened = VideoStore(store_root=str(tmp_path))
+        boxes = reopened.video("cam0").index.boxes_for_label("cam0", "bicycle")
+        assert boxes == {3: [(20, 10, 40, 30)]}  # ADDMETADATA is durable
+
+    def test_v1_monolithic_manifest_migrates(self, small_video, tmp_path):
+        frames, dets = small_video
+        store = VideoStore(store_root=str(tmp_path))
+        fill(store, "cam0", frames, dets)
+        fill(store, "cam1", frames, dets, policy=PretileAllPolicy())
+        res1 = store.scan("cam0").labels("car").frames(0, 32).execute()
+        del store
+        # rewrite the on-disk state in the v1 monolithic format
+        videos = {}
+        for name in ("cam0", "cam1"):
+            shard = tmp_path / name / "manifest.json"
+            doc = json.loads(shard.read_text())
+            doc.pop("version"), doc.pop("name")
+            videos[name] = doc
+            shard.unlink()
+        (tmp_path / "catalog.json").unlink()
+        (tmp_path / "manifest.json").write_text(
+            json.dumps({"version": 1, "videos": videos}))
+
+        store2 = VideoStore(store_root=str(tmp_path))  # migrates on open
+        assert store2.videos() == ["cam0", "cam1"]
+        assert (tmp_path / "catalog.json").exists()
+        assert (tmp_path / "cam0" / "manifest.json").exists()
+        assert not (tmp_path / "manifest.json").exists()
+        assert (tmp_path / "manifest.json.v1.bak").exists()
+        res2 = store2.scan("cam0").labels("car").frames(0, 32).execute()
+        assert len(res2.regions) == len(res1.regions)  # no re-ingest
+        for (f1, b1, p1), (f2, b2, p2) in zip(res1.regions, res2.regions):
+            assert f1 == f2 and b1 == b2
+            np.testing.assert_array_equal(p1, p2)
 
     def test_multi_video_manifest(self, small_video, tmp_path):
         frames, dets = small_video
@@ -301,3 +356,13 @@ class TestIngestContract:
                           initial_layouts={0: partition(H, W, boxes)})
         assert st.encode_s > 0 and st.pretile_s == 0.0
         assert store.video("v").store.sots[0].layout.n_tiles > 1
+
+
+class TestReingestGuard:
+    def test_second_ingest_of_same_video_rejected(self, small_video):
+        frames, _ = small_video
+        store = VideoStore()
+        store.add_video("v", encoder=ENC, cost_model=MODEL)
+        store.ingest("v", frames)
+        with pytest.raises(ValueError, match="already has ingested"):
+            store.ingest("v", frames)
