@@ -90,8 +90,11 @@ def make_policy(strategy: str):
 
 def run_strategy(strategy: str, frames, dets, queries, model):
     # cache disabled: the figure compares per-layout decode cost, so repeat
-    # queries must actually decode (the serving cache would zero them out)
-    store = VideoStore(tile_cache_bytes=0)
+    # queries must actually decode (the serving cache would zero them out).
+    # inline tuning: the figure charges re-tiling to the triggering query
+    # (the paper's cumulative-cost accounting), so retiles must run
+    # synchronously, not on the background tuner
+    store = VideoStore(tile_cache_bytes=0, tuning="inline")
     store.add_video("v", encoder=ENC, policy=make_policy(strategy),
                     cost_model=model)
     store.add_detections("v", {f: d for f, d in enumerate(dets)})

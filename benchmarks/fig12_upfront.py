@@ -47,8 +47,9 @@ def run():
     full_cfg = DetectorConfig(kind="full")
 
     def run_one(name: str):
-        # cache disabled: decode cost per layout is the measured quantity
-        store = VideoStore(tile_cache_bytes=0)
+        # cache disabled: decode cost per layout is the measured quantity;
+        # inline tuning: re-tiling is charged to the triggering query
+        store = VideoStore(tile_cache_bytes=0, tuning="inline")
         entry = store.add_video("v", encoder=ENC, policy=RegretPolicy(),
                                 cost_model=model)
         upfront = 0.0

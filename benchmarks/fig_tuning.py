@@ -1,0 +1,175 @@
+"""Tuning-mode benchmark: per-query latency under ``tuning="inline"`` vs
+``tuning="background"`` on the incremental (shifting) workload, emitting
+``BENCH_tuning.json``.
+
+The point of the background physical tuner: policy-driven re-tiling no
+longer runs inside the scan that triggered it, so the *unlucky queries*
+that used to pay the full re-encode stop paying it — per-query p95 drops —
+while the tuner converges to the **same** physical design.  Three sections:
+
+- ``inline``      — the pre-tuner behaviour: each policy-triggered re-tile
+                    re-encodes synchronously inside the scan (its seconds
+                    land in that query's wall time and ``retile_s``).
+- ``background``  — the same workload; scans only emit observations, the
+                    tuner re-tiles off the critical path.  A
+                    ``drain_tuner()`` barrier after each query (outside the
+                    timer) keeps the observation cadence identical to
+                    inline, so final layouts / storage bytes / scan results
+                    must match inline **exactly** — verified, not assumed.
+- ``resume``      — persistence (manifest v3): the background store is
+                    reopened from disk and must resume RegretPolicy tuning
+                    from its persisted runtime state rather than cold.
+
+    PYTHONPATH=src python benchmarks/fig_tuning.py              # full
+    REPRO_QUICK=1 PYTHONPATH=src python benchmarks/fig_tuning.py  # smoke
+
+Also prints ``name,us_per_call,derived`` CSV rows for ``benchmarks.run``.
+"""
+from __future__ import annotations
+
+import json
+import os
+import pathlib
+import tempfile
+import time
+
+import numpy as np
+
+from benchmarks.common import ENC, corpus_video, emit, shared_cost_model
+from repro.core import RegretPolicy, VideoStore
+
+QUICK = bool(int(os.environ.get("REPRO_QUICK", "0")))
+N_FRAMES = 128 if QUICK else 256
+N_QUERIES = 24 if QUICK else 60
+WINDOW = 32
+OUT = os.environ.get("REPRO_BENCH_OUT", "BENCH_tuning.json")
+
+
+def workload():
+    """The incremental workload (paper §5.3 W4): queries shift
+    car -> person -> car over sliding windows; deterministic."""
+    rng = np.random.default_rng(0)
+    starts = rng.integers(0, N_FRAMES - WINDOW, N_QUERIES)
+    labels = (["car"] * (N_QUERIES // 3) + ["person"] * (N_QUERIES // 3)
+              + ["car"] * (N_QUERIES - 2 * (N_QUERIES // 3)))
+    return list(zip(labels, [(int(s), int(s) + WINDOW) for s in starts]))
+
+
+def build(model, frames, dets, *, mode, root=None):
+    # cache off: the measured quantity is per-layout decode + tuning cost
+    store = VideoStore(store_root=root, tile_cache_bytes=0, tuning=mode)
+    store.add_video("v", encoder=ENC, policy=RegretPolicy(), cost_model=model)
+    store.ingest("v", frames)
+    store.add_detections("v", {f: d for f, d in enumerate(dets)})
+    return store
+
+
+def run_mode(store, queries, *, drain_each: bool):
+    """Per-query wall latency of the scan itself.  For the background
+    store a drain barrier runs after each query OUTSIDE the timer: the
+    tuner still does all the re-encode work, queries just don't wait."""
+    lat = []
+    for label, t_range in queries:
+        t0 = time.perf_counter()
+        store.scan("v").labels(label).frames(*t_range).execute()
+        lat.append(time.perf_counter() - t0)
+        if drain_each:
+            store.drain_tuner(timeout=300)
+    return np.asarray(lat)
+
+
+def layouts_of(store):
+    return [(tuple(r.layout.heights), tuple(r.layout.widths), r.epoch)
+            for r in store.video("v").store.sots]
+
+
+def pcts(lat):
+    return {"p50_ms": float(np.percentile(lat, 50) * 1e3),
+            "p95_ms": float(np.percentile(lat, 95) * 1e3),
+            "mean_ms": float(lat.mean() * 1e3),
+            "total_s": float(lat.sum())}
+
+
+def main() -> None:
+    frames, dets, _ = corpus_video("sparse", 1, N_FRAMES)
+    model = shared_cost_model()
+    queries = workload()
+    report: dict = {"n_queries": N_QUERIES, "n_frames": N_FRAMES}
+
+    # -- inline: queries pay the re-encode -------------------------------
+    # both stores disk-backed so re-encode costs are apples-to-apples (the
+    # background one doubles as the resume-section fixture)
+    inline = build(model, frames, dets, mode="inline",
+                   root=tempfile.mkdtemp(prefix="tasm_tuning_in_"))
+    lat_in = run_mode(inline, queries, drain_each=False)
+    retile_in = sum(s.retile_s for s in inline.history)
+    report["inline"] = {**pcts(lat_in), "retile_s": retile_in,
+                       "queries_charged": sum(
+                           1 for s in inline.history if s.retile_s > 0)}
+
+    # -- background: tuner pays it off the critical path -----------------
+    root = tempfile.mkdtemp(prefix="tasm_tuning_")
+    bg = build(model, frames, dets, mode="background", root=root)
+    lat_bg = run_mode(bg, queries, drain_each=True)
+    ts = bg.tuner_stats()
+    charged = sum(1 for s in bg.history if s.retile_s > 0)
+    report["background"] = {
+        **pcts(lat_bg), "queries_charged": charged,
+        "tuner": {"observed": ts.observed, "proposals": ts.proposals,
+                  "coalesced": ts.coalesced, "applied": ts.applied,
+                  "skipped": ts.skipped, "retile_s": ts.retile_s,
+                  "tuning_s": ts.tuning_s,
+                  "est_savings_s": ts.est_savings_s,
+                  "est_reencode_s": ts.est_reencode_s}}
+    if charged:
+        raise RuntimeError("background queries were charged retile time")
+
+    # -- identity: same physical design, bit-identical results -----------
+    if layouts_of(bg) != layouts_of(inline):
+        raise RuntimeError("background converged to different layouts")
+    if bg.storage_bytes() != inline.storage_bytes():
+        raise RuntimeError("background storage bytes diverged")
+    ri = inline.scan("v").labels("car").frames(0, N_FRAMES).execute()
+    rb = bg.scan("v").labels("car").frames(0, N_FRAMES).execute()
+    same = len(ri.regions) == len(rb.regions) and all(
+        a[:2] == b[:2] and np.array_equal(a[2], b[2])
+        for a, b in zip(ri.regions, rb.regions))
+    if not same:
+        raise RuntimeError("background scan results diverged from inline")
+    report["identity"] = {"layouts_match": True, "storage_match": True,
+                          "results_bit_identical": True,
+                          "n_retiled_sots": sum(
+                              1 for *_, e in layouts_of(bg) if e > 0)}
+    inline.close()
+    bg.drain_tuner(timeout=300)
+    bg.close()
+
+    # -- resume: reopened store tunes from persisted regret, not cold ----
+    reopened = VideoStore(store_root=root, tile_cache_bytes=0)
+    pol = reopened.video("v").policy
+    state = pol.state_dict()
+    if not state["seen"]:
+        raise RuntimeError("reopened RegretPolicy came back cold")
+    report["resume"] = {
+        "seen": state["seen"],
+        "regret_entries": len(state["regret"]),
+        "state_roundtrips": state == bg.video("v").policy.state_dict()}
+    reopened.close()
+
+    report["p95_speedup"] = report["inline"]["p95_ms"] / \
+        max(report["background"]["p95_ms"], 1e-9)
+    pathlib.Path(OUT).write_text(json.dumps(report, indent=1))
+    emit("tuning_inline", 1e6 * lat_in.sum() / N_QUERIES,
+         f"p95_ms={report['inline']['p95_ms']:.1f};"
+         f"retile_s={retile_in:.3f}")
+    emit("tuning_background", 1e6 * lat_bg.sum() / N_QUERIES,
+         f"p95_ms={report['background']['p95_ms']:.1f};"
+         f"applied={ts.applied};tuner_retile_s={ts.retile_s:.3f}")
+    print(f"# wrote {OUT}: p95 {report['inline']['p95_ms']:.1f}ms -> "
+          f"{report['background']['p95_ms']:.1f}ms "
+          f"({report['p95_speedup']:.2f}x), layouts/bytes/results identical, "
+          f"resume={report['resume']['state_roundtrips']}")
+
+
+if __name__ == "__main__":
+    main()

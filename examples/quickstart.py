@@ -43,7 +43,11 @@ query = store.scan("traffic").labels("car").frames(0, 64)
 print("\n" + query.explain().describe() + "\n")
 
 # 5. issue repeated declarative queries; the layout evolves under the policy
-#    and the tile cache absorbs repeat decodes (epoch bumps invalidate it)
+#    and the tile cache absorbs repeat decodes (epoch bumps invalidate it).
+#    Tuning runs in the BACKGROUND by default: queries only emit workload
+#    observations, the tuner thread re-tiles off the critical path, so
+#    retile stays 0.0 ms for every query (pass tuning="inline" to get the
+#    old synchronous behaviour)
 for i in range(14):
     s = query.execute().stats
     print(f"q{i}: decode={s.decode_s * 1e3:6.1f} ms  "
@@ -51,6 +55,9 @@ for i in range(14):
           f"  cache={s.cache_hits}h/{s.cache_misses}m"
           f"  retile={s.retile_s * 1e3:6.1f} ms")
 
+ts = store.drain_tuner()  # barrier: wait for background tuning to settle
+print(f"tuner: {ts.observed} observations -> {ts.applied} retiles applied, "
+      f"{ts.retile_s * 1e3:.0f} ms re-encode paid off the scan path")
 print("final layouts:",
       [r.layout.describe() for r in store.video("traffic").store.sots])
 print("\nafter adaptation:\n" + query.explain().describe())

@@ -62,6 +62,7 @@ for i in range(3):
     print(f"batch {i}: crops {b['pixels'].shape} labels {b['labels']} "
           f"-> logits {logits.shape}, finite={bool(np.isfinite(np.asarray(logits)).all())}")
 
+store.drain_tuner()  # let the background tuner apply pending re-tiles
 print("layouts after analytics queries:",
       [r.layout.describe() for r in store.video("cam0").store.sots])
 print("per-query history (decode ms / cache h:m):",

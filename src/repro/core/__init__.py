@@ -5,8 +5,10 @@ incremental (lazy / more / regret) tiling policies, tile store, and the
 VideoStore engine: a multi-video catalog with a declarative scan-query
 builder, an explicit plan/execute split, and a concurrent serving layer —
 an epoch-keyed tile cache (``tile_cache.py``) plus a merging scan scheduler
-(``scheduler.py``) behind ``execute``/``execute_many``/``serve`` (the
-deprecated single-video ``TASM`` facade remains as a shim).
+(``scheduler.py``) behind ``execute``/``execute_many``/``serve``, with
+policy-driven re-tiling moved off the scan path into the background
+physical tuner (``tuner.py``; ``tuning="background"|"inline"|"off"``).
+The deprecated single-video ``TASM`` facade remains as a shim.
 """
 from repro.core.cost import CostModel, calibrate, pixels_and_tiles, query_cost
 from repro.core.engine import IngestStats, VideoEntry, VideoStore
@@ -33,3 +35,4 @@ from repro.core.semantic_index import SemanticIndex
 from repro.core.storage import TileStore
 from repro.core.tasm import TASM
 from repro.core.tile_cache import CacheStats, TileCache
+from repro.core.tuner import PhysicalTuner, TunerStats

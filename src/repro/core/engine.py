@@ -33,17 +33,30 @@ interface).  Execution then goes through the **serving layer**:
   s.submit(query)``.  Region assembly and policy hooks stay deterministic
   and bit-identical per query (plans finish strictly in submission order;
   a mid-batch retile triggers a re-fetch at the new epoch).
+- **Physical tuner** (``core/tuner.py``) — policy-driven re-tiling runs in
+  a background subsystem instead of inside the scan that triggered it.
+  Under ``tuning="background"`` (the default) the scheduler's policy hooks
+  only *emit observations* into a bounded workload log; a tuner thread
+  replays them through the policies, coalesces proposals per SOT (newest
+  wins), scores them through the §4.1 what-if interface, and applies
+  winners via the durable, lock-taking, epoch-bumping retile path —
+  queries are never charged re-encode time (``ScanStats.retile_s`` stays 0;
+  see :meth:`tuner_stats`).  ``tuning="inline"`` preserves the synchronous
+  semantics bit-for-bit; ``tuning="off"`` disables query-driven tuning.
+  :meth:`drain_tuner` is the deterministic barrier for tests/benchmarks.
 
 Persistence: with ``store_root`` set, durable state is sharded per video —
 a small catalog file (``<root>/catalog.json``: version + video names) plus
 one manifest per video (``<root>/<video>/manifest.json`` holding its
-encoder, policy spec, cost model, SOT records and semantic-index entries).
-A durable mutation to one video re-serializes only that video's shard, not
-the whole catalog.  The v1 monolithic ``<root>/manifest.json`` is migrated
-on open (shards are written, the old file is kept as ``*.v1.bak``); either
-format reopens and serves scans without re-ingesting.  Policy *state*
-(e.g. accumulated regret) is intentionally not persisted — policies
-restart cold.
+encoder, policy spec *and runtime state*, cost model, SOT records and
+semantic-index entries).  A durable mutation to one video re-serializes
+only that video's shard, not the whole catalog.  The v1 monolithic
+``<root>/manifest.json`` is migrated on open (shards are written, the old
+file is kept as ``*.v1.bak``), and v2 shards (no policy runtime state) are
+adopted and rewritten as v3; every format reopens and serves scans without
+re-ingesting.  Since v3, policy runtime state (accumulated regret, seen
+labels) persists per shard, so a reopened store resumes tuning where it
+left off instead of cold.
 """
 from __future__ import annotations
 
@@ -69,10 +82,12 @@ from repro.core.scheduler import ScanScheduler, ServingSession
 from repro.core.semantic_index import SemanticIndex
 from repro.core.storage import SOTRecord, TileStore
 from repro.core.tile_cache import DEFAULT_CACHE_BYTES, TileCache
+from repro.core.tuner import PhysicalTuner, TunerStats
 
-CATALOG_NAME = "catalog.json"      # v2: version + video names, O(#videos)
-MANIFEST_NAME = "manifest.json"    # v2: per-video shard; v1: the monolith
-MANIFEST_VERSION = 2
+CATALOG_NAME = "catalog.json"      # v2+: version + video names, O(#videos)
+MANIFEST_NAME = "manifest.json"    # v2+: per-video shard; v1: the monolith
+MANIFEST_VERSION = 3               # v3: + per-video policy runtime state
+COMPAT_SHARD_VERSIONS = (2, MANIFEST_VERSION)   # v2 adopted, rewritten as v3
 LEGACY_MANIFEST_VERSION = 1
 
 
@@ -116,6 +131,7 @@ class VideoStore:
                  default_cost_model: Optional[CostModel] = None,
                  max_decode_workers: Optional[int] = None,
                  tile_cache_bytes: Optional[int] = None,
+                 tuning: str = "background",
                  autoload: bool = True):
         self.root = pathlib.Path(store_root) if store_root else None
         self.default_encoder = default_encoder or EncoderConfig()
@@ -126,11 +142,17 @@ class VideoStore:
         self._videos: dict[str, VideoEntry] = {}
         self.history: list[ScanStats] = []
         self._dirty_videos: set[str] = set()
+        # videos whose policy runtime state mutated without dirtying the
+        # shard (inline observes with no proposal); flushed by close()
+        self._stale_policy_state: set[str] = set()
         self._catalog_dirty = False
         self.tile_cache = TileCache(
             DEFAULT_CACHE_BYTES if tile_cache_bytes is None
             else tile_cache_bytes)
         self.scheduler = ScanScheduler(self, cache=self.tile_cache)
+        # tuning="background"|"inline"|"off": where policy-driven retiling
+        # runs (async tuner thread / inside the scan / nowhere)
+        self.tuner = PhysicalTuner(self, mode=tuning)
         if self.root is not None and autoload:
             if self.catalog_path.exists():
                 self._load_catalog()
@@ -202,6 +224,7 @@ class VideoStore:
             entry = self.video(name)
             del self._videos[name]
             self._dirty_videos.discard(name)
+            self._stale_policy_state.discard(name)
             self.tile_cache.invalidate(video=name)
             if self.root is not None:
                 # catalog first: a crash after it lands leaves only an
@@ -314,6 +337,39 @@ class VideoStore:
         with self.scheduler.lock:
             return self._lower(plan)
 
+    def _sot_cost_walk(self, entry: VideoEntry, boxes_by_frame: dict,
+                       layout_by_sot: Optional[dict[int, TileLayout]] = None):
+        """The shared SOT-walking cost loop of the §4.1 what-if interface:
+        for each SOT overlapping the boxed frames, restrict the boxes to
+        the SOT and cost them under its layout (or a hypothetical override
+        from ``layout_by_sot``).  Yields ``(rec, epoch, layout, local,
+        est_pixels, est_tiles, est_cost_s)``.  Callers: :meth:`_lower`
+        (physical planning), :meth:`what_if` (hypothetical layouts), and
+        the :class:`~repro.core.tuner.PhysicalTuner` (proposal scoring).
+        Caller must hold the scheduler lock."""
+        if not boxes_by_frame:
+            return
+        f_lo, f_hi = min(boxes_by_frame), max(boxes_by_frame) + 1
+        for rec in entry.store.sots_in_range(f_lo, f_hi):
+            span = (rec.frame_start, rec.frame_end)
+            local = {f: b for f, b in boxes_by_frame.items()
+                     if span[0] <= f < span[1]}
+            if not local:
+                continue
+            # epoch BEFORE layout: engine-level retiles hold the scheduler
+            # lock we're under, but store-level retile() calls bypass it —
+            # if one interleaves (it installs the layout, then bumps the
+            # epoch), reading the epoch first leaves the caller's SOTScan
+            # detectably stale, and execution recomputes its tiles against
+            # the layout of record
+            epoch = rec.epoch
+            layout = rec.layout
+            if layout_by_sot is not None:
+                layout = layout_by_sot.get(rec.sot_id, layout)
+            p, t = pixels_and_tiles(layout, local, gop=entry.encoder.gop,
+                                    sot_frames=span)
+            yield rec, epoch, layout, local, p, t, entry.cost_model.cost(p, t)
+
     def _lower(self, plan: ScanPlan) -> PhysicalPlan:
         pplan = PhysicalPlan(logical=plan)
         remaining = plan.limit
@@ -335,37 +391,21 @@ class VideoStore:
                 remaining -= sum(len(b) for b in boxes_by_frame.values())
             if not boxes_by_frame:
                 continue
-            f_lo = min(boxes_by_frame)
-            f_hi = max(boxes_by_frame) + 1
-            qrange = plan.frame_range or (f_lo, f_hi)
-            for rec in entry.store.sots_in_range(f_lo, f_hi):
-                span = (rec.frame_start, rec.frame_end)
-                local = {f: b for f, b in boxes_by_frame.items()
-                         if span[0] <= f < span[1]}
-                if not local:
-                    continue
-                # epoch BEFORE layout: engine-level retiles hold the
-                # scheduler lock we're under, but store-level retile()
-                # calls bypass it — if one interleaves (it installs the
-                # layout, then bumps the epoch), reading the epoch first
-                # leaves this SOTScan detectably stale, and execution
-                # recomputes its tiles against the layout of record
-                epoch = rec.epoch
-                layout = rec.layout
+            qrange = plan.frame_range or (min(boxes_by_frame),
+                                          max(boxes_by_frame) + 1)
+            for rec, epoch, layout, local, p, t, cost in \
+                    self._sot_cost_walk(entry, boxes_by_frame):
                 needed: set[int] = set()
                 for f, boxes in local.items():
                     for box in boxes:
                         needed.update(layout.tiles_intersecting(box))
-                p, t = pixels_and_tiles(layout, local,
-                                        gop=entry.encoder.gop,
-                                        sot_frames=span)
                 pplan.sot_scans.append(SOTScan(
                     video=name, sot_id=rec.sot_id, epoch=epoch,
                     tile_idxs=tuple(sorted(needed)),
                     n_frames=max(local) - rec.frame_start + 1,
                     boxes_by_frame=local, query_range=qrange,
                     labels=flat_labels, est_pixels=p, est_tiles=t,
-                    est_cost_s=entry.cost_model.cost(p, t)))
+                    est_cost_s=cost))
         return pplan
 
     # -------------------------------------------------------------- execute
@@ -393,10 +433,32 @@ class VideoStore:
         """
         return self.scheduler.session(**kw)
 
+    def drain_tuner(self, timeout: Optional[float] = None) -> TunerStats:
+        """Deterministic tuning barrier: block until every observation
+        emitted before this call has been replayed through the policies,
+        every surviving proposal applied, and the resulting state
+        persisted.  No-op under ``tuning="inline"``/``"off"``.  Returns a
+        :class:`TunerStats` snapshot."""
+        self.tuner.drain(timeout)
+        return self.tuner.stats()
+
+    def tuner_stats(self) -> TunerStats:
+        """Snapshot of the physical tuner's cumulative accounting
+        (observations, coalesced/applied/skipped retiles, tuning and
+        re-encode seconds)."""
+        return self.tuner.stats()
+
     def close(self) -> None:
-        """Flush dirty durable state and release the decode worker pool.
-        The store remains usable; a later scan re-creates the pool."""
+        """Stop the tuner thread (flushing its workload log), flush dirty
+        durable state, and release the decode worker pool.  The store
+        remains usable; a later scan re-creates both on demand."""
+        # outside the scheduler lock: the tuner's flush needs to take it
+        self.tuner.stop()
         with self.scheduler.lock:
+            # inline observes mutate stateful-policy runtime state without
+            # dirtying the shard (no full rewrite per query); flush the
+            # noted remainder so a reopened store resumes exactly
+            self._mark_dirty(*(self._stale_policy_state & set(self._videos)))
             if self.dirty:
                 self.save()
         self.scheduler.shutdown()
@@ -443,21 +505,8 @@ class VideoStore:
         with self.scheduler.lock:
             entry = self.video(video)
             boxes_by_frame = entry.index.query(video, labels, t_range)
-            if not boxes_by_frame:
-                return 0.0
-            total = 0.0
-            f_lo, f_hi = min(boxes_by_frame), max(boxes_by_frame) + 1
-            for rec in entry.store.sots_in_range(f_lo, f_hi):
-                span = (rec.frame_start, rec.frame_end)
-                local = {f: b for f, b in boxes_by_frame.items()
-                         if span[0] <= f < span[1]}
-                if not local:
-                    continue
-                layout = layout_by_sot.get(rec.sot_id, rec.layout)
-                p, t = pixels_and_tiles(layout, local, gop=entry.encoder.gop,
-                                        sot_frames=span)
-                total += entry.cost_model.cost(p, t)
-            return total
+            return sum(cost for *_, cost in self._sot_cost_walk(
+                entry, boxes_by_frame, layout_by_sot=layout_by_sot))
 
     # ---------------------------------------------------------------- stats
     def storage_bytes(self, video: Optional[str] = None) -> float:
@@ -476,6 +525,7 @@ class VideoStore:
         with self.scheduler.lock:
             if self.root is None:
                 self._dirty_videos.clear()
+                self._stale_policy_state.clear()
                 self._catalog_dirty = False
                 return
             self.root.mkdir(parents=True, exist_ok=True)
@@ -485,6 +535,7 @@ class VideoStore:
                 doc = {"version": MANIFEST_VERSION, "name": name,
                        **self._entry_doc(self._videos[name])}
                 _atomic_write_json(self.video_manifest_path(name), doc)
+            self._stale_policy_state -= names  # state now durable
             if full or self._catalog_dirty or not self.catalog_path.exists():
                 _atomic_write_json(self.catalog_path,
                                    {"version": MANIFEST_VERSION,
@@ -503,6 +554,7 @@ class VideoStore:
                            "r_squared": cm.r_squared,
                            "encode_per_pixel": cm.encode_per_pixel,
                            "encode_per_tile": cm.encode_per_tile},
+            "policy_state": e.policy.state_dict(),   # v3: runtime state
             "sots": [{"sot_id": r.sot_id, "frame_start": r.frame_start,
                       "frame_end": r.frame_end, "epoch": r.epoch,
                       "size_bytes": r.size_bytes,
@@ -519,8 +571,11 @@ class VideoStore:
                        r_squared=cmd["r_squared"])
         cm.encode_per_pixel = cmd["encode_per_pixel"]
         cm.encode_per_tile = cmd["encode_per_tile"]
+        policy = policy_from_spec(v["policy"])
+        # v3 persists policy runtime state; a v2 shard has none (cold start)
+        policy.load_state(v.get("policy_state") or {})
         entry = VideoEntry(
-            name=name, encoder=enc, policy=policy_from_spec(v["policy"]),
+            name=name, encoder=enc, policy=policy,
             cost_model=cm,
             store=TileStore(name, enc, root=str(self.root),
                             sot_len=v["sot_len"]),
@@ -536,16 +591,25 @@ class VideoStore:
 
     def _load_catalog(self) -> None:
         doc = json.loads(self.catalog_path.read_text())
-        if doc.get("version") != MANIFEST_VERSION:
+        if doc.get("version") not in COMPAT_SHARD_VERSIONS:
             raise ValueError(f"unsupported catalog version "
                              f"{doc.get('version')!r} in {self.catalog_path}")
+        migrate = doc.get("version") != MANIFEST_VERSION
         for name in doc["videos"]:
             v = json.loads(self.video_manifest_path(name).read_text())
-            if v.get("version") != MANIFEST_VERSION:
+            if v.get("version") not in COMPAT_SHARD_VERSIONS:
                 raise ValueError(
                     f"unsupported manifest version {v.get('version')!r} "
                     f"for video {name!r}")
             self._videos[name] = self._entry_from_doc(name, v)
+            if v.get("version") != MANIFEST_VERSION:
+                migrate = True
+                self._dirty_videos.add(name)
+        if migrate:
+            # v2 -> v3 migration on open: rewrite old shards (policy state
+            # starts cold — v2 never recorded it) and stamp the catalog v3
+            self._catalog_dirty = True
+            self.save()
 
     def _migrate_v1(self) -> None:
         """Adopt a v1 monolithic manifest and rewrite it as v2 per-video

@@ -39,6 +39,10 @@ class QueryInfo:
 
 class Policy:
     name = "base"
+    #: True for policies carrying runtime state that must be persisted in
+    #: the manifest (and re-saved after every ``observe``): see
+    #: :meth:`state_dict`/:meth:`load_state`.
+    stateful = False
 
     def on_ingest(self, index: SemanticIndex, store: TileStore,
                   video: str, frame_hw) -> dict[int, TileLayout]:
@@ -47,15 +51,30 @@ class Policy:
 
     def observe(self, q: QueryInfo, index: SemanticIndex, store: TileStore,
                 model: CostModel) -> Optional[TileLayout]:
-        """Called after a query executed on SOT q.sot; returns a new layout
-        to re-tile this SOT with, or None."""
+        """Pure proposal function, called once per executed query per SOT:
+        returns a layout *proposal* for ``q.sot`` (or None).  It may mutate
+        the policy's own runtime state but must never touch tile data —
+        whether/when the proposal is applied is the caller's business (the
+        scan path applies it synchronously under ``tuning="inline"``; the
+        :class:`~repro.core.tuner.PhysicalTuner` coalesces, scores, and
+        applies asynchronously under ``tuning="background"``)."""
         return None
 
     def spec(self) -> dict:
         """JSON-serializable constructor spec for manifest persistence.
-        Runtime state (accumulated regret, seen labels) is NOT captured —
-        a reopened policy restarts cold."""
+        Runtime state travels separately via :meth:`state_dict`."""
         return {"name": self.name}
+
+    def state_dict(self) -> dict:
+        """JSON-serializable runtime state (accumulated regret, seen
+        labels, ...), persisted per video in the manifest shard so a
+        reopened store resumes tuning where it left off instead of cold.
+        Stateless policies return ``{}``."""
+        return {}
+
+    def load_state(self, state: dict) -> None:
+        """Restore :meth:`state_dict` output (tolerant of ``{}``/missing
+        keys: absent state means a cold start)."""
 
 
 class NoTilingPolicy(Policy):
@@ -177,9 +196,16 @@ class MorePolicy(Policy):
     classes queried so far."""
 
     name = "incremental_more"
+    stateful = True
 
     def __init__(self):
         self.seen: set[str] = set()
+
+    def state_dict(self):
+        return {"seen": sorted(self.seen)}
+
+    def load_state(self, state):
+        self.seen = set(state.get("seen", ()))
 
     def observe(self, q, index, store, model):
         self.seen.update(q.labels)
@@ -200,6 +226,7 @@ class RegretPolicy(Policy):
     on any observed query)."""
 
     name = "incremental_regret"
+    stateful = True
 
     def __init__(self, eta: float = ETA, alpha: float = ALPHA,
                  max_subsets: int = 16):
@@ -216,6 +243,28 @@ class RegretPolicy(Policy):
     def spec(self):
         return {"name": self.name, "eta": self.eta, "alpha": self.alpha,
                 "max_subsets": self.max_subsets}
+
+    def state_dict(self):
+        # frozenset keys become sorted label lists; entry order is sorted so
+        # the serialization is deterministic across runs/hash seeds
+        key = lambda k: (k[0], sorted(k[1]))   # (sot_id, labelset)
+        return {
+            "seen": sorted(self.seen),
+            "queried_combos": sorted(sorted(c) for c in self.queried_combos),
+            "regret": [[s, sorted(ls), v] for (s, ls), v in
+                       sorted(self.regret.items(), key=lambda kv: key(kv[0]))],
+            "vetoed": [[s, sorted(ls)] for s, ls in
+                       sorted(self.vetoed, key=key)],
+        }
+
+    def load_state(self, state):
+        self.seen = set(state.get("seen", ()))
+        self.queried_combos = {frozenset(c)
+                               for c in state.get("queried_combos", ())}
+        self.regret = {(s, frozenset(ls)): float(v)
+                       for s, ls, v in state.get("regret", ())}
+        self.vetoed = {(s, frozenset(ls))
+                       for s, ls in state.get("vetoed", ())}
 
     def _alternatives(self) -> list[frozenset]:
         alts = [frozenset([l]) for l in sorted(self.seen)]

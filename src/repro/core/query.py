@@ -43,7 +43,15 @@ class ScanStats:
     miss only to the first query (submission order) that needed it; likewise
     in a merged batch each group's decode wall seconds land in the first
     consumer's ``decode_s``, so summing over history counts shared work once
-    (a solo ``execute`` keeps the old wall-clock-of-decode-phase meaning)."""
+    (a solo ``execute`` keeps the old wall-clock-of-decode-phase meaning).
+
+    ``retile_s`` — seconds of policy-driven re-encoding charged to THIS
+    query.  Non-zero only under ``tuning="inline"``, where re-tiles run
+    synchronously inside the scan that triggered them.  Under
+    ``tuning="background"`` (the ``VideoStore`` default) queries are never
+    charged tuning work: re-tiles run on the tuner thread and are
+    observable only via :class:`~repro.core.tuner.TunerStats` and
+    ``store.drain_tuner()``."""
     lookup_s: float = 0.0
     decode_s: float = 0.0
     retile_s: float = 0.0

@@ -17,12 +17,19 @@ exactly what a scheduler needs:
   by all callers (the old per-execute pool is gone).
 - **Serial-equivalent semantics** — after the parallel fetch phase, each
   plan is *finished* (regions assembled, policy hooks run, history recorded)
-  strictly in submission order.  If a policy hook re-tiles a SOT, the epoch
-  bump makes the batch's group fetch stale; later plans in the batch detect
-  the mismatch and re-fetch at the new epoch.  Per-query regions are thus
-  bit-identical to running the same plans through serial ``execute()``
-  calls, and the cache can never serve pre-retile pixels (keys carry the
-  epoch).
+  strictly in submission order.  If a policy hook re-tiles a SOT (inline
+  tuning mode), the epoch bump makes the batch's group fetch stale; later
+  plans in the batch detect the mismatch and re-fetch at the new epoch.
+  Per-query regions are thus bit-identical to running the same plans
+  through serial ``execute()`` calls, and the cache can never serve
+  pre-retile pixels (keys carry the epoch).
+- **Policy hooks via the tuner** — the per-SOT hooks are dispatched through
+  the engine's :class:`~repro.core.tuner.PhysicalTuner`: under
+  ``tuning="inline"`` they observe + retile synchronously here (charged to
+  the query's ``retile_s``, preserving the pre-tuner semantics bit-for-bit);
+  under ``tuning="background"`` (the default) they only append observations
+  to the tuner's bounded workload log, and retiling happens asynchronously
+  on the tuner thread — the scan path never pays re-encode latency.
 - **Stats attribution** — each query's :class:`ScanStats` reports
   ``cache_hits``/``cache_misses`` over the tiles it needed; a freshly
   decoded tile is charged as a miss to the first plan (submission order)
@@ -45,7 +52,6 @@ from typing import TYPE_CHECKING, Optional
 import numpy as np
 
 from repro.core.layout import BBox, TileLayout
-from repro.core.policies import QueryInfo
 from repro.core.query import (PhysicalPlan, ScanPlan, ScanQuery, ScanResult,
                               ScanStats, SOTScan)
 from repro.core.tile_cache import TileCache
@@ -265,18 +271,12 @@ class ScanScheduler:
                         out.append((frame, box,
                                     _crop(f.layout, f.tiles, rel, box)))
 
-        # policy hooks, serially per SOT (policies mutate shared state);
-        # any retile invalidates this batch's fetch via the epoch bump
-        for ss in pplan.sot_scans:
-            entry = engine.video(ss.video)
-            rec = entry.store.sots[ss.sot_id]
-            qi = QueryInfo(ss.video, ss.labels, ss.query_range,
-                           ss.boxes_by_frame, rec)
-            new_layout = entry.policy.observe(qi, entry.index, entry.store,
-                                              entry.cost_model)
-            if new_layout is not None:
-                stats.retile_s += engine._retile(ss.video, ss.sot_id,
-                                                 new_layout)
+        # policy hooks, serially per SOT, dispatched through the tuner:
+        # inline mode observes + retiles here (charged to this query's
+        # retile_s; any retile invalidates this batch's fetch via the epoch
+        # bump), background mode only emits observations to the tuner's
+        # workload log (retile_s stays 0 — tuning work lands in TunerStats)
+        stats.retile_s += engine.tuner.on_scan(pplan.sot_scans)
 
         regions: list = []
         if len(plan.videos) == 1:

@@ -59,8 +59,11 @@ class TASM:
             "(catalog + store.scan(video).labels(...).frames(...).execute())",
             DeprecationWarning, stacklevel=2)
         # autoload=False keeps the seed facade's semantics: a reused
-        # store_root is re-encoded, not adopted from its manifest
-        self._engine = VideoStore(store_root=store_root, autoload=False)
+        # store_root is re-encoded, not adopted from its manifest.
+        # tuning="inline" likewise: the seed retiled synchronously inside
+        # scan(), and this shim stays bit-for-bit compatible with that
+        self._engine = VideoStore(store_root=store_root, autoload=False,
+                                  tuning="inline")
         self._entry = self._engine.add_video(
             video, encoder=encoder, policy=policy, cost_model=cost_model,
             sot_len=sot_len)

@@ -11,7 +11,11 @@ The ``epoch`` component makes invalidation *structural*: ``TileStore.retile``
 bumps the SOT's epoch, so every key minted against the old layout simply
 stops being asked for — the cache can never serve pre-retile pixels.  Stale
 epochs are additionally purged eagerly (:meth:`invalidate`) so dead entries
-do not squat on the byte budget.
+do not squat on the byte budget.  This holds for every retile producer
+alike: foreground ``VideoStore.retile`` calls, inline policy hooks, and the
+background :class:`~repro.core.tuner.PhysicalTuner` all route through the
+same epoch-bumping engine path, so a scan racing a background re-tile reads
+either the old epoch's pixels or the new one's — never a mix.
 
 Frame-depth semantics: a cached array of ``n`` frames serves any request for
 ``<= n`` frames as a prefix view.  Decode is GOP-independent and

@@ -63,7 +63,8 @@ class TestCatalog:
         frames, dets = small_video
         store = VideoStore(default_encoder=ENC,
                            default_cost_model=MODEL,
-                           default_policy=RegretPolicy())
+                           default_policy=RegretPolicy(),
+                           tuning="inline")  # policies see scans synchronously
         for name in ("cam0", "cam1"):
             store.ingest(name, frames)
             store.add_detections(name, {f: d for f, d in enumerate(dets)})
@@ -124,7 +125,7 @@ class TestQueryBuilder:
 
     def test_all_labels_scan_drives_policies(self, small_video):
         frames, dets = small_video
-        store = VideoStore()
+        store = VideoStore(tuning="inline")
         pol = RegretPolicy()
         fill(store, "cam0", frames, dets, policy=pol)
         store.scan("cam0").labels().frames(0, 16).execute()
@@ -173,7 +174,7 @@ class TestPlanExecute:
         assert res.stats.pixels_decoded > 0 and res.stats.tiles_decoded > 0
         assert res.stats.decode_s == 0.0
         # estimation-only scans still drive incremental policies
-        store2 = VideoStore()
+        store2 = VideoStore(tuning="inline")
         fill(store2, "cam0", frames, dets, policy=RegretPolicy())
         for _ in range(8):
             store2.scan("cam0").labels("car").frames(0, 16) \
@@ -223,7 +224,7 @@ class TestManifest:
     def test_reopen_serves_scans_without_reingest(self, small_video,
                                                   tmp_path):
         frames, dets = small_video
-        store = VideoStore(store_root=str(tmp_path))
+        store = VideoStore(store_root=str(tmp_path), tuning="inline")
         fill(store, "cam0", frames, dets, policy=RegretPolicy())
         for _ in range(8):  # trigger re-tiling so layouts have epoch > 0
             store.scan("cam0").labels("car").frames(0, 32).execute()
@@ -233,7 +234,7 @@ class TestManifest:
         bytes1 = store.storage_bytes()
         del store
 
-        store2 = VideoStore(store_root=str(tmp_path))
+        store2 = VideoStore(store_root=str(tmp_path), tuning="inline")
         assert store2.videos() == ["cam0"]
         entry = store2.video("cam0")
         assert entry.policy.name == "incremental_regret"
@@ -252,9 +253,10 @@ class TestManifest:
         store = VideoStore(store_root=str(tmp_path))
         fill(store, "cam0", frames, dets)
         cat = json.loads((tmp_path / "catalog.json").read_text())
-        assert cat["version"] == 2 and cat["videos"] == ["cam0"]
+        assert cat["version"] == 3 and cat["videos"] == ["cam0"]
         v = json.loads((tmp_path / "cam0" / "manifest.json").read_text())
-        assert v["version"] == 2 and v["name"] == "cam0"
+        assert v["version"] == 3 and v["name"] == "cam0"
+        assert "policy_state" in v  # v3: policy runtime state persisted
         assert v["encoder"]["gop"] == 16 and v["sot_len"] == 16
         assert len(v["sots"]) == len(frames) // 16
         assert v["index"]  # semantic-index entries persisted

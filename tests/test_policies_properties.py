@@ -54,7 +54,7 @@ def test_regret_never_adopts_vetoed_layout(small_video):
     """Alpha-vetoed (SOT, layout) pairs must never be adopted."""
     frames, dets = small_video
     pol = RegretPolicy(eta=0.0)  # eager: adopt as soon as regret > 0
-    store = VideoStore()
+    store = VideoStore(tuning="inline")  # adoption must happen in the scan
     store.add_video("v", encoder=EncoderConfig(gop=16, qp=8), policy=pol,
                     cost_model=MODEL)
     store.ingest("v", frames)

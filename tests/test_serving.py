@@ -179,14 +179,16 @@ class TestExecuteMany:
         frames, dets = small_video
         n = 10  # enough repeats to push RegretPolicy over its threshold
 
-        serial = VideoStore(tile_cache_bytes=0)
+        # inline tuning on both: this test pins the synchronous mid-batch
+        # retile semantics (background tuning is covered in test_tuner.py)
+        serial = VideoStore(tile_cache_bytes=0, tuning="inline")
         fill(serial, "cam0", frames, dets, policy=RegretPolicy())
         serial_res = [
             serial.scan("cam0").labels("car").frames(0, 32).execute()
             for _ in range(n)]
         assert any(r.stats.retile_s > 0 for r in serial_res)  # it retiled
 
-        batch = VideoStore()
+        batch = VideoStore(tuning="inline")
         fill(batch, "cam0", frames, dets, policy=RegretPolicy())
         batch_res = batch.execute_many(
             [batch.scan("cam0").labels("car").frames(0, 32)

@@ -17,7 +17,10 @@ MODEL.encode_per_tile = 1e-4
 
 
 def make_store(frames, dets, policy=None, **kw):
-    store = VideoStore(store_root=kw.pop("store_root", None))
+    # inline tuning: these are policy-convergence tests — layouts must
+    # evolve synchronously inside the scans that trigger them
+    store = VideoStore(store_root=kw.pop("store_root", None),
+                       tuning="inline")
     store.add_video("v", encoder=ENC, policy=policy or NoTilingPolicy(),
                     cost_model=MODEL, **kw)
     store.ingest("v", frames)
@@ -103,7 +106,7 @@ class TestPolicies:
 
     def test_lazy_waits_for_unknown_objects(self, small_video):
         frames, dets = small_video
-        store = VideoStore()
+        store = VideoStore(tuning="inline")
         store.add_video("v", encoder=ENC,
                         policy=LazyPolicy(["car", "ghost"]), cost_model=MODEL)
         store.ingest("v", frames)
