@@ -93,8 +93,12 @@ def run_strategy(strategy: str, frames, dets, queries, model):
     # queries must actually decode (the serving cache would zero them out).
     # inline tuning: the figure charges re-tiling to the triggering query
     # (the paper's cumulative-cost accounting), so retiles must run
-    # synchronously, not on the background tuner
-    store = VideoStore(tile_cache_bytes=0, tuning="inline")
+    # synchronously, not on the background tuner.  ROI decode off: the
+    # figure models the paper's full-tile HEVC decoder — block-restricted
+    # decode would make per-query cost layout-invariant and erase the very
+    # differences the figure exists to show
+    store = VideoStore(tile_cache_bytes=0, tuning="inline",
+                       roi_decode=False)
     store.add_video("v", encoder=ENC, policy=make_policy(strategy),
                     cost_model=model)
     store.add_detections("v", {f: d for f, d in enumerate(dets)})

@@ -48,8 +48,10 @@ def run():
 
     def run_one(name: str):
         # cache disabled: decode cost per layout is the measured quantity;
-        # inline tuning: re-tiling is charged to the triggering query
-        store = VideoStore(tile_cache_bytes=0, tuning="inline")
+        # inline tuning: re-tiling is charged to the triggering query;
+        # ROI decode off: the figure models a full-tile decoder (see fig11)
+        store = VideoStore(tile_cache_bytes=0, tuning="inline",
+                           roi_decode=False)
         entry = store.add_video("v", encoder=ENC, policy=RegretPolicy(),
                                 cost_model=model)
         upfront = 0.0
@@ -98,7 +100,7 @@ def run():
         return np.cumsum(per_query)
 
     # baseline: untiled, but queries still pay lazy detection (same for all)
-    base_store = VideoStore(tile_cache_bytes=0)
+    base_store = VideoStore(tile_cache_bytes=0, roi_decode=False)
     base_store.add_video("v", encoder=ENC, cost_model=model)
     base_store.add_detections("v", {f: d for f, d in enumerate(dets)})
     base_store.ingest("v", frames)

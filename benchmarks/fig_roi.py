@@ -1,0 +1,173 @@
+"""ROI-restricted block decode benchmark, emitting ``BENCH_roi.json``.
+
+Subframe scans should pay only for the 8x8 blocks they read.  This
+benchmark measures exactly that claim: a 64x64-px ROI workload and a
+full-frame workload run over three physical designs (the untiled ω layout,
+a 2x4 uniform grid, and detection-aligned fine-grained layouts), each with
+ROI-restricted decode ON vs OFF (the PR-3 full-tile path), on cold
+per-query scans (tile cache disabled, in-memory store so decode compute —
+not disk IO — dominates, matching ``fig_serving``'s methodology).
+
+Hard gates (the CI smoke fails if they regress):
+- ω / 64x64-ROI: >= 5x fewer ``pixels_decoded`` and >= 30% lower cold
+  per-query latency with ROI decode on;
+- every (layout, workload) cell: regions bit-identical between ROI decode
+  and full-decode-then-crop.
+
+    PYTHONPATH=src python benchmarks/fig_roi.py              # full
+    REPRO_QUICK=1 PYTHONPATH=src python benchmarks/fig_roi.py  # smoke
+
+Also prints ``name,us_per_call,derived`` CSV rows for ``benchmarks.run``.
+"""
+from __future__ import annotations
+
+import json
+import os
+import pathlib
+import time
+
+import numpy as np
+
+from benchmarks.common import ENC, corpus_video, emit, shared_cost_model
+from repro.core import NoTilingPolicy, VideoStore, partition, uniform_layout
+
+QUICK = bool(int(os.environ.get("REPRO_QUICK", "0")))
+N_FRAMES = 64 if QUICK else 128
+H, W = 192, 320
+ROI = 64
+REPEATS = 2 if QUICK else 4
+OUT = os.environ.get("REPRO_BENCH_OUT", "BENCH_roi.json")
+
+LAYOUTS = ("omega", "uniform", "detaligned")
+WORKLOADS = ("roi64", "full_frame")
+
+
+def roi_box(frame: int):
+    """A static, 8-aligned 64x64 query box (64 codec blocks exactly)."""
+    return (64, 128, 64 + ROI, 128 + ROI)
+
+
+def initial_layouts(kind: str, dets):
+    if kind == "omega":
+        return None
+    n_sots = N_FRAMES // ENC.gop
+    if kind == "uniform":
+        return {s: uniform_layout(H, W, 2, 4) for s in range(n_sots)}
+    layouts = {}
+    for s in range(n_sots):
+        boxes = [b for f in range(s * ENC.gop, (s + 1) * ENC.gop)
+                 for _, b in dets[f]]
+        layouts[s] = partition(H, W, boxes, granularity="fine")
+    return layouts
+
+
+def build_store(frames, dets, kind: str, roi_on: bool) -> VideoStore:
+    store = VideoStore(tile_cache_bytes=0, roi_decode=roi_on)
+    store.add_video("cam0", encoder=ENC, policy=NoTilingPolicy(),
+                    cost_model=shared_cost_model())
+    store.ingest("cam0", frames, initial_layouts=initial_layouts(kind, dets))
+    store.add_detections("cam0", {f: d for f, d in enumerate(dets)})
+    extra = {f: [("roi", roi_box(f)), ("full", (0, 0, H, W))]
+             for f in range(N_FRAMES)}
+    store.add_detections("cam0", extra)
+    return store
+
+
+def workload(store, kind: str):
+    label = "roi" if kind == "roi64" else "full"
+    return [store.scan("cam0").labels(label).frames(g * ENC.gop,
+                                                    (g + 1) * ENC.gop)
+            for g in range(N_FRAMES // ENC.gop)]
+
+
+def run_pair(on_store, off_store, wl_kind: str):
+    """Cold per-query timing for both stores over the same workload,
+    interleaved per repeat so allocator/cache-pressure drift hits both
+    sides equally.  Returns ``{"on"|"off": (median s/query, pixels/query,
+    regions)}``."""
+    sides = {"on": on_store, "off": off_store}
+    queries = {k: workload(s, wl_kind) for k, s in sides.items()}
+    for k in sides:   # warm allocators/einsum paths once per store
+        queries[k][0].execute()
+    times = {k: [] for k in sides}
+    regions = {k: None for k in sides}
+    base = {k: sides[k].video("cam0").store.pixels_decoded_total
+            for k in sides}
+    for rep in range(REPEATS):
+        # alternate which side goes first: run-order bias (allocator
+        # warmth, CPU frequency drift) otherwise lands on one side only
+        order = ("on", "off") if rep % 2 == 0 else ("off", "on")
+        for k in order:
+            run_regions = []
+            for q in queries[k]:
+                t0 = time.perf_counter()
+                res = q.execute()
+                times[k].append(time.perf_counter() - t0)
+                run_regions.extend(res.regions)
+            regions[k] = run_regions  # identical across repeats (cold)
+    out = {}
+    for k, s in sides.items():
+        n_runs = REPEATS * len(queries[k])
+        px = (s.video("cam0").store.pixels_decoded_total - base[k]) / n_runs
+        out[k] = (float(np.median(times[k])), px, regions[k])
+    return out
+
+
+def assert_regions_equal(a, b, where: str) -> None:
+    assert len(a) == len(b), (where, len(a), len(b))
+    for ra, rb in zip(a, b):
+        assert ra[:-1] == rb[:-1], where
+        if not np.array_equal(ra[-1], rb[-1]):
+            raise AssertionError(
+                f"{where}: ROI decode not bit-identical to "
+                f"full-decode-then-crop at frame {ra[0]}")
+
+
+def main() -> None:
+    frames, dets, _ = corpus_video("sparse", 0, N_FRAMES, height=H, width=W)
+    report: dict = {"n_frames": N_FRAMES, "roi_px": ROI, "repeats": REPEATS,
+                    "layouts": {}}
+
+    for kind in LAYOUTS:
+        cell: dict = {}
+        for wl in WORKLOADS:
+            on_store = build_store(frames, dets, kind, roi_on=True)
+            off_store = build_store(frames, dets, kind, roi_on=False)
+            pair = run_pair(on_store, off_store, wl)
+            t_on, px_on, reg_on = pair["on"]
+            t_off, px_off, reg_off = pair["off"]
+            assert_regions_equal(reg_off, reg_on, f"{kind}/{wl}")
+            on_store.close()
+            off_store.close()
+            cell[wl] = {
+                "roi_on": {"s_per_query": t_on, "pixels_per_query": px_on},
+                "roi_off": {"s_per_query": t_off, "pixels_per_query": px_off},
+                "pixel_reduction": px_off / max(px_on, 1.0),
+                "latency_reduction": 1.0 - t_on / max(t_off, 1e-12),
+                "bit_identical": True,
+            }
+            emit(f"roi/{kind}/{wl}/on", 1e6 * t_on,
+                 f"px={px_on / 1e6:.3f}M")
+            emit(f"roi/{kind}/{wl}/off", 1e6 * t_off,
+                 f"px={px_off / 1e6:.3f}M;"
+                 f"px_red={cell[wl]['pixel_reduction']:.1f}x;"
+                 f"lat_red={100 * cell[wl]['latency_reduction']:.0f}%")
+        report["layouts"][kind] = cell
+
+    omega = report["layouts"]["omega"]["roi64"]
+    report["omega_roi64_pixel_reduction"] = omega["pixel_reduction"]
+    report["omega_roi64_latency_reduction"] = omega["latency_reduction"]
+    pathlib.Path(OUT).write_text(json.dumps(report, indent=1))
+    print(f"# wrote {OUT}: omega/roi64 "
+          f"{omega['pixel_reduction']:.1f}x fewer pixels, "
+          f"{100 * omega['latency_reduction']:.0f}% lower latency")
+
+    # hard gates (acceptance criteria for the ROI decode path)
+    assert omega["pixel_reduction"] >= 5.0, \
+        f"ROI pixel reduction {omega['pixel_reduction']:.2f}x < 5x"
+    assert omega["latency_reduction"] >= 0.30, \
+        f"ROI latency reduction {omega['latency_reduction']:.2%} < 30%"
+
+
+if __name__ == "__main__":
+    main()

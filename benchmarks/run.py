@@ -19,6 +19,7 @@ MODULES = [
     "benchmarks.fig11_workloads",
     "benchmarks.fig12_upfront",
     "benchmarks.fig_serving",
+    "benchmarks.fig_roi",
     "benchmarks.fig_tuning",
     "benchmarks.kernel_bench",
     "benchmarks.roofline_report",

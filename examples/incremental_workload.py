@@ -30,8 +30,9 @@ queries = list(zip(labels, [(int(s), int(s) + WINDOW) for s in starts]))
 
 
 def make_store(policy_cls, tuning):
-    # cache off: this example compares decode cost across tiling policies
-    store = VideoStore(tile_cache_bytes=0, tuning=tuning)
+    # cache off + ROI decode off: this example compares full-tile decode
+    # cost across tiling policies (ROI-restricted decode would flatten it)
+    store = VideoStore(tile_cache_bytes=0, tuning=tuning, roi_decode=False)
     store.add_video("v", encoder=ENC, policy=policy_cls(), cost_model=model)
     store.add_detections("v", {f: d for f, d in enumerate(dets)})
     return store

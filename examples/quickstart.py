@@ -42,7 +42,19 @@ print("semantic index:", store.video("traffic").index.stats())
 query = store.scan("traffic").labels("car").frames(0, 64)
 print("\n" + query.explain().describe() + "\n")
 
-# 5. issue repeated declarative queries; the layout evolves under the policy
+# 5. ROI-restricted block decode (the default): a subframe scan decodes
+#    only the 8x8 blocks its boxes intersect, so pixels_decoded tracks the
+#    *requested* pixels, not tile area.  Toggle it off to see what the same
+#    query costs under full-tile decode — results are bit-identical
+store.roi_decode = False
+full_px = query.execute().stats.pixels_decoded
+store.tile_cache.clear()   # cold again, so the ROI run really decodes
+store.roi_decode = True
+roi_px = query.execute().stats.pixels_decoded
+print(f"pixels decoded, full-tile {full_px / 1e6:.2f} M -> "
+      f"ROI {roi_px / 1e6:.2f} M ({full_px / max(roi_px, 1):.1f}x fewer)")
+
+# 6. issue repeated declarative queries; the layout evolves under the policy
 #    and the tile cache absorbs repeat decodes (epoch bumps invalidate it).
 #    Tuning runs in the BACKGROUND by default: queries only emit workload
 #    observations, the tuner thread re-tiles off the critical path, so
@@ -62,18 +74,18 @@ print("final layouts:",
       [r.layout.describe() for r in store.video("traffic").store.sots])
 print("\nafter adaptation:\n" + query.explain().describe())
 
-# 6. disjunctive predicate (one clause: car OR person), limited
+# 7. disjunctive predicate (one clause: car OR person), limited
 res = store.scan("traffic").labels("car", "person").frames(0, 32) \
            .limit(50).execute()
 print(f"\ndisjunctive query returned {len(res.regions)} regions (limit 50)")
 
-# 7. verify pixels: the decoded crop matches the source (lossy codec)
+# 8. verify pixels: the decoded crop matches the source (lossy codec)
 f, box, px = res.regions[0]
 y1, x1, y2, x2 = box
 err = np.abs(px - frames[f, y1:y2, x1:x2]).mean()
 print(f"mean |decoded - source| = {err:.2f} (8-bit scale)")
 
-# 8. concurrent serving: overlapping scans submitted together merge their
+# 9. concurrent serving: overlapping scans submitted together merge their
 #    SOT decodes (each shared tile decoded at most once, then cached)
 with store.serve() as session:
     futs = [session.submit(store.scan("traffic").labels("car").frames(0, 64))
@@ -84,7 +96,7 @@ misses = sum(r.stats.cache_misses for r in batch)
 print(f"\nserved 4 overlapping scans: {hits} cache hits, "
       f"{misses} fresh tile decodes")
 
-# 9. reopen the catalog from its on-disk manifest: no re-ingest needed
+# 10. reopen the catalog from its on-disk manifest: no re-ingest needed
 reopened = VideoStore(store_root=root)
 res2 = reopened.scan("traffic").labels("car").frames(0, 64).execute()
 same = all(np.array_equal(p1, p2) for (_, _, p1), (_, _, p2)

@@ -91,7 +91,8 @@ def encode_tile(frames: np.ndarray, cfg: EncoderConfig) -> dict:
 
 
 def decode_tile(enc: dict, gop_indices=None,
-                frames_within: int | None = None) -> np.ndarray:
+                frames_within: int | None = None,
+                blocks=None) -> np.ndarray:
     """Decode (a subset of GOPs of) an encoded tile -> [T', h, w] float32.
 
     P-frame residuals are independent given the keyframe, so the whole GOP's
@@ -103,15 +104,42 @@ def decode_tile(enc: dict, gop_indices=None,
     ``frames_within``: decode only the first n frames of each selected GOP
     (temporal random access stops at the last requested frame — a decoder
     never needs the rest of the GOP).  Fixes long-SOT overdecode in Fig. 9.
+
+    ``blocks``: ROI-restricted decode — only the given (tile-local,
+    row-major) 8x8-block indices are dequantized, transformed and summed;
+    the rest of the output stays zero.  The codec has no intra-block
+    prediction, so each selected block's pixels are bit-identical to the
+    same block of a full decode (dequant+IDCT+cumsum all operate per
+    block).  Work becomes proportional to ``len(blocks)``, not tile area.
+    ``blocks=None`` is the full-tile path, unchanged.
     """
     h, w, gop, qp = enc["h"], enc["w"], enc["gop"], enc["qp"]
-    n_gops = enc["kq"].shape[0]
+    n_gops = len(enc["kq"])
     idx = list(range(n_gops)) if gop_indices is None else list(gop_indices)
     n = gop if frames_within is None else max(1, min(frames_within, gop))
-    out = np.empty((len(idx) * n, h, w), dtype=np.float32)
     d = dct_matrix()
     m_k = quant_matrix(qp, True)
     m_p = quant_matrix(qp, False)
+    if blocks is not None:
+        bsel = np.asarray(sorted(set(blocks)), dtype=np.intp)
+        out = np.zeros((len(idx) * n, h, w), dtype=np.float32)
+        if bsel.size == 0:
+            return out
+        rs, cs = np.divmod(bsel, w // 8)
+        # writable block view of the output canvas: [T', h/8, 8, w/8, 8]
+        view = out.reshape(len(idx) * n, h // 8, 8, w // 8, 8)
+        for j, g in enumerate(idx):
+            key = _idct2(enc["kq"][g][bsel].astype(np.float32) * m_k)
+            pq = enc["pq"][g][: n - 1][:, bsel]  # [n-1, nb_sel, 8, 8]
+            coeffs = pq.astype(np.float32) * m_p
+            resid = np.einsum("ji,fnjk,kl->fnil", d, coeffs, d, optimize=True)
+            frames = np.concatenate([key[None], resid], axis=0)
+            np.cumsum(frames, axis=0, out=frames)  # [n, nb_sel, 8, 8]
+            # advanced indices on axes 1 and 3 land first: [nb_sel, n, 8, 8]
+            view[j * n:(j + 1) * n][:, rs, :, cs] = \
+                frames.transpose(1, 0, 2, 3)
+        return out
+    out = np.empty((len(idx) * n, h, w), dtype=np.float32)
     for j, g in enumerate(idx):
         key = _from_blocks(_idct2(enc["kq"][g].astype(np.float32) * m_k), h, w)
         pq = enc["pq"][g][: n - 1]  # [n-1, nb, 8, 8]

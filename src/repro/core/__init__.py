@@ -10,10 +10,12 @@ policy-driven re-tiling moved off the scan path into the background
 physical tuner (``tuner.py``; ``tuning="background"|"inline"|"off"``).
 The deprecated single-video ``TASM`` facade remains as a shim.
 """
-from repro.core.cost import CostModel, calibrate, pixels_and_tiles, query_cost
+from repro.core.cost import (CostModel, calibrate, pixels_and_tiles,
+                             query_cost, roi_pixels_and_tiles)
 from repro.core.engine import IngestStats, VideoEntry, VideoStore
 from repro.core.layout import (
     TileLayout,
+    block_coverage,
     coarse_grained_layout,
     fine_grained_layout,
     partition,

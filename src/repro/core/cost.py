@@ -16,7 +16,7 @@ from typing import Iterable, Mapping, Sequence
 
 import numpy as np
 
-from repro.core.layout import BBox, TileLayout
+from repro.core.layout import BBox, TileLayout, block_coverage
 
 
 @dataclass
@@ -68,6 +68,42 @@ def pixels_and_tiles(layout: TileLayout, boxes_by_frame: Mapping[int, Sequence[B
         pixels += sum(layout.tile_pixels(t) for t in needed) * n_decoded_frames
         tiles += len(needed)
     return pixels, tiles
+
+
+def roi_pixels_and_tiles(layout: TileLayout,
+                         boxes_by_frame: Mapping[int, Sequence[BBox]],
+                         *, gop: int, sot_frames: tuple[int, int]
+                         ) -> tuple[float, float, dict]:
+    """Block-granular P and T for ROI-restricted decode, plus the per-tile
+    block-coverage masks (``tile -> sorted block tuple | None`` for full).
+
+    This is what the engine *actually* pays under ``decode_tile(blocks=...)``:
+    each touched tile decodes only the blocks the query's boxes intersect,
+    for the prefix of frames up to the last requested frame (matching
+    ``TileStore.decode_tiles``'s depth semantics exactly, so a cold solo
+    scan's estimate equals its measured ``pixels_decoded``).  T keeps the
+    tile-granular tile-open count — the stream/container cost of touching a
+    tile is unchanged by how few of its blocks decode.
+
+    Note the deliberate asymmetry with :func:`pixels_and_tiles`: that
+    function models a *standard full-tile decoder* and remains the input to
+    layout decisions (policies' alpha/regret gates, tuner admission) — at
+    block granularity the pixel term is layout-invariant (tile boundaries
+    are 8-aligned), so it cannot rank layouts.
+    """
+    f_start, _ = sot_frames
+    in_sot = {f: b for f, b in boxes_by_frame.items()
+              if sot_frames[0] <= f < sot_frames[1]}
+    if not in_sot:
+        return 0.0, 0.0, {}
+    masks = block_coverage(layout, in_sot)
+    n_frames = max(in_sot) - f_start + 1
+    pixels = float(sum(
+        (layout.tile_blocks(t) if m is None else len(m)) * 64
+        for t, m in masks.items()) * n_frames)
+    _, tiles = pixels_and_tiles(layout, in_sot, gop=gop,
+                                sot_frames=sot_frames)
+    return pixels, tiles, masks
 
 
 def query_cost(layout: TileLayout, boxes_by_frame, model: CostModel, *,

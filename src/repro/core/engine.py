@@ -72,7 +72,7 @@ from typing import Iterator, Optional
 import numpy as np
 
 from repro.codec.encode import EncoderConfig
-from repro.core.cost import CostModel, pixels_and_tiles
+from repro.core.cost import CostModel, pixels_and_tiles, roi_pixels_and_tiles
 from repro.core.layout import TileLayout
 from repro.core.policies import (NoTilingPolicy, Policy, policy_from_spec,
                                  policy_spec)
@@ -83,6 +83,10 @@ from repro.core.semantic_index import SemanticIndex
 from repro.core.storage import SOTRecord, TileStore
 from repro.core.tile_cache import DEFAULT_CACHE_BYTES, TileCache
 from repro.core.tuner import PhysicalTuner, TunerStats
+
+#: valid what-if cost granularities: "tile" = standard full-tile decoder
+#: (the basis for layout decisions), "block" = actual ROI-restricted decode
+GRANULARITIES = ("tile", "block")
 
 CATALOG_NAME = "catalog.json"      # v2+: version + video names, O(#videos)
 MANIFEST_NAME = "manifest.json"    # v2+: per-video shard; v1: the monolith
@@ -132,6 +136,8 @@ class VideoStore:
                  max_decode_workers: Optional[int] = None,
                  tile_cache_bytes: Optional[int] = None,
                  tuning: str = "background",
+                 tuner_admission: str = "policy",
+                 roi_decode: bool = True,
                  autoload: bool = True):
         self.root = pathlib.Path(store_root) if store_root else None
         self.default_encoder = default_encoder or EncoderConfig()
@@ -150,9 +156,18 @@ class VideoStore:
             DEFAULT_CACHE_BYTES if tile_cache_bytes is None
             else tile_cache_bytes)
         self.scheduler = ScanScheduler(self, cache=self.tile_cache)
+        # ROI-restricted decode: lowering threads per-tile 8x8-block masks
+        # into the plan, so subframe scans decode only the blocks their
+        # boxes intersect.  False restores PR-3 full-tile decode (results
+        # are bit-identical either way; the flag may be flipped at runtime
+        # and only affects plans lowered afterwards)
+        self.roi_decode = bool(roi_decode)
         # tuning="background"|"inline"|"off": where policy-driven retiling
-        # runs (async tuner thread / inside the scan / nowhere)
-        self.tuner = PhysicalTuner(self, mode=tuning)
+        # runs (async tuner thread / inside the scan / nowhere);
+        # tuner_admission="policy"|"gated": whether the background tuner
+        # additionally gates + ranks proposals by their what-if net benefit
+        self.tuner = PhysicalTuner(self, mode=tuning,
+                                   admission=tuner_admission)
         if self.root is not None and autoload:
             if self.catalog_path.exists():
                 self._load_catalog()
@@ -338,15 +353,25 @@ class VideoStore:
             return self._lower(plan)
 
     def _sot_cost_walk(self, entry: VideoEntry, boxes_by_frame: dict,
-                       layout_by_sot: Optional[dict[int, TileLayout]] = None):
+                       layout_by_sot: Optional[dict[int, TileLayout]] = None,
+                       granularity: str = "tile"):
         """The shared SOT-walking cost loop of the §4.1 what-if interface:
         for each SOT overlapping the boxed frames, restrict the boxes to
         the SOT and cost them under its layout (or a hypothetical override
         from ``layout_by_sot``).  Yields ``(rec, epoch, layout, local,
-        est_pixels, est_tiles, est_cost_s)``.  Callers: :meth:`_lower`
-        (physical planning), :meth:`what_if` (hypothetical layouts), and
-        the :class:`~repro.core.tuner.PhysicalTuner` (proposal scoring).
-        Caller must hold the scheduler lock."""
+        est_pixels, est_tiles, est_cost_s, blocks_by_tile)``.  Callers:
+        :meth:`_lower` (physical planning), :meth:`what_if` (hypothetical
+        layouts), and the :class:`~repro.core.tuner.PhysicalTuner`
+        (proposal scoring).  Caller must hold the scheduler lock.
+
+        ``granularity``: ``"tile"`` charges a standard full-tile decoder
+        (``pixels_and_tiles``; ``blocks_by_tile`` is None) — the basis for
+        layout decisions, since block-granular pixels are layout-invariant;
+        ``"block"`` charges the engine's actual ROI-restricted decode and
+        yields the per-tile block-coverage masks the plan carries."""
+        if granularity not in GRANULARITIES:
+            raise ValueError(f"unknown cost granularity {granularity!r}; "
+                             f"want one of {GRANULARITIES}")
         if not boxes_by_frame:
             return
         f_lo, f_hi = min(boxes_by_frame), max(boxes_by_frame) + 1
@@ -366,9 +391,15 @@ class VideoStore:
             layout = rec.layout
             if layout_by_sot is not None:
                 layout = layout_by_sot.get(rec.sot_id, layout)
-            p, t = pixels_and_tiles(layout, local, gop=entry.encoder.gop,
-                                    sot_frames=span)
-            yield rec, epoch, layout, local, p, t, entry.cost_model.cost(p, t)
+            bbt = None
+            if granularity == "block":
+                p, t, bbt = roi_pixels_and_tiles(
+                    layout, local, gop=entry.encoder.gop, sot_frames=span)
+            else:
+                p, t = pixels_and_tiles(layout, local, gop=entry.encoder.gop,
+                                        sot_frames=span)
+            yield (rec, epoch, layout, local, p, t,
+                   entry.cost_model.cost(p, t), bbt)
 
     def _lower(self, plan: ScanPlan) -> PhysicalPlan:
         pplan = PhysicalPlan(logical=plan)
@@ -393,19 +424,24 @@ class VideoStore:
                 continue
             qrange = plan.frame_range or (min(boxes_by_frame),
                                           max(boxes_by_frame) + 1)
-            for rec, epoch, layout, local, p, t, cost in \
-                    self._sot_cost_walk(entry, boxes_by_frame):
-                needed: set[int] = set()
-                for f, boxes in local.items():
-                    for box in boxes:
-                        needed.update(layout.tiles_intersecting(box))
+            gran = "block" if self.roi_decode else "tile"
+            for rec, epoch, layout, local, p, t, cost, bbt in \
+                    self._sot_cost_walk(entry, boxes_by_frame,
+                                        granularity=gran):
+                if bbt is not None:
+                    needed = set(bbt)
+                else:
+                    needed = set()
+                    for f, boxes in local.items():
+                        for box in boxes:
+                            needed.update(layout.tiles_intersecting(box))
                 pplan.sot_scans.append(SOTScan(
                     video=name, sot_id=rec.sot_id, epoch=epoch,
                     tile_idxs=tuple(sorted(needed)),
                     n_frames=max(local) - rec.frame_start + 1,
                     boxes_by_frame=local, query_range=qrange,
                     labels=flat_labels, est_pixels=p, est_tiles=t,
-                    est_cost_s=cost))
+                    est_cost_s=cost, blocks_by_tile=bbt or {}))
         return pplan
 
     # -------------------------------------------------------------- execute
@@ -498,15 +534,26 @@ class VideoStore:
     # -------------------------------------------------------------- what-if
     def what_if(self, video: str, labels,
                 layout_by_sot: dict[int, TileLayout],
-                t_range: Optional[tuple[int, int]] = None) -> float:
+                t_range: Optional[tuple[int, int]] = None,
+                granularity: str = "tile") -> float:
         """§4.1 what-if interface: estimated cost of a query under alternate
         layouts, without touching tile data.  Locked like :meth:`lower`, so
-        concurrent durable mutations can't shift the B+-trees mid-scan."""
+        concurrent durable mutations can't shift the B+-trees mid-scan.
+
+        ``granularity="tile"`` (default) models a standard full-tile
+        decoder — the cost that *layout decisions* compare, used by the
+        policies' alpha/regret gates and the tuner's proposal scoring.
+        ``granularity="block"`` models the engine's ROI-restricted decode
+        (what a scan actually pays; matches ``explain().est_cost_s`` when
+        ``roi_decode`` is on).  Block-granular pixel cost is
+        layout-invariant — tile boundaries are 8-aligned — which is exactly
+        why it cannot replace the tile-granular cost for choosing layouts."""
         with self.scheduler.lock:
             entry = self.video(video)
             boxes_by_frame = entry.index.query(video, labels, t_range)
-            return sum(cost for *_, cost in self._sot_cost_walk(
-                entry, boxes_by_frame, layout_by_sot=layout_by_sot))
+            return sum(cost for *_, cost, _bbt in self._sot_cost_walk(
+                entry, boxes_by_frame, layout_by_sot=layout_by_sot,
+                granularity=granularity))
 
     # ---------------------------------------------------------------- stats
     def storage_bytes(self, video: Optional[str] = None) -> float:

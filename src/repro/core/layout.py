@@ -87,6 +87,31 @@ class TileLayout:
         return [r * self.n_cols + c
                 for r in range(r0, r1 + 1) for c in range(c0, c1 + 1)]
 
+    # -- 8x8 block granularity (ROI-restricted decode) ---------------------
+    # Tile boundaries are ALIGN(=8)-aligned, so every tile decomposes into
+    # whole codec blocks; block indices are tile-local, row-major over the
+    # tile's (h/8, w/8) block grid — exactly the order the codec's
+    # ``_to_blocks`` flattens them.
+    def tile_blocks(self, idx: int, block: int = ALIGN) -> int:
+        """Number of codec blocks in tile ``idx``."""
+        y1, x1, y2, x2 = self.tile_rect(idx)
+        return ((y2 - y1) // block) * ((x2 - x1) // block)
+
+    def blocks_intersecting(self, idx: int, box: BBox,
+                            block: int = ALIGN) -> list[int]:
+        """Tile-local indices of the 8x8 blocks of tile ``idx`` that the
+        (half-open, frame-coordinate) box overlaps."""
+        ty1, tx1, ty2, tx2 = self.tile_rect(idx)
+        y1, x1 = max(box[0], ty1), max(box[1], tx1)
+        y2, x2 = min(box[2], ty2), min(box[3], tx2)
+        if y1 >= y2 or x1 >= x2:
+            return []
+        nbx = (tx2 - tx1) // block
+        r0, r1 = (y1 - ty1) // block, (y2 - 1 - ty1) // block
+        c0, c1 = (x1 - tx1) // block, (x2 - 1 - tx1) // block
+        return [r * nbx + c
+                for r in range(r0, r1 + 1) for c in range(c0, c1 + 1)]
+
     def boundary_crosses(self, box: BBox) -> bool:
         """True if any internal tile boundary cuts through the box."""
         y1, x1, y2, x2 = box
@@ -100,6 +125,44 @@ class TileLayout:
 
     def describe(self) -> str:
         return f"{self.n_rows}x{self.n_cols}"
+
+
+def block_coverage(layout: TileLayout, boxes_by_frame,
+                   block: int = ALIGN) -> dict[int, tuple[int, ...] | None]:
+    """Per-tile block-coverage mask of a set of requested boxes.
+
+    Returns ``tile_idx -> mask`` for every tile any box intersects, where a
+    mask is a sorted tuple of tile-local block indices — or ``None`` when
+    the boxes cover every block of the tile (the full-tile decode fast
+    path).  This is the unit the ROI-restricted decode contract threads
+    from plan lowering through the scheduler and tile cache down to
+    ``decode_tile(blocks=...)``.
+    """
+    # per-tile block bitmap + numpy slice marking: a box covers a
+    # rectangular block range, so marking it is O(1) slices instead of a
+    # per-block python loop (full-frame boxes would otherwise enumerate
+    # every block of every tile on every frame of the plan)
+    grids: dict[int, np.ndarray] = {}
+    rects: dict[int, BBox] = {}
+    for boxes in boxes_by_frame.values():
+        for box in boxes:
+            for t in layout.tiles_intersecting(box):
+                rect = rects.get(t)
+                if rect is None:
+                    rect = rects[t] = layout.tile_rect(t)
+                ty1, tx1, ty2, tx2 = rect
+                y1, x1 = max(box[0], ty1), max(box[1], tx1)
+                y2, x2 = min(box[2], ty2), min(box[3], tx2)
+                if y1 >= y2 or x1 >= x2:
+                    continue
+                g = grids.get(t)
+                if g is None:
+                    g = grids[t] = np.zeros(((ty2 - ty1) // block,
+                                             (tx2 - tx1) // block), bool)
+                g[(y1 - ty1) // block:(y2 - 1 - ty1) // block + 1,
+                  (x1 - tx1) // block:(x2 - 1 - tx1) // block + 1] = True
+    return {t: None if g.all() else tuple(np.flatnonzero(g.ravel()).tolist())
+            for t, g in grids.items()}
 
 
 def single_tile_layout(height: int, width: int) -> TileLayout:

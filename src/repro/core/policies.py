@@ -60,6 +60,23 @@ class Policy:
         applies asynchronously under ``tuning="background"``)."""
         return None
 
+    def on_applied(self, sot_id: int, layout: TileLayout) -> None:
+        """Proposal-feedback hook: an :meth:`observe` proposal for
+        ``sot_id`` was resolved — applied (or found to be a no-op because
+        the SOT already had the layout).  Policies that mutate bookkeeping
+        when *proposing* can finalize it here.  Called under the scheduler
+        lock by whichever path resolves the proposal (inline hook or the
+        background tuner)."""
+
+    def on_superseded(self, sot_id: int, layout: TileLayout) -> None:
+        """Proposal-feedback hook: an :meth:`observe` proposal for
+        ``sot_id`` will never be applied — a newer proposal coalesced it
+        away, a foreground retile made it stale, or tuner admission
+        deferred it as net-negative.  Policies that reset bookkeeping when
+        proposing (RegretPolicy zeroes the winning alternative's regret)
+        restore it here instead of silently losing it, so a superseded
+        proposal can re-trigger once the workload warrants it again."""
+
     def spec(self) -> dict:
         """JSON-serializable constructor spec for manifest persistence.
         Runtime state travels separately via :meth:`state_dict`."""
@@ -239,6 +256,14 @@ class RegretPolicy(Policy):
         self.regret: dict[tuple[int, frozenset], float] = {}
         # (sot_id, labelset) vetoed by the alpha rule on some observed query
         self.vetoed: set[tuple[int, frozenset]] = set()
+        # in-flight proposal bookkeeping: (sot_id, layout) -> list of
+        # (regret key, pre-reset regret value), one per not-yet-resolved
+        # proposal of that layout.  observe() resets the winning
+        # alternative's regret when it proposes; the whole entry is
+        # discarded when the layout is applied and restored when it is
+        # superseded (transient — not part of state_dict: the tuner
+        # resolves every pending proposal before a durable flush)
+        self._pending: dict[tuple[int, TileLayout], list] = {}
 
     def spec(self):
         return {"name": self.name, "eta": self.eta, "alpha": self.alpha,
@@ -315,8 +340,23 @@ class RegretPolicy(Policy):
         if best is None:
             return None
         _, key, cand = best
+        self._pending.setdefault((rec.sot_id, cand), []).append(
+            (key, self.regret[key]))
         self.regret[key] = 0.0
         return cand
+
+    def on_applied(self, sot_id, layout):
+        # every pending proposal of this exact layout is satisfied by the
+        # one re-encode (re-proposals of one layout pile up under one key,
+        # see the tuner's coalescing): all their resets become legitimate
+        self._pending.pop((sot_id, layout), None)
+
+    def on_superseded(self, sot_id, layout):
+        # the re-encode never happened (coalesced away by a *different*
+        # layout, deferred, or epoch-stale): restore the regret the
+        # proposal(s) zeroed so the alternative can win again on evidence
+        for key, value in self._pending.pop((sot_id, layout), ()):
+            self.regret[key] = self.regret.get(key, 0.0) + value
 
 
 # ---------------------------------------------------------------------------

@@ -34,16 +34,29 @@ from repro.core.semantic_index import parse_predicate
 # --------------------------------------------------------------------- stats
 @dataclass
 class ScanStats:
-    """Per-query accounting.  ``pixels_decoded``/``tiles_decoded`` are the
-    *planned* (estimated) decode volume — they fill even for ``.decode(False)``
-    estimation-only scans.  ``cache_hits``/``cache_misses`` count what the
-    serving layer actually did: of the tiles this query needed, how many were
-    served from the tile cache (or a merged batch decode) vs freshly decoded.
-    A freshly decoded tile shared by several merged queries is charged as a
-    miss only to the first query (submission order) that needed it; likewise
-    in a merged batch each group's decode wall seconds land in the first
-    consumer's ``decode_s``, so summing over history counts shared work once
-    (a solo ``execute`` keeps the old wall-clock-of-decode-phase meaning).
+    """Per-query accounting.  ``pixels_decoded`` counts pixels *actually*
+    decoded on behalf of this query, at 8x8-block granularity: an
+    ROI-restricted fetch adds its masked blocks x frames, and a tile
+    served from the cache (or an earlier consumer's decode in a merged
+    batch) adds nothing — a fully warm repeat scan reports 0.  A
+    covering-miss re-decode is charged in full: when the cache holds a
+    partial entry the fetch widens to the union of the old and new masks
+    at the max of both depths (entries never shrink), so the triggering
+    query can be charged more than its own mask.  Like
+    ``cache_misses``, shared fresh work is charged to the first query
+    (submission order) that needed it, so summing over history counts each
+    decoded block once.  For ``.decode(False)`` estimation-only scans it
+    falls back to the plan's ``est_pixels``.  ``tiles_decoded`` stays the
+    *planned* tile-stream-open estimate (it fills for estimation-only scans
+    too).  ``cache_hits``/``cache_misses`` count what the serving layer
+    actually did: of the tiles this query needed, how many were served from
+    the tile cache (or a merged batch decode) vs freshly decoded.  A
+    freshly decoded tile shared by several merged queries is charged as a
+    miss only to the first query (submission order) that needed it;
+    likewise in a merged batch each group's decode wall seconds land in the
+    first consumer's ``decode_s``, so summing over history counts shared
+    work once (a solo ``execute`` keeps the old wall-clock-of-decode-phase
+    meaning).
 
     ``retile_s`` — seconds of policy-driven re-encoding charged to THIS
     query.  Non-zero only under ``tuning="inline"``, where re-tiles run
@@ -116,7 +129,15 @@ class ScanPlan:
 # ------------------------------------------------------------ physical plan
 @dataclass
 class SOTScan:
-    """One physical work unit: decode `tile_idxs` of one SOT."""
+    """One physical work unit: decode `tile_idxs` of one SOT.
+
+    ``blocks_by_tile`` is the plan's block-coverage mask — for every tile in
+    ``tile_idxs``, the sorted tuple of tile-local 8x8-block indices the
+    query's boxes intersect, or ``None`` for "every block" (full-tile
+    decode).  An *empty* dict marks a full-tile plan (``roi_decode=False``
+    or a pre-ROI plan): the scheduler then decodes whole tiles, exactly the
+    PR-3 path.  Masks are minted against ``epoch``'s layout; a stale plan
+    recomputes them from ``boxes_by_frame`` at fetch time."""
     video: str
     sot_id: int
     epoch: int                      # layout epoch the plan was made against
@@ -128,6 +149,7 @@ class SOTScan:
     est_pixels: float = 0.0
     est_tiles: float = 0.0
     est_cost_s: float = 0.0
+    blocks_by_tile: dict = field(default_factory=dict)
 
 
 @dataclass
@@ -157,9 +179,16 @@ class PhysicalPlan:
     def describe(self) -> str:
         lines = [self.logical.describe()]
         for s in self.sot_scans:
+            roi = ""
+            if s.blocks_by_tile:
+                n_sel = sum(len(m) for m in s.blocks_by_tile.values()
+                            if m is not None)
+                full = sum(1 for m in s.blocks_by_tile.values() if m is None)
+                roi = f" blocks={n_sel}+{full}full" if full \
+                    else f" blocks={n_sel}"
             lines.append(
                 f"  {s.video} sot={s.sot_id} epoch={s.epoch} "
-                f"tiles={list(s.tile_idxs)} frames<={s.n_frames} "
+                f"tiles={list(s.tile_idxs)}{roi} frames<={s.n_frames} "
                 f"~{s.est_pixels / 1e6:.2f}Mpx est={s.est_cost_s * 1e3:.2f}ms")
         lines.append(
             f"  total: {len(self.sot_scans)} SOTs, {self.est_tiles:.0f} tile "

@@ -51,7 +51,7 @@ from typing import TYPE_CHECKING, Optional
 
 import numpy as np
 
-from repro.core.layout import BBox, TileLayout
+from repro.core.layout import BBox, TileLayout, block_coverage
 from repro.core.query import (PhysicalPlan, ScanPlan, ScanQuery, ScanResult,
                               ScanStats, SOTScan)
 from repro.core.tile_cache import TileCache
@@ -63,17 +63,22 @@ if TYPE_CHECKING:  # pragma: no cover - typing only
 GroupKey = tuple[str, int]
 
 
-def _resolve_tiles(ss: SOTScan, rec) -> tuple[int, ...]:
-    """The tile indices ``ss`` needs under the SOT's *current* layout.
-    Planned indices when the epoch still matches; recomputed from the
-    requested boxes after a retile (stale plan)."""
+def _resolve_needs(ss: SOTScan, rec) -> tuple[tuple[int, ...], dict]:
+    """The (tile indices, per-tile block masks) ``ss`` needs under the
+    SOT's *current* layout.  Planned values when the epoch still matches;
+    recomputed from the requested boxes after a retile (stale plan).  The
+    mask dict is empty for full-tile plans (``roi_decode=False``); in an
+    ROI plan a mask of ``None`` means every block of that tile."""
     if rec.epoch == ss.epoch:
-        return ss.tile_idxs
+        return ss.tile_idxs, ss.blocks_by_tile
+    if ss.blocks_by_tile:   # ROI plan: recompute coverage under new layout
+        bbt = block_coverage(rec.layout, ss.boxes_by_frame)
+        return tuple(sorted(bbt)), bbt
     needed: set[int] = set()
     for boxes in ss.boxes_by_frame.values():
         for box in boxes:
             needed.update(rec.layout.tiles_intersecting(box))
-    return tuple(sorted(needed))
+    return tuple(sorted(needed)), {}
 
 
 @dataclass
@@ -84,6 +89,7 @@ class _GroupFetch:
     tiles: dict[int, np.ndarray]
     fresh: set[int]                       # decoded this fetch (cache misses)
     need: dict[int, tuple[int, ...]]      # id(SOTScan) -> resolved tiles
+    pixels_by_tile: dict[int, float] = field(default_factory=dict)
     seconds: float = 0.0                  # wall time of this fetch
     claimed: set[int] = field(default_factory=set)
     time_claimed: bool = False
@@ -179,7 +185,11 @@ class ScanScheduler:
 
     def _fetch(self, gkey: GroupKey, members: list[SOTScan]) -> _GroupFetch:
         """Decode one group: union of the members' (current-layout) tile
-        needs, each tile through the cache."""
+        needs, each tile through the cache.  Block masks union across
+        members, so a shared tile decodes each needed block at most once;
+        a cached entry covering a member's mask (full tile, or a superset
+        ROI) is a hit, and a covering miss re-decodes the union of the old
+        entry's mask and the new need (never shrinking coverage)."""
         t0 = time.perf_counter()
         video, sot_id = gkey
         entry = self.engine.video(video)
@@ -190,35 +200,66 @@ class ScanScheduler:
         # group-wide max would re-decode warm shallow tiles whenever any
         # deeper query shares the group)
         depth: dict[int, int] = {}
+        # per-tile block mask: union over members; None = full tile
+        masks: dict[int, object] = {}
         stale_seen = False
         for ss in members:
             stale_seen |= ss.epoch != epoch
-            tiles = _resolve_tiles(ss, rec)
+            tiles, bbt = _resolve_needs(ss, rec)
             need[id(ss)] = tiles
             for t in tiles:
                 depth[t] = max(depth.get(t, 0), ss.n_frames)
+                m = bbt.get(t) if bbt else None
+                if t not in masks:
+                    masks[t] = None if m is None else set(m)
+                elif masks[t] is not None:
+                    masks[t] = None if m is None else masks[t] | set(m)
+        for t, m in masks.items():
+            # a union that grew to every block IS a full-tile need:
+            # normalize to None so the cached entry serves later
+            # whole-tile requests too (None covers everything)
+            if m is not None and len(m) == rec.layout.tile_blocks(t):
+                masks[t] = None
         if stale_seen:
             # a retile outdated this plan; if it was a store-level retile
             # (engine-path ones purge on the spot) dead-epoch entries are
             # still squatting on the byte budget — purge is idempotent
             self.cache.invalidate(video, sot_id, before_epoch=epoch)
         out: dict[int, np.ndarray] = {}
-        to_decode: dict[int, list[int]] = {}   # depth -> tiles
+        to_decode: dict[int, dict[int, object]] = {}   # depth -> tile -> mask
         for t in sorted(depth):
-            arr = self.cache.get((video, sot_id, epoch, t), depth[t])
-            if arr is None:
-                to_decode.setdefault(depth[t], []).append(t)
-            else:
+            key = (video, sot_id, epoch, t)
+            arr = self.cache.get(key, depth[t], blocks=masks[t])
+            if arr is not None:
                 out[t] = arr
+                continue
+            nf, m = depth[t], masks[t]
+            cov = self.cache.coverage(key)
+            if cov is not None:
+                # widen to cover the existing entry too, so the re-decode
+                # can replace it (put never shrinks depth or coverage)
+                nf = max(nf, cov[0])
+                m = None if (m is None or cov[1] is None) else m | cov[1]
+                if m is not None and len(m) == rec.layout.tile_blocks(t):
+                    m = None
+            to_decode.setdefault(nf, {})[t] = m
         fresh: set[int] = set()
+        pixels_by_tile: dict[int, float] = {}
         for nf, tiles in sorted(to_decode.items()):
-            dec = entry.store.decode_tiles(sot_id, tiles, n_frames=nf)
+            blocks = {t: (None if m is None else tuple(sorted(m)))
+                      for t, m in tiles.items()}
+            dec = entry.store.decode_tiles(sot_id, list(tiles), n_frames=nf,
+                                           blocks=blocks)
             for t, arr in dec.items():
                 out[t] = arr
                 fresh.add(t)
-                self.cache.put((video, sot_id, epoch, t), arr)
+                m = blocks[t]
+                n_blocks = rec.layout.tile_blocks(t) if m is None else len(m)
+                pixels_by_tile[t] = float(n_blocks * 64 * arr.shape[0])
+                self.cache.put((video, sot_id, epoch, t), arr, blocks=m)
         return _GroupFetch(epoch=epoch, layout=rec.layout,
                            tiles=out, fresh=fresh, need=need,
+                           pixels_by_tile=pixels_by_tile,
                            seconds=time.perf_counter() - t0)
 
     # ----------------------------------------------------------- per plan
@@ -230,7 +271,11 @@ class ScanScheduler:
         plan = pplan.logical
         stats = ScanStats(lookup_s=pplan.lookup_s)
         for ss in pplan.sot_scans:
-            stats.pixels_decoded += ss.est_pixels
+            # tiles_decoded stays the planned estimate; pixels_decoded is
+            # *actual* work for decoding scans (accumulated per fresh tile
+            # below) and falls back to the estimate for .decode(False)
+            if not plan.decode:
+                stats.pixels_decoded += ss.est_pixels
             stats.tiles_decoded += ss.est_tiles
 
         regions_by_video: dict[str, list] = {v: [] for v in plan.videos}
@@ -257,11 +302,12 @@ class ScanScheduler:
                     stats.decode_s += f.seconds
                 my_tiles = f.need.get(id(ss))
                 if my_tiles is None:
-                    my_tiles = _resolve_tiles(ss, rec)
+                    my_tiles, _ = _resolve_needs(ss, rec)
                 for t in my_tiles:
                     if t in f.fresh and t not in f.claimed:
                         f.claimed.add(t)
                         stats.cache_misses += 1
+                        stats.pixels_decoded += f.pixels_by_tile.get(t, 0.0)
                     else:
                         stats.cache_hits += 1
                 out = regions_by_video[ss.video]

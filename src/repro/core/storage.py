@@ -50,8 +50,11 @@ class TileStore:
         self.encode_seconds_total = 0.0
         # actual tile-stream decodes (cache hits in the serving layer never
         # reach this counter) — lets tests/benchmarks verify dedup exactly;
-        # locked: group fetches decode concurrently on the worker pool
+        # locked: group fetches decode concurrently on the worker pool.
+        # pixels_decoded_total counts actual decoded pixels at 8x8-block
+        # granularity (an ROI-restricted decode adds only its masked blocks)
         self.tiles_decoded_total = 0
+        self.pixels_decoded_total = 0
         self._stats_lock = threading.Lock()
 
     # -- paths ---------------------------------------------------------------
@@ -66,18 +69,38 @@ class TileStore:
         d = self._sot_dir(rec)
         d.mkdir(parents=True, exist_ok=True)
         tmp = d / f".tile{tile_idx}.tmp.npz"
-        np.savez_compressed(tmp, kq=enc["kq"], pq=enc["pq"],
+        # one zip member per GOP so a prefix read (temporal random access)
+        # decompresses only the GOPs it needs instead of the whole stream
+        gops = {}
+        for g in range(len(enc["kq"])):
+            gops[f"kq_{g}"] = enc["kq"][g]
+            gops[f"pq_{g}"] = enc["pq"][g]
+        np.savez_compressed(tmp,
                             meta=np.array([enc["h"], enc["w"], enc["gop"],
                                            enc["qp"], enc["n_frames"]]),
-                            size=np.array([enc["size_bytes"]]))
+                            size=np.array([enc["size_bytes"]]), **gops)
         tmp.rename(d / f"tile{tile_idx}.npz")
 
-    def _read_tile(self, rec: SOTRecord, tile_idx: int) -> dict:
+    def _read_tile(self, rec: SOTRecord, tile_idx: int, *,
+                   n_gops: int | None = None) -> dict:
+        """Load an encoded tile; ``n_gops`` limits materialization to the
+        first n GOPs (a prefix read never touches the rest of the stream —
+        on disk, npz members beyond the prefix are not even decompressed)."""
         if self.root is None:
-            return self._mem[(rec.sot_id, rec.epoch, tile_idx)]
+            enc = self._mem[(rec.sot_id, rec.epoch, tile_idx)]
+            if n_gops is None or n_gops >= len(enc["kq"]):
+                return enc
+            return {**enc, "kq": enc["kq"][:n_gops], "pq": enc["pq"][:n_gops]}
         with np.load(self._sot_dir(rec) / f"tile{tile_idx}.npz") as z:
             h, w, gop, qp, n_frames = (int(x) for x in z["meta"])
-            return {"kq": z["kq"], "pq": z["pq"], "h": h, "w": w, "gop": gop,
+            total = n_frames // gop
+            k = total if n_gops is None else min(n_gops, total)
+            if "kq" in z.files:   # legacy layout: one member for all GOPs
+                kq, pq = z["kq"][:k], z["pq"][:k]
+            else:
+                kq = [z[f"kq_{g}"] for g in range(k)]
+                pq = [z[f"pq_{g}"] for g in range(k)]
+            return {"kq": kq, "pq": pq, "h": h, "w": w, "gop": gop,
                     "qp": qp, "n_frames": n_frames,
                     "size_bytes": float(z["size"][0])}
 
@@ -121,30 +144,45 @@ class TileStore:
         rec.size_bytes = total
 
     # -- decode ----------------------------------------------------------------
-    def decode_tiles(self, sot_id: int, tile_idxs, *, n_frames: Optional[int] = None
-                     ) -> dict[int, np.ndarray]:
+    def decode_tiles(self, sot_id: int, tile_idxs, *,
+                     n_frames: Optional[int] = None,
+                     blocks: Optional[dict] = None) -> dict[int, np.ndarray]:
         """Decode the given tile streams of a SOT up to n_frames.  Whole GOPs
         except the last, which stops at the last requested frame (temporal
-        random access never decodes past the request)."""
+        random access never decodes past the request).
+
+        ``blocks``: optional ``tile_idx -> block mask`` (sorted tile-local
+        8x8-block indices, or ``None`` for the full tile) — ROI-restricted
+        decode: only masked blocks are dequantized/transformed, the rest of
+        each returned array stays zero (see ``decode_tile``).  Tiles absent
+        from the dict decode fully."""
         rec = self.sots[sot_id]
         span = rec.frame_end - rec.frame_start
         n_frames = span if n_frames is None else min(n_frames, span)
         gop = self.encoder.gop
         n_full = n_frames // gop
         tail = n_frames - n_full * gop
+        n_gops = n_full + (1 if tail else 0)
         out = {}
         tile_idxs = list(tile_idxs)
-        with self._stats_lock:
-            self.tiles_decoded_total += len(tile_idxs)
+        pixels = 0
         for t in tile_idxs:
-            enc = self._read_tile(rec, t)
+            enc = self._read_tile(rec, t, n_gops=n_gops)
+            mask = (blocks or {}).get(t)
+            n_blocks = (enc["h"] // 8) * (enc["w"] // 8) if mask is None \
+                else len(mask)
+            pixels += n_blocks * 64 * n_frames
             parts = []
             if n_full:
-                parts.append(decode_tile(enc, gop_indices=range(n_full)))
+                parts.append(decode_tile(enc, gop_indices=range(n_full),
+                                         blocks=mask))
             if tail:
                 parts.append(decode_tile(enc, gop_indices=[n_full],
-                                         frames_within=tail))
+                                         frames_within=tail, blocks=mask))
             out[t] = np.concatenate(parts, axis=0) if len(parts) > 1 else parts[0]
+        with self._stats_lock:
+            self.tiles_decoded_total += len(tile_idxs)
+            self.pixels_decoded_total += pixels
         return out
 
     def decode_full_sot(self, sot_id: int) -> np.ndarray:

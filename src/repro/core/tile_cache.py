@@ -1,9 +1,9 @@
 """Byte-budgeted LRU cache of decoded tile arrays (serving layer, part 1).
 
 Decoded tiles are the engine's most expensive artifact: every scan that
-touches a SOT pays a full tile-stream decode even when an earlier query
-already materialized the same pixels.  ``TileCache`` keeps those arrays
-across queries, keyed::
+touches a SOT pays a tile-stream decode even when an earlier query already
+materialized the same pixels.  ``TileCache`` keeps those arrays across
+queries, keyed::
 
     (video, sot_id, epoch, tile_idx)
 
@@ -23,6 +23,18 @@ deterministic, so ``arr[:k]`` is bit-identical to a fresh ``k``-frame decode
 of the same tile.  A request for *more* frames than cached is a miss; the
 deeper decode then replaces the shallower entry.
 
+Block-coverage semantics (ROI-restricted decode): an entry records which
+8x8 blocks of the tile its array actually holds — ``None`` for a full-tile
+decode, else the mask that was passed to ``decode_tile(blocks=...)``
+(pixels outside it are zero, *not* tile content).  A request hits only if
+the entry **covers** it: a full-tile entry serves any sub-ROI request, a
+covering ROI entry serves any subset mask (per-block decode is
+deterministic, so covered blocks are bit-identical), and a request for
+blocks outside the entry's mask is a miss.  On such a miss the scheduler
+re-decodes the *union* of the old and new masks at the max of both depths,
+so :meth:`put` never shrinks an entry in either dimension — coverage and
+depth only ever grow until eviction.
+
 Thread safety: every public method takes the internal lock; returned arrays
 are shared read-only views — callers must not write into them (the executor
 only crops from them).
@@ -32,13 +44,33 @@ from __future__ import annotations
 import threading
 from collections import OrderedDict
 from dataclasses import dataclass
+from typing import Iterable, Optional
 
 import numpy as np
 
 #: cache key: (video, sot_id, epoch, tile_idx)
 TileKey = tuple[str, int, int, int]
 
+#: block coverage: None = full tile, else frozenset of tile-local indices
+BlockMask = Optional[frozenset]
+
 DEFAULT_CACHE_BYTES = 256 << 20  # 256 MiB
+
+
+def _covers(entry_blocks: BlockMask, requested: BlockMask) -> bool:
+    """Does an entry holding ``entry_blocks`` serve a request for
+    ``requested``?  ``None`` means "the whole tile" on either side."""
+    if entry_blocks is None:
+        return True
+    if requested is None:
+        return False
+    return requested <= entry_blocks
+
+
+@dataclass
+class _Entry:
+    arr: np.ndarray
+    blocks: BlockMask
 
 
 @dataclass
@@ -66,7 +98,7 @@ class TileCache:
 
     def __init__(self, budget_bytes: int = DEFAULT_CACHE_BYTES):
         self.budget_bytes = int(budget_bytes)
-        self._lru: OrderedDict[TileKey, np.ndarray] = OrderedDict()
+        self._lru: OrderedDict[TileKey, _Entry] = OrderedDict()
         self._lock = threading.Lock()
         self._hits = 0
         self._misses = 0
@@ -75,39 +107,56 @@ class TileCache:
         self._bytes = 0
 
     # ------------------------------------------------------------- access
-    def get(self, key: TileKey, n_frames: int | None = None
-            ) -> np.ndarray | None:
+    def get(self, key: TileKey, n_frames: int | None = None,
+            blocks: Optional[Iterable[int]] = None) -> np.ndarray | None:
         """Return the cached decode for ``key`` (first ``n_frames`` frames),
-        or None.  A cached array shallower than ``n_frames`` is a miss."""
+        or None.  A cached array shallower than ``n_frames``, or one whose
+        block coverage does not include every block in ``blocks``
+        (``None`` = the whole tile), is a miss."""
+        requested = None if blocks is None else frozenset(blocks)
         with self._lock:
-            arr = self._lru.get(key)
-            if arr is None or (n_frames is not None
-                               and arr.shape[0] < n_frames):
+            e = self._lru.get(key)
+            if e is None or (n_frames is not None
+                             and e.arr.shape[0] < n_frames) \
+                    or not _covers(e.blocks, requested):
                 self._misses += 1
                 return None
             self._lru.move_to_end(key)
             self._hits += 1
-            return arr if n_frames is None else arr[:n_frames]
+            return e.arr if n_frames is None else e.arr[:n_frames]
 
-    def put(self, key: TileKey, arr: np.ndarray) -> None:
-        """Insert (or deepen) a decoded tile; evicts LRU entries over
-        budget.  Arrays larger than the whole budget are not cached."""
+    def coverage(self, key: TileKey) -> Optional[tuple[int, BlockMask]]:
+        """Peek an entry's ``(n_frames, blocks)`` coverage without touching
+        LRU order or hit/miss counters — the scheduler uses it to widen a
+        covering-miss re-decode to the union of old and new masks."""
+        with self._lock:
+            e = self._lru.get(key)
+            return None if e is None else (e.arr.shape[0], e.blocks)
+
+    def put(self, key: TileKey, arr: np.ndarray,
+            blocks: Optional[Iterable[int]] = None) -> None:
+        """Insert (or deepen/widen) a decoded tile; evicts LRU entries over
+        budget.  Arrays larger than the whole budget are not cached.  An
+        entry is only replaced by one that covers it (>= frames AND a
+        superset block mask) — a narrower or shallower decode never clobbers
+        an entry that can serve more requests."""
         nbytes = int(arr.nbytes)
         if nbytes > self.budget_bytes:
             return
+        new_blocks = None if blocks is None else frozenset(blocks)
         with self._lock:
             old = self._lru.pop(key, None)
             if old is not None:
-                if old.shape[0] > arr.shape[0]:
-                    # never shrink: the deeper decode serves more requests
-                    self._lru[key] = old
+                if old.arr.shape[0] > arr.shape[0] \
+                        or not _covers(new_blocks, old.blocks):
+                    self._lru[key] = old   # keep the wider/deeper entry
                     return
-                self._bytes -= old.nbytes
-            self._lru[key] = arr
+                self._bytes -= old.arr.nbytes
+            self._lru[key] = _Entry(arr, new_blocks)
             self._bytes += nbytes
             while self._bytes > self.budget_bytes and self._lru:
                 _, victim = self._lru.popitem(last=False)
-                self._bytes -= victim.nbytes
+                self._bytes -= victim.arr.nbytes
                 self._evictions += 1
 
     # ------------------------------------------------------- invalidation
@@ -123,7 +172,7 @@ class TileCache:
                       and (sot_id is None or k[1] == sot_id)
                       and (before_epoch is None or k[2] < before_epoch)]
             for k in doomed:
-                self._bytes -= self._lru.pop(k).nbytes
+                self._bytes -= self._lru.pop(k).arr.nbytes
             self._invalidations += len(doomed)
             return len(doomed)
 

@@ -61,7 +61,7 @@ from dataclasses import dataclass, replace
 from typing import TYPE_CHECKING, Optional
 
 from repro.core.layout import TileLayout
-from repro.core.policies import Policy, QueryInfo
+from repro.core.policies import ALPHA, Policy, QueryInfo
 
 if TYPE_CHECKING:  # pragma: no cover - typing only
     from repro.core.engine import VideoEntry, VideoStore
@@ -69,6 +69,15 @@ if TYPE_CHECKING:  # pragma: no cover - typing only
 
 #: valid VideoStore ``tuning=`` modes
 TUNING_MODES = ("background", "inline", "off")
+
+#: valid ``admission=`` modes: "policy" trusts the policies' own
+#: alpha/regret gates (background adopts exactly what inline would);
+#: "gated" additionally scores every coalesced winner through the §4.1
+#: what-if interface, DEFERS net-negative proposals
+#: (est_savings < alpha * est_reencode, alpha from the proposing policy),
+#: and applies the survivors ranked by net benefit — a budgeted tuner that
+#: spends re-encode time where the observed workload says it pays off
+ADMISSION_MODES = ("policy", "gated")
 
 #: default bound on the workload log (observations, not bytes)
 DEFAULT_MAX_LOG = 4096
@@ -110,6 +119,10 @@ class TunerStats:
     - ``applied``/``skipped`` — coalesced winners re-encoded vs. discarded
       as no-ops (the SOT already had the proposed layout, or the video/SOT
       disappeared before application).
+    - ``deferred`` — winners rejected by ``admission="gated"`` as
+      net-negative (``est_savings_s < alpha * est_reencode_s``); the
+      proposing policy's ``on_superseded`` hook restores its bookkeeping,
+      so a deferred retile re-proposes once more workload accumulates.
     - ``retile_s`` — seconds spent re-encoding applied retiles.
     - ``tuning_s`` — total wall seconds inside drain batches (replay +
       what-if scoring + re-encode); ``tuning_s - retile_s`` is the pure
@@ -124,6 +137,7 @@ class TunerStats:
     coalesced: int = 0
     applied: int = 0
     skipped: int = 0
+    deferred: int = 0
     retile_s: float = 0.0
     tuning_s: float = 0.0
     est_savings_s: float = 0.0
@@ -140,12 +154,16 @@ class PhysicalTuner:
     """
 
     def __init__(self, engine: "VideoStore", mode: str = "background", *,
-                 max_log: int = DEFAULT_MAX_LOG):
+                 admission: str = "policy", max_log: int = DEFAULT_MAX_LOG):
         if mode not in TUNING_MODES:
             raise ValueError(f"unknown tuning mode {mode!r}; "
                              f"want one of {TUNING_MODES}")
+        if admission not in ADMISSION_MODES:
+            raise ValueError(f"unknown admission mode {admission!r}; "
+                             f"want one of {ADMISSION_MODES}")
         self.engine = engine
         self.mode = mode
+        self.admission = admission
         self.max_log = max(1, int(max_log))
         self._log: deque[Observation] = deque()
         #: the batch currently being replayed/applied: moved out of _log at
@@ -234,6 +252,9 @@ class PhysicalTuner:
                     self._stats.proposals += 1
             if proposal is not None:
                 dt = engine._retile(ss.video, ss.sot_id, proposal)
+                # resolved synchronously (applied, or already installed):
+                # the policy's proposal bookkeeping is now legitimate
+                entry.policy.on_applied(ss.sot_id, proposal)
                 retile_s += dt
                 with self._cv:
                     if dt:
@@ -368,7 +389,7 @@ class PhysicalTuner:
         the batch from the log."""
         engine = self.engine
         t0 = time.perf_counter()
-        proposals = coalesced = applied = skipped = 0
+        proposals = coalesced = applied = skipped = deferred = 0
         retile_s = savings_s = reencode_s = 0.0
         # keyed (video, sot_id); insertion order = first-proposal order, so
         # application order is deterministic for a given batch.  The layout
@@ -377,6 +398,11 @@ class PhysicalTuner:
         # what-if score reflects the whole observed workload
         pending: dict[tuple[str, int],
                       tuple[TileLayout, int, list[Observation]]] = {}
+        # every pending proposal must reach exactly one feedback hook;
+        # keys leave this set as they are resolved, and whatever an
+        # aborted batch leaves behind is superseded in the error cleanup
+        # (so RegretPolicy's zeroed regret is never simply lost)
+        unresolved: set[tuple[str, int]] = set()
         err: Optional[BaseException] = None
         try:
             # replay phase: one lock hold PER observation (matching the
@@ -401,31 +427,99 @@ class PhysicalTuner:
                     prev = pending.get(key)
                     if prev is not None:
                         coalesced += 1
+                        # a *different* older layout will never re-encode:
+                        # tell the policy so reset bookkeeping (RegretPolicy's
+                        # zeroed regret) is restored instead of silently
+                        # lost.  A re-proposal of the SAME layout is merely
+                        # subsumed — the winner's eventual on_applied/
+                        # on_superseded resolves every stacked proposal
+                        if prev[0] != proposal:
+                            entry.policy.on_superseded(obs.sot_id, prev[0])
                         prev[2].append(obs)
                         pending[key] = (proposal, rec.epoch, prev[2])
                     else:
                         pending[key] = (proposal, rec.epoch, [obs])
+                    unresolved.add(key)
+            # admission (``"gated"``): score every coalesced winner first,
+            # defer the net-negative ones, and rank the survivors by net
+            # benefit so a budgeted backlog re-encodes best-payoff-first.
+            # ``"policy"`` applies in first-proposal order with no gate —
+            # admission already happened inside the policies
+            if self.admission == "gated":
+                ranked = []
+                for i, ((video, sot_id), (layout, epoch, obs_list)) in \
+                        enumerate(pending.items()):
+                    with engine.scheduler.lock:
+                        entry = engine._videos.get(video)
+                        if entry is None \
+                                or sot_id >= len(entry.store.sots):
+                            skipped += 1
+                            unresolved.discard((video, sot_id))
+                            continue
+                        if entry.store.sots[sot_id].epoch != epoch:
+                            # stale before scoring: a foreground retile
+                            # won, so the current layout is a meaningless
+                            # baseline — same skipped+superseded outcome
+                            # the apply phase gives stale proposals
+                            skipped += 1
+                            entry.policy.on_superseded(sot_id, layout)
+                            unresolved.discard((video, sot_id))
+                            continue
+                        saved, reenc = self._score(entry, sot_id, layout,
+                                                   obs_list)
+                        alpha = getattr(entry.policy, "alpha", ALPHA)
+                        if saved < alpha * reenc:
+                            deferred += 1
+                            entry.policy.on_superseded(sot_id, layout)
+                            unresolved.discard((video, sot_id))
+                            continue
+                    ranked.append((saved - alpha * reenc, -i,
+                                   ((video, sot_id),
+                                    (layout, epoch, obs_list),
+                                    (saved, reenc))))
+                ranked.sort(reverse=True)   # net benefit desc, ties FIFO
+                order = [item for *_, item in ranked]
+            else:
+                order = [(k, v, None) for k, v in pending.items()]
             # apply phase: one lock hold PER re-encode, so concurrent
             # scans interleave between retiles instead of stalling for the
             # whole batch (epoch bumps keep interleaved plans consistent)
-            for (video, sot_id), (layout, epoch, obs_list) in \
-                    pending.items():
+            for (video, sot_id), (layout, epoch, obs_list), score in order:
                 with engine.scheduler.lock:
+                    # NOTE: the key leaves `unresolved` only once its hook
+                    # has fired (or no policy exists to notify) — if
+                    # _retile/save below raises first, the error cleanup
+                    # still supersedes this proposal instead of leaking it
                     entry = engine._videos.get(video)
                     if entry is None or sot_id >= len(entry.store.sots):
                         skipped += 1
+                        unresolved.discard((video, sot_id))
                         continue
                     rec = entry.store.sots[sot_id]
-                    if rec.epoch != epoch or layout == rec.layout:
-                        # a retile landed after this proposal was made (or
-                        # already installed exactly this layout): the
-                        # proposal is stale — applying it would revert a
-                        # newer foreground layout with a wasted re-encode
+                    if rec.epoch != epoch:
+                        # a retile landed after this proposal was made:
+                        # applying it would revert a newer foreground
+                        # layout with a wasted re-encode — never applied,
+                        # so the policy restores its bookkeeping
                         skipped += 1
+                        entry.policy.on_superseded(sot_id, layout)
+                        unresolved.discard((video, sot_id))
                         continue
-                    saved, reenc = self._score(entry, sot_id, layout,
-                                               obs_list)
+                    if layout == rec.layout:
+                        # already installed exactly this layout: the
+                        # proposal's intent is satisfied without work
+                        skipped += 1
+                        entry.policy.on_applied(sot_id, layout)
+                        unresolved.discard((video, sot_id))
+                        continue
+                    # gated mode already scored this winner and the epoch
+                    # check above proves the inputs are unchanged: reuse it
+                    # instead of paying the what-if walk a second time
+                    saved, reenc = score if score is not None else \
+                        self._score(entry, sot_id, layout, obs_list)
                     retile_s += engine._retile(video, sot_id, layout)
+                    entry.policy.on_applied(sot_id, layout)
+                    unresolved.discard((video, sot_id))
                     applied += 1
                     savings_s += saved
                     reencode_s += reenc
@@ -434,6 +528,18 @@ class PhysicalTuner:
                     engine.save()  # BEFORE the batch leaves the backlog
         except Exception as e:   # noqa: BLE001 - keep the tuner alive
             err = e
+            # resolve proposals the aborted batch never reached, so policy
+            # bookkeeping is restored rather than leaked (best-effort: the
+            # original error stays the one drain() re-raises)
+            for key in unresolved:
+                try:
+                    with engine.scheduler.lock:
+                        entry = engine._videos.get(key[0])
+                        if entry is not None:
+                            entry.policy.on_superseded(key[1],
+                                                       pending[key][0])
+                except Exception:   # noqa: BLE001 - cleanup must not mask
+                    pass
         finally:
             # the batch is dropped even on failure (re-processing a batch
             # that raises would wedge the tuner); drain() re-raises the
@@ -446,6 +552,7 @@ class PhysicalTuner:
                 st.coalesced += coalesced
                 st.applied += applied
                 st.skipped += skipped
+                st.deferred += deferred
                 st.retile_s += retile_s
                 st.est_savings_s += savings_s
                 st.est_reencode_s += reencode_s
@@ -465,9 +572,10 @@ class PhysicalTuner:
         walk = self.engine._sot_cost_walk
         saved = 0.0
         for obs in obs_list:
-            cur = sum(c for rec, *_, c in walk(entry, obs.boxes_by_frame)
+            cur = sum(c for rec, *_, c, _b in
+                      walk(entry, obs.boxes_by_frame)
                       if rec.sot_id == sot_id)
-            alt = sum(c for rec, *_, c in
+            alt = sum(c for rec, *_, c, _b in
                       walk(entry, obs.boxes_by_frame,
                            layout_by_sot={sot_id: layout})
                       if rec.sot_id == sot_id)

@@ -161,8 +161,20 @@ class TestPlanExecute:
         store = VideoStore()
         fill(store, "cam0", frames, dets)
         plan = store.scan("cam0").labels("car").frames(0, 32).explain()
+        # plan estimates charge what the engine actually decodes (ROI
+        # blocks); what_if's default "tile" granularity models a standard
+        # full-tile decoder for layout decisions
         assert plan.est_cost_s == pytest.approx(
-            store.what_if("cam0", "car", {}, (0, 32)))
+            store.what_if("cam0", "car", {}, (0, 32), granularity="block"))
+        assert plan.est_cost_s <= store.what_if("cam0", "car", {}, (0, 32))
+        # with ROI decode off, plans estimate full-tile decode again
+        full = VideoStore(roi_decode=False)
+        fill(full, "cam0", frames, dets)
+        fplan = full.scan("cam0").labels("car").frames(0, 32).explain()
+        assert fplan.est_cost_s == pytest.approx(
+            full.what_if("cam0", "car", {}, (0, 32)))
+        with pytest.raises(ValueError, match="granularity"):
+            store.what_if("cam0", "car", {}, (0, 32), granularity="roi")
 
     def test_decode_false_estimation_only(self, small_video):
         frames, dets = small_video

@@ -59,10 +59,23 @@ class TestScan:
         assert all(f < 8 for f, _, _ in res.regions)
 
     def test_tiled_scan_decodes_fewer_pixels(self, small_video):
+        # under a standard full-tile decoder (roi_decode=False) tiling cuts
+        # decoded pixels; with ROI-restricted block decode the pixel count
+        # is layout-invariant, which test_roi.py covers separately
         frames, dets = small_video
-        s1 = make_store(frames, dets)
+
+        def full_tile_store(policy=None):
+            store = VideoStore(tuning="inline", roi_decode=False)
+            store.add_video("v", encoder=ENC,
+                            policy=policy or NoTilingPolicy(),
+                            cost_model=MODEL)
+            store.ingest("v", frames)
+            store.add_detections("v", {f: d for f, d in enumerate(dets)})
+            return store
+
+        s1 = full_tile_store()
         p1 = scan(s1, "car", (0, 16)).stats.pixels_decoded
-        s2 = make_store(frames, dets, policy=PretileAllPolicy())
+        s2 = full_tile_store(policy=PretileAllPolicy())
         # re-run ingest-time pretile with detections now present
         e2 = s2.video("v")
         for rec_id, lay in e2.policy.on_ingest(e2.index, e2.store, "v",
@@ -70,6 +83,10 @@ class TestScan:
             e2.store.retile(rec_id, lay)
         p2 = scan(s2, "car", (0, 16)).stats.pixels_decoded
         assert p2 < p1
+        # ROI decode on the untiled store beats even the tiled full decode
+        s3 = make_store(frames, dets)
+        p3 = scan(s3, "car", (0, 16)).stats.pixels_decoded
+        assert p3 <= p2
 
     def test_what_if_interface(self, small_video):
         frames, dets = small_video

@@ -496,3 +496,190 @@ class TestCrashSafeOrdering:
         assert backlog_at_save and backlog_at_save[-1] == 3
         assert store.tuner.backlog == 0
         store.close()
+
+
+# ------------------------------------------------------ admission control
+class TestAdmissionControl:
+    """admission="gated": what-if scores gate and rank coalesced winners;
+    the default "policy" mode trusts the policies' own gates (unchanged)."""
+
+    def _store(self, frames, dets, policy, **kw):
+        store = VideoStore(tile_cache_bytes=0, **kw)
+        fill(store, "v", frames, dets, policy=policy)
+        H, W = frames.shape[1:]
+        # "small": a 32x32 corner box (tiling pays off); "big": the whole
+        # frame (tiling only adds tile-open cost — net-negative)
+        store.add_detections("v", {f: [("small", (0, 0, 32, 32))]
+                                   for f in range(16)})
+        store.add_detections("v", {f: [("big", (0, 0, H, W))]
+                                   for f in range(16, 32)})
+        return store
+
+    def test_gated_defers_net_negative_proposals(self, small_video):
+        frames, dets = small_video
+        H, W = frames.shape[1:]
+        store = self._store(frames, dets,
+                            CyclingPolicy([uniform_layout(H, W, 2, 2)]),
+                            tuner_admission="gated")
+        store.tuner.pause()
+        for _ in range(3):
+            store.scan("v").labels("big").frames(16, 32).execute()
+        store.tuner.resume()
+        st = store.drain_tuner(timeout=60)
+        # splitting a full-frame workload saves no pixels: deferred, and
+        # the SOT keeps its layout
+        assert st.proposals == 3 and st.coalesced == 2
+        assert st.deferred == 1 and st.applied == 0
+        assert store.video("v").store.sots[1].layout.n_tiles == 1
+        assert store.video("v").store.sots[1].epoch == 0
+        store.close()
+
+    def test_policy_mode_applies_unchanged(self, small_video):
+        frames, dets = small_video
+        H, W = frames.shape[1:]
+        store = self._store(frames, dets,
+                            CyclingPolicy([uniform_layout(H, W, 2, 2)]))
+        store.scan("v").labels("big").frames(16, 32).execute()
+        st = store.drain_tuner(timeout=60)
+        # default admission stays with the policy: the proposal applies
+        assert st.applied == 1 and st.deferred == 0
+        assert store.video("v").store.sots[1].layout.n_tiles == 4
+        store.close()
+
+    def test_gated_admits_net_positive_and_ranks_mixed_batch(self,
+                                                             small_video):
+        frames, dets = small_video
+        H, W = frames.shape[1:]
+        # 3x5 grid puts the small box in its own 32x32 tile
+        store = self._store(frames, dets,
+                            CyclingPolicy([uniform_layout(H, W, 3, 5)]),
+                            tuner_admission="gated")
+        store.tuner.pause()
+        for _ in range(4):    # enough observed workload to beat the gate
+            store.scan("v").labels("small").frames(0, 16).execute()
+        store.scan("v").labels("big").frames(16, 32).execute()
+        store.tuner.resume()
+        st = store.drain_tuner(timeout=60)
+        # one winner per SOT: the small-ROI one pays off and applies, the
+        # full-frame one is deferred
+        assert st.applied == 1 and st.deferred == 1
+        sots = store.video("v").store.sots
+        assert sots[0].layout.n_tiles == 15 and sots[0].epoch == 1
+        assert sots[1].layout.n_tiles == 1 and sots[1].epoch == 0
+        store.close()
+
+    def test_unknown_admission_mode_rejected(self):
+        with pytest.raises(ValueError, match="admission"):
+            VideoStore(tuner_admission="yolo")
+
+
+# ------------------------------------------------------ proposal feedback
+class TestProposalFeedback:
+    """Policy.on_superseded/on_applied: a coalesced-away (or deferred, or
+    epoch-stale) proposal restores the policy bookkeeping its proposal
+    reset, instead of silently losing it."""
+
+    def test_hooks_restore_and_discard(self):
+        # unit semantics: on_superseded restores every stacked reset for
+        # that layout, on_applied discards them; both tolerate absent keys
+        pol = RegretPolicy()
+        lay = uniform_layout(96, 160, 2, 2)
+        k1, k2 = (0, frozenset({"car"})), (0, frozenset({"person"}))
+        pol._pending[(0, lay)] = [(k1, 1.5), (k2, 0.5)]
+        pol.on_superseded(0, lay)
+        assert pol.regret[k1] == 1.5 and pol.regret[k2] == 0.5
+        assert not pol._pending
+        pol._pending[(0, lay)] = [(k1, 2.0)]
+        pol.on_applied(0, lay)
+        assert pol.regret[k1] == 1.5 and not pol._pending  # discarded
+        pol.on_applied(0, lay)      # resolving an unknown layout: no-op
+        pol.on_superseded(1, lay)
+
+    def test_subsumed_same_layout_proposals_finalize_on_apply(self,
+                                                              small_video):
+        # re-proposals of the SAME layout within one batch are subsumed by
+        # the applied winner: their resets become legitimate (regret ends
+        # 0, exactly as inline would leave it), nothing leaks in _pending
+        frames, dets = small_video
+        pol = RegretPolicy(eta=1e-9)   # proposes on every observation
+        store = VideoStore(tile_cache_bytes=0)
+        fill(store, "v", frames, dets, policy=pol)
+        store.tuner.pause()
+        for _ in range(3):
+            store.scan("v").labels("car").frames(0, 16).execute()
+        store.tuner.resume()
+        st = store.drain_tuner(timeout=60)
+        assert st.proposals == 3 and st.coalesced == 2 and st.applied == 1
+        key = (0, frozenset({"car"}))
+        assert pol.regret.get(key, 0.0) == 0.0
+        assert not pol._pending   # every pending proposal resolved
+        store.close()
+
+    def test_inline_apply_finalizes_bookkeeping(self, small_video):
+        frames, dets = small_video
+        pol = RegretPolicy(eta=1e-9)
+        store = VideoStore(tile_cache_bytes=0, tuning="inline")
+        fill(store, "v", frames, dets, policy=pol)
+        for _ in range(3):
+            store.scan("v").labels("car").frames(0, 16).execute()
+        # synchronous applies resolve each proposal on the spot
+        assert not pol._pending
+        store.close()
+
+    def test_deferred_proposal_restores_regret(self, small_video):
+        frames, dets = small_video
+        H, W = frames.shape[1:]
+        pol = RegretPolicy(eta=1e-9)
+        store = VideoStore(tile_cache_bytes=0, tuner_admission="gated")
+        fill(store, "v", frames, dets, policy=pol)
+        store.scan("v").labels("car").frames(0, 16).execute()
+        st = store.drain_tuner(timeout=60)
+        if st.deferred:   # single-query evidence below the what-if gate
+            key = (0, frozenset({"car"}))
+            assert pol.regret.get(key, 0.0) > 0.0
+        assert not pol._pending
+        store.close()
+
+    def test_stale_epoch_proposal_superseded_hook(self, small_video):
+        frames, dets = small_video
+        H, W = frames.shape[1:]
+        proposed = uniform_layout(H, W, 2, 2)
+        sneak = uniform_layout(H, W, 3, 3)
+
+        class StaleMaker(Policy):
+            """Proposes once, then sneaks a store-level retile in during
+            the next observation so the recorded proposal goes stale."""
+            name = "stale_maker"
+            calls = 0
+            superseded: list = []
+            applied: list = []
+
+            def observe(self, q, index, store, model):
+                StaleMaker.calls += 1
+                if StaleMaker.calls == 1:
+                    return proposed
+                if StaleMaker.calls == 2:
+                    store.retile(0, sneak)   # epoch bump behind our back
+                return None
+
+            def on_superseded(self, sot_id, layout):
+                StaleMaker.superseded.append((sot_id, layout))
+
+            def on_applied(self, sot_id, layout):
+                StaleMaker.applied.append((sot_id, layout))
+
+        StaleMaker.superseded, StaleMaker.applied, StaleMaker.calls = [], [], 0
+        store = VideoStore(tile_cache_bytes=0)
+        fill(store, "v", frames, dets, policy=StaleMaker())
+        store.tuner.pause()
+        for _ in range(2):
+            store.scan("v").labels("car").frames(0, 16).execute()
+        store.tuner.resume()
+        st = store.drain_tuner(timeout=60)
+        # the proposal was never applied (a newer retile won): skipped,
+        # with the superseded hook fired so the policy can recover state
+        assert st.applied == 0 and st.skipped == 1
+        assert StaleMaker.superseded == [(0, proposed)]
+        assert StaleMaker.applied == []
+        assert store.video("v").store.sots[0].layout == sneak
+        store.close()
