@@ -4,6 +4,7 @@ queries under explicit layouts, and CSV emission (name,us_per_call,derived).
 from __future__ import annotations
 
 import functools
+import os
 import time
 
 import numpy as np
@@ -20,6 +21,29 @@ ENC = EncoderConfig(gop=16, qp=8)
 
 def emit(name: str, us_per_call: float, derived: str = "") -> None:
     print(f"{name},{us_per_call:.1f},{derived}")
+
+
+def quick_mode() -> bool:
+    """True under ``REPRO_QUICK=1`` (CI smoke / ``run.py --quick``)."""
+    return bool(int(os.environ.get("REPRO_QUICK", "0")))
+
+
+def gate(ok: bool, message: str, *, hard: bool = True) -> bool:
+    """Benchmark acceptance gate.  A failing hard gate raises (the CI smoke
+    goes red); a failing soft gate prints a warning row and keeps going.
+
+    Correctness gates (pixel counts, bit-identity) should stay hard in
+    every mode.  LATENCY gates should pass ``hard=not quick_mode()``: quick
+    mode runs single-sample timings, so CI-runner noise can fail a correct
+    build — there the measurement is reported, warned on, but not fatal.
+    Full runs keep every gate hard.  Returns ``ok`` so callers can record
+    the verdict in their report JSON."""
+    if ok:
+        return True
+    if hard:
+        raise AssertionError(message)
+    print(f"# WARNING soft-gate failed: {message}", flush=True)
+    return False
 
 
 def w6_spec(seed=0, n_frames=256, height=192, width=320) -> VideoSpec:

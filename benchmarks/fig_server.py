@@ -1,0 +1,247 @@
+"""Cross-process serving benchmark: N client PROCESSES sharing one
+``VideoStoreServer`` vs N isolated per-process stores, emitting
+``BENCH_server.json``.
+
+The claim under test is the whole point of the socket front end: TASM's
+shared physical state (tuned layouts, decoded-tile cache, scheduler
+merging) should survive the process boundary.  Two regimes run the same
+overlapping per-client scan workload:
+
+- ``isolated`` — every client process builds its OWN store (re-ingesting
+  the video) and scans it cold: the pre-server world, where external
+  clients share nothing.  Per-process setup seconds (the redundant
+  re-encode) are reported separately from scan seconds.
+- ``served``   — the same client processes connect to one server over a
+  Unix socket: scans funnel through one shared serving session, merge
+  their decodes, and warm one cache.
+
+Hard gates (CI fails if cross-client sharing regresses):
+- every served client's results are bit-identical to an in-process
+  ``execute()`` on the server's store (region keys AND pixels, via a
+  canonical digest);
+- a fresh client process repeating the workload afterwards reports zero
+  cache misses and leaves the server's ``tiles_decoded_total`` unchanged —
+  the "second client decodes 0 tiles" criterion;
+- decode-work efficiency: the N isolated stores together decode at least
+  N x the tiles the shared server decodes for the same scans
+  (deterministic counters, no timing involved).
+
+Throughput (scan-phase makespan, qps) is reported, and gated softly: it
+compares wall-clock of concurrent processes on one shared machine — the
+single server process serializes result marshalling while the N isolated
+baselines burn N cores — so it warns rather than fails (in every mode;
+CI runners are noisy).
+
+    PYTHONPATH=src:. python benchmarks/fig_server.py              # full
+    REPRO_QUICK=1 PYTHONPATH=src:. python benchmarks/fig_server.py  # smoke
+"""
+from __future__ import annotations
+
+import hashlib
+import json
+import os
+import pathlib
+import subprocess
+import sys
+import tempfile
+import time
+
+import numpy as np
+
+from benchmarks.common import ENC, corpus_video, emit, gate, quick_mode
+
+QUICK = quick_mode()
+N_FRAMES = 96 if QUICK else 192
+N_CLIENTS = 2 if QUICK else 4
+SCANS_PER_CLIENT = 4 if QUICK else 8
+WINDOW = 32
+OUT = os.environ.get("REPRO_BENCH_OUT", "BENCH_server.json")
+
+
+def workload(store):
+    """The per-client scan list — IDENTICAL for every client, so the
+    isolated regime re-decodes it N times while the served regime decodes
+    it once and shares.  Windows overlap (stride = gop) and alternate
+    labels, exercising partial tile overlap too."""
+    qs = []
+    for i in range(SCANS_PER_CLIENT):
+        label = "car" if i % 2 == 0 else "person"
+        lo = (i * ENC.gop) % (N_FRAMES - WINDOW)
+        qs.append(store.scan("cam0").labels(label).frames(lo, lo + WINDOW))
+    return qs
+
+
+def digest(results) -> str:
+    """Canonical digest over region keys + pixel bytes of a result list —
+    equality means bit-identical scans without shipping arrays around."""
+    h = hashlib.sha256()
+    for r in results:
+        for f, box, px in r.regions:
+            h.update(repr((f, tuple(box), px.shape, str(px.dtype)))
+                     .encode())
+            h.update(np.ascontiguousarray(px).tobytes())
+    return h.hexdigest()
+
+
+def build_local_store(cache: bool = True):
+    from benchmarks.common import shared_cost_model
+    from repro.core import NoTilingPolicy, VideoStore
+
+    frames, dets, _ = corpus_video("sparse", 0, N_FRAMES)
+    store = VideoStore(tile_cache_bytes=None if cache else 0)
+    store.add_video("cam0", encoder=ENC, policy=NoTilingPolicy(),
+                    cost_model=shared_cost_model())
+    store.ingest("cam0", frames)
+    store.add_detections("cam0", {f: d for f, d in enumerate(dets)})
+    return store
+
+
+# ------------------------------------------------------------- workers
+def isolated_worker(out_path: str) -> None:
+    """One pre-server client: its own store, its own decodes."""
+    t0 = time.perf_counter()
+    store = build_local_store()
+    setup_s = time.perf_counter() - t0
+    qs = workload(store)
+    t0 = time.perf_counter()
+    results = [q.execute() for q in qs]
+    scan_s = time.perf_counter() - t0
+    pathlib.Path(out_path).write_text(json.dumps(
+        {"setup_s": setup_s, "scan_s": scan_s, "digest": digest(results),
+         "tiles_decoded": store.video("cam0").store.tiles_decoded_total}))
+    store.close()
+
+
+def served_worker(sock: str, out_path: str) -> None:
+    """One client process of the shared server."""
+    from repro.core import RemoteVideoStore
+
+    with RemoteVideoStore(sock) as cli:
+        qs = workload(cli)
+        t0 = time.perf_counter()
+        results = [q.execute() for q in qs]
+        scan_s = time.perf_counter() - t0
+        pathlib.Path(out_path).write_text(json.dumps(
+            {"setup_s": 0.0, "scan_s": scan_s, "digest": digest(results),
+             "cache_misses": sum(r.stats.cache_misses for r in results),
+             "cache_hits": sum(r.stats.cache_hits for r in results)}))
+
+
+def spawn(fn_name: str, *args: str) -> subprocess.Popen:
+    env = dict(os.environ, PYTHONPATH=os.pathsep.join(sys.path))
+    prog = (f"import sys; from benchmarks.fig_server import {fn_name}; "
+            f"{fn_name}(*sys.argv[1:])")
+    return subprocess.Popen([sys.executable, "-c", prog, *args], env=env)
+
+
+def run_wave(fn_name: str, outs: list[str], *extra: str) -> list[dict]:
+    procs = [spawn(fn_name, *extra, out) for out in outs]
+    rcs = [p.wait(timeout=900) for p in procs]
+    if any(rcs):
+        raise RuntimeError(f"{fn_name} clients exited {rcs}")
+    return [json.loads(pathlib.Path(o).read_text()) for o in outs]
+
+
+def main() -> None:
+    corpus_video("sparse", 0, N_FRAMES)  # prime the cached generator
+    tmp = tempfile.mkdtemp(prefix="tasm_fig_server_")
+    n_queries = N_CLIENTS * SCANS_PER_CLIENT
+    report: dict = {"n_clients": N_CLIENTS, "n_frames": N_FRAMES,
+                    "scans_per_client": SCANS_PER_CLIENT}
+
+    # -- isolated: one store per client process ---------------------------
+    iso = run_wave("isolated_worker",
+                   [f"{tmp}/iso{i}.json" for i in range(N_CLIENTS)])
+    report["isolated"] = {
+        "scan_makespan_s": max(w["scan_s"] for w in iso),
+        "setup_s_per_client": sum(w["setup_s"] for w in iso) / N_CLIENTS,
+        "qps": n_queries / max(max(w["scan_s"] for w in iso), 1e-9)}
+    gate(len({w["digest"] for w in iso}) == 1,
+         "isolated clients disagree on scan results")
+
+    # -- served: N processes, one server, one cache -----------------------
+    from repro.core import VideoStoreServer
+
+    store = build_local_store()
+    sock = os.path.join(tmp, "tasm.sock")
+    server = VideoStoreServer(store, path=sock, owns_store=False).start()
+    try:
+        tiles_cold = store.stats()["tiles_decoded_total"]
+        served = run_wave("served_worker",
+                          [f"{tmp}/srv{i}.json" for i in range(N_CLIENTS)],
+                          sock)
+        served_tiles = store.stats()["tiles_decoded_total"] - tiles_cold
+        report["served"] = {
+            "scan_makespan_s": max(w["scan_s"] for w in served),
+            "qps": n_queries / max(max(w["scan_s"] for w in served), 1e-9),
+            "cache_misses": sum(w["cache_misses"] for w in served),
+            "cache_hits": sum(w["cache_hits"] for w in served),
+            "tiles_decoded": served_tiles}
+
+        # decode-work efficiency, the deterministic heart of the matter:
+        # N isolated stores each decode the full unique tile set; the
+        # shared server decodes it ONCE for everyone
+        iso_tiles = sum(w["tiles_decoded"] for w in iso)
+        report["isolated"]["tiles_decoded"] = iso_tiles
+        report["decode_work_ratio"] = iso_tiles / max(served_tiles, 1)
+        gate(served_tiles * N_CLIENTS <= iso_tiles,
+             f"shared server decoded {served_tiles} tiles; {N_CLIENTS} "
+             f"isolated stores decoded {iso_tiles} — cross-client sharing "
+             "is not collapsing redundant decode work")
+
+        # bit-identity: every served client == in-process execute()
+        ref = digest([q.execute() for q in workload(store)])
+        report["bit_identical"] = all(w["digest"] == ref for w in served) \
+            and len({w["digest"] for w in served}) == 1
+        gate(report["bit_identical"],
+             "served client results diverge from in-process execute()")
+
+        # cross-process cache sharing: a fresh client process repeating
+        # the (now warm) workload must decode NOTHING new
+        tiles_before = store.stats()["tiles_decoded_total"]
+        (repeat,) = run_wave("served_worker", [f"{tmp}/repeat.json"], sock)
+        tiles_after = store.stats()["tiles_decoded_total"]
+        report["repeat_client"] = {
+            "cache_misses": repeat["cache_misses"],
+            "tiles_decoded": tiles_after - tiles_before,
+            "scan_s": repeat["scan_s"],
+            "bit_identical": repeat["digest"] == ref}
+        gate(repeat["cache_misses"] == 0,
+             f"repeat client had {repeat['cache_misses']} cache misses "
+             "(cache not shared across processes)")
+        gate(tiles_after == tiles_before,
+             f"repeat client decoded {tiles_after - tiles_before} tiles")
+        gate(repeat["digest"] == ref,
+             "repeat client results diverge from in-process execute()")
+    finally:
+        server.stop()
+        store.close()
+
+    report["speedup_served"] = (report["isolated"]["scan_makespan_s"]
+                                / max(report["served"]["scan_makespan_s"],
+                                      1e-9))
+    # soft in every mode: concurrent-process wall time on a shared machine
+    gate(report["speedup_served"] >= 1.0,
+         f"served makespan {report['served']['scan_makespan_s']:.3f}s "
+         f"slower than isolated "
+         f"{report['isolated']['scan_makespan_s']:.3f}s", hard=False)
+
+    pathlib.Path(OUT).write_text(json.dumps(report, indent=1))
+    emit("server_isolated", 1e6 * report["isolated"]["scan_makespan_s"]
+         / n_queries, f"qps={report['isolated']['qps']:.1f}")
+    emit("server_served", 1e6 * report["served"]["scan_makespan_s"]
+         / n_queries,
+         f"qps={report['served']['qps']:.1f};"
+         f"misses={report['served']['cache_misses']}")
+    emit("server_repeat_client", 1e6 * report["repeat_client"]["scan_s"]
+         / SCANS_PER_CLIENT,
+         f"tiles={report['repeat_client']['tiles_decoded']}")
+    print(f"# wrote {OUT}: {N_CLIENTS} client processes, "
+          f"{report['decode_work_ratio']:.1f}x less decode work shared, "
+          f"served speedup {report['speedup_served']:.2f}x, repeat-client "
+          f"tiles {report['repeat_client']['tiles_decoded']}, "
+          f"bit_identical={report['bit_identical']}")
+
+
+if __name__ == "__main__":
+    main()

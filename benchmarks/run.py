@@ -2,10 +2,13 @@
 roofline reports.  Prints ``name,us_per_call,derived`` CSV rows.
 
     PYTHONPATH=src python -m benchmarks.run            # full (tee'd in CI)
-    REPRO_QUICK=1 PYTHONPATH=src python -m benchmarks.run  # fast smoke
+    PYTHONPATH=src python -m benchmarks.run --quick    # fast smoke (= CI)
+    REPRO_QUICK=1 PYTHONPATH=src python -m benchmarks.run  # same, via env
 """
 from __future__ import annotations
 
+import argparse
+import os
 import time
 import traceback
 
@@ -21,6 +24,7 @@ MODULES = [
     "benchmarks.fig_serving",
     "benchmarks.fig_roi",
     "benchmarks.fig_tuning",
+    "benchmarks.fig_server",
     "benchmarks.kernel_bench",
     "benchmarks.roofline_report",
 ]
@@ -29,9 +33,23 @@ MODULES = [
 def main() -> None:
     import importlib
 
+    ap = argparse.ArgumentParser(description="TASM benchmark suite")
+    ap.add_argument("--quick", action="store_true",
+                    help="smoke sizes + soft latency gates, exactly what CI "
+                         "runs (sets REPRO_QUICK=1 so local runs match CI "
+                         "without exporting env vars by hand)")
+    ap.add_argument("--only", metavar="SUBSTR", default=None,
+                    help="run only modules whose name contains SUBSTR")
+    args = ap.parse_args()
+    if args.quick:
+        # before any benchmark module is imported: they read the env at
+        # import time to size their workloads
+        os.environ["REPRO_QUICK"] = "1"
+    modules = [m for m in MODULES if args.only is None or args.only in m]
+
     t_start = time.time()
     failures = []
-    for mod_name in MODULES:
+    for mod_name in modules:
         print(f"# === {mod_name} ===", flush=True)
         t0 = time.time()
         try:

@@ -104,3 +104,25 @@ same = all(np.array_equal(p1, p2) for (_, _, p1), (_, _, p2)
                   .execute().regions, res2.regions))
 print(f"reopened {reopened.videos()} from manifest; "
       f"scan bit-identical: {same}")
+
+# 11. cross-process serving: expose the store over a socket and query it
+#     with RemoteVideoStore — same declarative surface, shared cache, and
+#     results bit-identical to in-process execute().  (In production the
+#     server runs via `scripts/tasm_serve.py --socket ...` and clients are
+#     separate processes; here both ends live in this script.)
+import os
+
+from repro.core import RemoteVideoStore, VideoStoreServer
+
+sock = os.path.join(root, "tasm.sock")
+with VideoStoreServer(reopened, path=sock, owns_store=False).start():
+    with RemoteVideoStore(sock) as remote:
+        r_remote = remote.scan("traffic").labels("car").frames(0, 64) \
+                         .execute()
+        same = all(np.array_equal(a[-1], b[-1])
+                   for a, b in zip(res2.regions, r_remote.regions))
+        print(f"\nremote scan over {remote.ping()['codec']} wire: "
+              f"{len(r_remote.regions)} regions, bit-identical: {same}, "
+              f"cache hits {r_remote.stats.cache_hits}")
+reopened.close()
+store.close()

@@ -1,0 +1,191 @@
+#!/usr/bin/env python
+"""Cross-process serving smoke: start ``tasm_serve.py`` on a Unix socket,
+run two concurrent client PROCESSES, and assert the serving contract:
+
+- both clients' results are bit-identical to an in-process ``execute()``
+  of the same scans on an identically-built local store;
+- a repeat of the workload by a fresh client process decodes ZERO tiles
+  (the tile cache is shared across the process boundary);
+- SIGTERM shuts the server down cleanly (exit code 0, socket file gone,
+  no orphaned process).
+
+Exits non-zero on any violation — this is the CI server-smoke step::
+
+    python scripts/server_smoke.py
+
+The script doubles as its own client: ``server_smoke.py --client SOCK OUT``
+connects, runs the canonical workload, and writes results to ``OUT.npz`` +
+``OUT.json`` for the parent to compare.
+"""
+from __future__ import annotations
+
+import json
+import os
+import pathlib
+import signal
+import socket
+import subprocess
+import sys
+import tempfile
+import time
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import numpy as np  # noqa: E402
+
+from repro.codec.encode import EncoderConfig  # noqa: E402
+from repro.core import (NoTilingPolicy, RemoteVideoStore,  # noqa: E402
+                        VideoStore)
+from repro.data.video_gen import generate, sparse_spec  # noqa: E402
+
+ENC = EncoderConfig(gop=16, qp=8)
+N_FRAMES, H, W = 48, 96, 160
+#: the canonical two-client workload: overlapping windows over two labels
+WORKLOAD = [("car", (0, 32)), ("person", (16, 48)), ("car", (16, 48)),
+            ("car", (0, 48))]
+
+
+def corpus():
+    return generate(sparse_spec(seed=3, n_frames=N_FRAMES, height=H,
+                                width=W))
+
+
+def run_workload(store):
+    return [store.scan("cam0").labels(label).frames(*rng).execute()
+            for label, rng in WORKLOAD]
+
+
+# --------------------------------------------------------------- client
+def client_main(sock_path: str, out: str) -> int:
+    with RemoteVideoStore(sock_path) as cli:
+        results = run_workload(cli)
+    arrays, meta = {}, []
+    for i, r in enumerate(results):
+        regs = []
+        for j, (f, box, px) in enumerate(r.regions):
+            arrays[f"px_{i}_{j}"] = px
+            regs.append([f, list(box)])
+        meta.append({"regions": regs,
+                     "cache_misses": r.stats.cache_misses,
+                     "cache_hits": r.stats.cache_hits})
+    np.savez(out + ".npz", **arrays)
+    pathlib.Path(out + ".json").write_text(json.dumps(meta))
+    return 0
+
+
+def load_client(out: str):
+    meta = json.loads(pathlib.Path(out + ".json").read_text())
+    npz = np.load(out + ".npz")
+    results = []
+    for i, m in enumerate(meta):
+        regions = [(f, tuple(box), npz[f"px_{i}_{j}"])
+                   for j, (f, box) in enumerate(m["regions"])]
+        results.append((regions, m))
+    return results
+
+
+def assert_same_regions(a, b, where: str) -> None:
+    assert len(a) == len(b), f"{where}: {len(a)} vs {len(b)} regions"
+    for ra, rb in zip(a, b):
+        assert ra[:-1] == rb[:-1], f"{where}: region keys diverge"
+        if not np.array_equal(ra[-1], rb[-1]):
+            raise AssertionError(f"{where}: pixels not bit-identical at "
+                                 f"frame {ra[0]}")
+
+
+# --------------------------------------------------------------- parent
+def wait_for_socket(path: str, proc, timeout: float = 60.0) -> None:
+    deadline = time.time() + timeout
+    while time.time() < deadline:
+        if proc.poll() is not None:
+            raise RuntimeError(f"server died early (rc={proc.returncode})")
+        if os.path.exists(path):
+            s = socket.socket(socket.AF_UNIX, socket.SOCK_STREAM)
+            try:
+                s.connect(path)
+                return
+            except OSError:
+                pass
+            finally:
+                s.close()
+        time.sleep(0.05)
+    raise RuntimeError("server socket never came up")
+
+
+def main() -> int:
+    if len(sys.argv) > 1 and sys.argv[1] == "--client":
+        return client_main(sys.argv[2], sys.argv[3])
+
+    tmp = tempfile.mkdtemp(prefix="tasm_smoke_")
+    sock_path = os.path.join(tmp, "tasm.sock")
+    here = os.path.dirname(os.path.abspath(__file__))
+    server = subprocess.Popen(
+        [sys.executable, os.path.join(here, "tasm_serve.py"),
+         "--socket", sock_path])
+    try:
+        wait_for_socket(sock_path, server)
+        frames, dets = corpus()
+
+        # seed the server's store over the wire, and build the in-process
+        # reference store identically (encode is deterministic)
+        with RemoteVideoStore(sock_path) as seed:
+            seed.add_video("cam0", encoder=ENC, policy=NoTilingPolicy())
+            seed.ingest("cam0", frames)
+            seed.add_detections("cam0", {f: d for f, d in enumerate(dets)})
+        local = VideoStore()
+        local.add_video("cam0", encoder=ENC, policy=NoTilingPolicy())
+        local.ingest("cam0", frames)
+        local.add_detections("cam0", {f: d for f, d in enumerate(dets)})
+        reference = run_workload(local)
+
+        # two concurrent client processes over one server
+        outs = [os.path.join(tmp, f"client{i}") for i in (1, 2)]
+        clients = [subprocess.Popen(
+            [sys.executable, os.path.abspath(__file__), "--client",
+             sock_path, out]) for out in outs]
+        rcs = [c.wait(timeout=300) for c in clients]
+        assert rcs == [0, 0], f"client exit codes {rcs}"
+        got = [load_client(out) for out in outs]
+        for (regions, _), ref in zip(got[0], reference):
+            assert_same_regions(ref.regions, regions, "client1 vs local")
+        for (r1, _), (r2, _) in zip(got[0], got[1]):
+            assert_same_regions(r1, r2, "client1 vs client2")
+        print(f"# two concurrent clients bit-identical to in-process "
+              f"execute ({sum(len(r) for r, _ in got[0])} regions)")
+
+        # a fresh third process repeating the workload must decode nothing
+        with RemoteVideoStore(sock_path) as probe:
+            tiles_before = probe.stats()["tiles_decoded_total"]
+        out3 = os.path.join(tmp, "client3")
+        rc = subprocess.run(
+            [sys.executable, os.path.abspath(__file__), "--client",
+             sock_path, out3], timeout=300).returncode
+        assert rc == 0, f"repeat client exit code {rc}"
+        repeat = load_client(out3)
+        misses = sum(m["cache_misses"] for _, m in repeat)
+        with RemoteVideoStore(sock_path) as probe:
+            tiles_after = probe.stats()["tiles_decoded_total"]
+        assert misses == 0, f"repeat client had {misses} cache misses"
+        assert tiles_after == tiles_before, (
+            f"repeat client decoded {tiles_after - tiles_before} tiles")
+        for (r1, _), (r3, _) in zip(got[0], repeat):
+            assert_same_regions(r1, r3, "client1 vs warm repeat")
+        print("# warm repeat from a fresh process decoded 0 tiles "
+              f"({misses} misses)")
+
+        # clean shutdown: SIGTERM -> exit 0, socket unlinked, no orphan
+        server.send_signal(signal.SIGTERM)
+        rc = server.wait(timeout=60)
+        assert rc == 0, f"server exit code {rc}"
+        assert not os.path.exists(sock_path), "socket file left behind"
+        print("# clean shutdown: exit 0, socket removed")
+        print("server_smoke,0.0,ok")
+        return 0
+    finally:
+        if server.poll() is None:
+            server.kill()
+            server.wait(timeout=30)
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

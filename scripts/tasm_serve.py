@@ -1,0 +1,87 @@
+#!/usr/bin/env python
+"""Serve a VideoStore to many client processes over a socket.
+
+    PYTHONPATH=src python scripts/tasm_serve.py --socket /tmp/tasm.sock \
+        --store-root /data/tasm
+    PYTHONPATH=src python scripts/tasm_serve.py --tcp 0.0.0.0:7841
+
+Clients connect with :class:`repro.core.RemoteVideoStore` (same declarative
+surface — ``scan(v).labels(...).frames(...).execute()``, ``execute_many``,
+``serve()`` sessions, ``ingest``/``add_detections``/``retile``/…) and share
+ONE scheduler, tile cache, and background tuner, so overlapping queries
+from different processes merge their decodes and warm each other.
+
+Prints ``TASM serving on <addr>`` once the socket is accepting (CI and
+scripts wait for that line or for the socket file).  SIGINT/SIGTERM shut
+down cleanly: stop accepting, drain in-flight scans, flush the tuner and
+manifests, exit 0.
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import signal
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro.core import VideoStore, VideoStoreServer  # noqa: E402
+from repro.core import wire  # noqa: E402
+
+
+def parse_args(argv=None) -> argparse.Namespace:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    where = ap.add_mutually_exclusive_group(required=True)
+    where.add_argument("--socket", metavar="PATH",
+                       help="unix-domain socket path to listen on")
+    where.add_argument("--tcp", metavar="HOST:PORT",
+                       help="TCP address to listen on (PORT 0 = ephemeral)")
+    ap.add_argument("--store-root", default=None,
+                    help="durable store root (omit for an in-memory store)")
+    ap.add_argument("--tile-cache-bytes", type=int, default=None,
+                    help="decoded-tile cache budget (default 256 MiB; "
+                         "0 disables)")
+    ap.add_argument("--tuning", default="background",
+                    choices=("background", "inline", "off"))
+    ap.add_argument("--max-frame-mb", type=int, default=None,
+                    help="reject wire frames larger than this many MiB "
+                         "(default 256)")
+    ap.add_argument("--codec", default=None, choices=("msgpack", "json"),
+                    help="wire codec for responses (default: msgpack when "
+                         "installed, else json)")
+    ap.add_argument("--max-batch", type=int, default=64,
+                    help="micro-batch cap of the shared serving session")
+    return ap.parse_args(argv)
+
+
+def main(argv=None) -> int:
+    args = parse_args(argv)
+    kw: dict = {}
+    if args.socket:
+        kw["path"] = args.socket
+    else:
+        host, _, port = args.tcp.rpartition(":")
+        kw["host"], kw["port"] = host or "127.0.0.1", int(port)
+    if args.max_frame_mb is not None:
+        kw["max_frame_bytes"] = args.max_frame_mb << 20
+    store = VideoStore(store_root=args.store_root,
+                       tile_cache_bytes=args.tile_cache_bytes,
+                       tuning=args.tuning)
+    server = VideoStoreServer(store, codec=args.codec,
+                              max_batch=args.max_batch, **kw)
+    server.start()
+
+    def _shutdown(signum, frame):
+        server.stop()
+
+    signal.signal(signal.SIGTERM, _shutdown)
+    signal.signal(signal.SIGINT, _shutdown)
+    print(f"TASM serving on {server.address} "
+          f"(pid {os.getpid()}, codec {args.codec or wire.default_codec()}, "
+          f"store {args.store_root or '<memory>'})", flush=True)
+    server.serve_forever()
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -8,8 +8,14 @@ an epoch-keyed tile cache (``tile_cache.py``) plus a merging scan scheduler
 (``scheduler.py``) behind ``execute``/``execute_many``/``serve``, with
 policy-driven re-tiling moved off the scan path into the background
 physical tuner (``tuner.py``; ``tuning="background"|"inline"|"off"``).
-The deprecated single-video ``TASM`` facade remains as a shim.
+Cross-process serving: ``VideoStoreServer`` (``server.py``) exposes one
+store over a Unix/TCP socket (``wire.py``) and ``RemoteVideoStore``
+(``client.py``) mirrors the declarative surface, so many client processes
+share one scheduler, tile cache, and tuner.  The deprecated single-video
+``TASM`` facade remains as a shim.
 """
+from repro.core.client import (RemoteError, RemoteScanQuery,
+                               RemoteServingSession, RemoteVideoStore)
 from repro.core.cost import (CostModel, calibrate, pixels_and_tiles,
                              query_cost, roi_pixels_and_tiles)
 from repro.core.engine import IngestStats, VideoEntry, VideoStore
@@ -34,6 +40,7 @@ from repro.core.query import (PhysicalPlan, ScanPlan, ScanQuery, ScanResult,
                               ScanStats, SOTScan)
 from repro.core.scheduler import ScanScheduler, ServingSession
 from repro.core.semantic_index import SemanticIndex
+from repro.core.server import VideoStoreServer
 from repro.core.storage import TileStore
 from repro.core.tasm import TASM
 from repro.core.tile_cache import CacheStats, TileCache

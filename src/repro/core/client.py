@@ -1,0 +1,384 @@
+"""RemoteVideoStore: the client half of the cross-process serving layer.
+
+Mirrors the :class:`~repro.core.engine.VideoStore` declarative surface over
+the ``wire.py`` protocol, so swapping an in-process store for a shared
+server is a one-line change::
+
+    store = RemoteVideoStore("/tmp/tasm.sock")          # unix socket
+    store = RemoteVideoStore(host="10.0.0.5", port=7841)  # tcp
+
+    res  = store.scan("cam0").labels("car").frames(0, 96).execute()
+    plan = store.scan("cam0").labels("car").explain()     # no decode
+    results = store.execute_many([q1, q2, q3])            # one merged batch
+    with store.serve() as session:                        # concurrent submit
+        futs = [session.submit(q) for q in queries]
+
+Every client of one server shares its scheduler, tile cache, and
+background tuner: queries from different client *processes* merge into
+union-of-tiles decodes and warm each other's cache (the server funnels all
+scan RPCs through one shared ``ServingSession``).  Results are
+bit-identical to in-process ``execute()`` — region tuples, pixel crops
+(npz round-trip preserves dtype/bits), and ScanStats all cross the wire.
+
+One socket, pipelined: requests carry ids; a reader thread resolves
+response frames to their futures, so many in-flight scans share the
+connection without head-of-line blocking on the server side (scan replies
+are written from future callbacks there).  All public methods are
+thread-safe.  Failures of the remote call re-raise locally — common
+builtin exception types (KeyError, ValueError, …) are mapped back by name,
+anything else surfaces as :class:`RemoteError`.
+"""
+from __future__ import annotations
+
+import dataclasses
+import socket
+import threading
+from concurrent.futures import Future
+from typing import Optional
+
+import numpy as np
+
+from repro.core import wire
+from repro.core.engine import IngestStats
+from repro.core.policies import Policy, policy_spec
+from repro.core.query import (PhysicalPlan, ScanPlan, ScanQuery, ScanResult)
+from repro.core.tuner import TunerStats
+
+#: server-raised exception types re-raised as themselves on the client
+_ERROR_TYPES = {e.__name__: e for e in
+                (KeyError, ValueError, TypeError, RuntimeError,
+                 IndexError, NotImplementedError)}
+
+
+class RemoteError(RuntimeError):
+    """A server-side failure with no local builtin counterpart."""
+
+
+def _raise_remote(err: dict):
+    etype, msg = err.get("type", "Error"), err.get("message", "")
+    exc = _ERROR_TYPES.get(etype)
+    if exc is KeyError:
+        # str(KeyError("x")) is "'x'" — unwrap so the message doesn't
+        # double-quote on the second raise
+        raise KeyError(msg.strip("'\""))
+    if exc is not None:
+        raise exc(msg)
+    raise RemoteError(f"{etype}: {msg}")
+
+
+class RemoteScanQuery(ScanQuery):
+    """The chainable builder, executing over the wire.  ``_clone`` keeps
+    the subclass, so forked partial queries stay remote."""
+
+    def explain(self) -> PhysicalPlan:
+        return self._engine._explain(self.plan())
+
+    def execute(self) -> ScanResult:
+        return self._engine._submit_plan(self.plan()).result()
+
+    def submit(self) -> Future:
+        """Fire-and-collect: returns a Future resolving to the
+        :class:`ScanResult` (the remote twin of session submission)."""
+        return self._engine._submit_plan(self.plan())
+
+
+class RemoteServingSession:
+    """Client-side ``serve()`` session: ``submit`` returns a Future.
+
+    There is no client-side batching to coordinate — every submission goes
+    straight onto the shared connection and the SERVER micro-batches
+    everything queued across all clients, which is exactly what makes
+    cross-process merging work.  ``close`` waits for this session's
+    outstanding futures."""
+
+    def __init__(self, store: "RemoteVideoStore"):
+        self._store = store
+        self._futs: list[Future] = []
+        self._lock = threading.Lock()
+        self._closed = False
+
+    def submit(self, query) -> Future:
+        with self._lock:
+            if self._closed:
+                raise RuntimeError("serving session is closed")
+            fut = self._store._submit_plan(self._store._as_plan(query))
+            self._futs.append(fut)
+            return fut
+
+    def execute(self, query) -> ScanResult:
+        return self.submit(query).result()
+
+    def close(self) -> None:
+        with self._lock:
+            if self._closed:
+                return
+            self._closed = True
+            futs = list(self._futs)
+        for f in futs:
+            try:
+                f.result()
+            except Exception:  # noqa: BLE001 - surfaced via the future
+                pass
+
+    def __enter__(self) -> "RemoteServingSession":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()
+
+
+class RemoteVideoStore:
+    """Connect to a :class:`~repro.core.server.VideoStoreServer`."""
+
+    def __init__(self, path: Optional[str] = None, *,
+                 host: Optional[str] = None, port: Optional[int] = None,
+                 timeout: Optional[float] = None,
+                 codec: Optional[str] = None,
+                 max_frame_bytes: int = wire.DEFAULT_MAX_FRAME_BYTES,
+                 want_plans: bool = True):
+        if (path is None) == (host is None):
+            raise ValueError("give exactly one of path= (unix socket) or "
+                             "host=/port= (tcp)")
+        if host is not None and port is None:
+            raise ValueError("host= needs port= (tcp)")
+        self.codec = codec
+        self.max_frame_bytes = int(max_frame_bytes)
+        self.want_plans = bool(want_plans)
+        if path is not None:
+            self._sock = socket.socket(socket.AF_UNIX, socket.SOCK_STREAM)
+            self._sock.settimeout(timeout)
+            self._sock.connect(path)
+        else:
+            self._sock = socket.create_connection((host, port),
+                                                  timeout=timeout)
+        # timeout= governs CONNECT only: left on the socket it would fire
+        # in the reader thread's blocking recv during any idle gap and
+        # poison the connection (the reader exits, failing everything)
+        self._sock.settimeout(None)
+        self._send_lock = threading.Lock()
+        self._pending: dict[int, Future] = {}
+        self._pending_lock = threading.Lock()
+        self._dead: Optional[BaseException] = None
+        self._next_id = 0
+        self._closed = False
+        self._reader = threading.Thread(target=self._read_loop,
+                                        name="tasm-client-reader",
+                                        daemon=True)
+        self._reader.start()
+
+    # ------------------------------------------------------------ plumbing
+    def _read_loop(self) -> None:
+        err: BaseException
+        try:
+            while True:
+                resp = wire.read_frame(self._sock,
+                                       max_bytes=self.max_frame_bytes)
+                rid = resp.get("id")
+                with self._pending_lock:
+                    fut = self._pending.pop(rid, None)
+                if fut is None:
+                    continue  # response to an abandoned request
+                if resp.get("ok"):
+                    fut.set_result(resp.get("value"))
+                else:
+                    try:
+                        _raise_remote(resp.get("error") or {})
+                    except BaseException as e:  # noqa: BLE001
+                        fut.set_exception(e)
+        except BaseException as e:  # noqa: BLE001 - fail all pending
+            err = e
+        if isinstance(err, wire.ConnectionClosed):
+            err = wire.ConnectionClosed("server closed the connection")
+        with self._pending_lock:
+            # _dead is set under the same lock that registers futures, so
+            # a request can never slip into _pending after this sweep and
+            # hang unresolved forever
+            self._dead = err
+            pending, self._pending = dict(self._pending), {}
+        for fut in pending.values():
+            fut.set_exception(err)
+
+    def _request(self, op: str, **params) -> Future:
+        fut: Future = Future()
+        fut.set_running_or_notify_cancel()
+        with self._send_lock:
+            if self._closed:
+                raise RuntimeError("remote store is closed")
+            rid = self._next_id
+            self._next_id += 1
+            with self._pending_lock:
+                if self._dead is not None:
+                    # reader thread is gone — a write might still land in
+                    # the OS buffer, but nothing will ever resolve the
+                    # future: fail fast instead
+                    raise wire.ConnectionClosed(
+                        f"connection lost: {self._dead}")
+                self._pending[rid] = fut
+            try:
+                wire.write_frame(self._sock, {"id": rid, "op": op, **params},
+                                 codec=self.codec,
+                                 max_bytes=self.max_frame_bytes)
+            except BaseException:
+                with self._pending_lock:
+                    self._pending.pop(rid, None)
+                raise
+        return fut
+
+    def _call(self, op: str, **params):
+        return self._request(op, **params).result()
+
+    def close(self) -> None:
+        with self._send_lock:
+            if self._closed:
+                return
+            self._closed = True
+        try:
+            self._sock.shutdown(socket.SHUT_RDWR)
+        except OSError:
+            pass
+        self._sock.close()
+        self._reader.join(timeout=5)
+
+    def __enter__(self) -> "RemoteVideoStore":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()
+
+    # --------------------------------------------------------------- admin
+    def ping(self) -> dict:
+        return self._call("ping")
+
+    def videos(self) -> list[str]:
+        return self._call("videos")
+
+    def __contains__(self, name: str) -> bool:
+        return name in self.videos()
+
+    def stats(self) -> dict:
+        return self._call("stats")
+
+    def shutdown_server(self) -> None:
+        """Ask the server to stop (it replies, then shuts down)."""
+        self._call("shutdown")
+
+    @staticmethod
+    def _video_kw_doc(encoder=None, policy=None, cost_model=None,
+                      sot_len=None) -> dict:
+        doc: dict = {}
+        if encoder is not None:
+            doc["encoder"] = dataclasses.asdict(encoder)
+        if policy is not None:
+            doc["policy"] = policy_spec(policy) \
+                if isinstance(policy, Policy) else policy
+        if cost_model is not None:
+            doc["cost_model"] = {
+                "beta": cost_model.beta, "gamma": cost_model.gamma,
+                "r_squared": cost_model.r_squared,
+                "encode_per_pixel": cost_model.encode_per_pixel,
+                "encode_per_tile": cost_model.encode_per_tile}
+        if sot_len is not None:
+            doc["sot_len"] = int(sot_len)
+        return doc
+
+    def add_video(self, name: str, *, encoder=None, policy=None,
+                  cost_model=None, sot_len=None) -> None:
+        self._call("add_video", name=name,
+                   **self._video_kw_doc(encoder, policy, cost_model,
+                                        sot_len))
+
+    def ingest(self, name: str, frames: np.ndarray, *, detections=None,
+               initial_layouts=None, **video_kw) -> IngestStats:
+        doc = self._call(
+            "ingest", name=name, frames=np.ascontiguousarray(frames),
+            detections=None if detections is None
+            else [[[label, list(bbox)] for label, bbox in frame_dets]
+                  for frame_dets in detections],
+            initial_layouts=None if initial_layouts is None
+            else [[int(s), list(lay.heights), list(lay.widths)]
+                  for s, lay in initial_layouts.items()],
+            **self._video_kw_doc(**video_kw))
+        return IngestStats(**doc)
+
+    def add_detections(self, video: str, detections_by_frame: dict) -> None:
+        self._call("add_detections", video=video,
+                   pairs=[[int(f), [[label, list(bbox)]
+                                    for label, bbox in dets]]
+                          for f, dets in
+                          sorted(detections_by_frame.items())])
+
+    def add_metadata(self, video: str, frame: int, label: str,
+                     x1: int, y1: int, x2: int, y2: int) -> None:
+        self._call("add_metadata", video=video, frame=int(frame),
+                   label=label, x1=int(x1), y1=int(y1), x2=int(x2),
+                   y2=int(y2))
+
+    # ---------------------------------------------------------------- scan
+    def scan(self, videos, labels=None,
+             frames: Optional[tuple[int, int]] = None) -> RemoteScanQuery:
+        q = RemoteScanQuery(self, videos)
+        if labels is not None:
+            q = q.labels(labels)
+        if frames is not None:
+            q = q.frames(*frames)
+        return q
+
+    @staticmethod
+    def _as_plan(query) -> ScanPlan:
+        if isinstance(query, ScanQuery):
+            return query.plan()
+        if isinstance(query, ScanPlan):
+            return query
+        raise TypeError(f"cannot execute {type(query).__name__} remotely; "
+                        "want ScanQuery or ScanPlan")
+
+    def _submit_plan(self, plan: ScanPlan) -> Future:
+        raw = self._request("scan", plan=plan.to_doc(),
+                            want_plan=self.want_plans)
+        fut: Future = Future()
+        fut.set_running_or_notify_cancel()
+        raw.add_done_callback(lambda f: _chain_result(
+            f, fut, ScanResult.from_doc))
+        return fut
+
+    def execute(self, query) -> ScanResult:
+        """Execute one scan (accepts a ScanQuery or logical ScanPlan)."""
+        return self._submit_plan(self._as_plan(query)).result()
+
+    def execute_many(self, queries) -> list[ScanResult]:
+        """One merged batch on the server (union-of-tiles decode across the
+        batch), results in submission order — the remote twin of
+        ``VideoStore.execute_many``."""
+        docs = self._call(
+            "execute_many",
+            plans=[self._as_plan(q).to_doc() for q in queries],
+            want_plan=self.want_plans)
+        return [ScanResult.from_doc(d) for d in docs]
+
+    def _explain(self, plan: ScanPlan) -> PhysicalPlan:
+        return PhysicalPlan.from_doc(self._call("explain",
+                                                plan=plan.to_doc()))
+
+    def serve(self) -> RemoteServingSession:
+        """Open a concurrent-submission session (server-side
+        micro-batching merges across every client's in-flight scans)."""
+        return RemoteServingSession(self)
+
+    # -------------------------------------------------------------- tuning
+    def retile(self, video: str, sot_id: int, new_layout) -> float:
+        return self._call("retile", video=video, sot_id=int(sot_id),
+                          heights=list(new_layout.heights),
+                          widths=list(new_layout.widths))
+
+    def drain_tuner(self, timeout: Optional[float] = None) -> TunerStats:
+        return TunerStats(**self._call("drain_tuner", timeout=timeout))
+
+    def tuner_stats(self) -> TunerStats:
+        return TunerStats(**self._call("tuner_stats"))
+
+
+def _chain_result(src: Future, dst: Future, decode) -> None:
+    try:
+        dst.set_result(decode(src.result()))
+    except BaseException as e:  # noqa: BLE001 - surfaced via the future
+        dst.set_exception(e)

@@ -562,6 +562,32 @@ class VideoStore:
         return float(sum(e.store.storage_bytes()
                          for e in self._videos.values()))
 
+    def stats(self) -> dict:
+        """JSON-able engine-wide accounting snapshot: catalog membership,
+        per-video decode/storage counters, and tile-cache stats.  This is
+        the ``stats`` RPC of the socket front end (``core/server.py``), and
+        what benchmarks use to assert cross-client cache sharing (a warm
+        repeat leaves ``tiles_decoded_total`` unchanged)."""
+        with self.scheduler.lock:
+            per_video = {
+                name: {"n_sots": len(e.store.sots),
+                       "labels": sorted(e.index.labels(name)),
+                       "tiles_decoded_total": e.store.tiles_decoded_total,
+                       "pixels_decoded_total": e.store.pixels_decoded_total,
+                       "storage_bytes": e.store.storage_bytes(),
+                       "queries": len(e.history)}
+                for name, e in self._videos.items()}
+            return {"videos": self.videos(),
+                    "queries": len(self.history),
+                    "storage_bytes": self.storage_bytes(),
+                    "tiles_decoded_total": sum(
+                        v["tiles_decoded_total"] for v in per_video.values()),
+                    "pixels_decoded_total": sum(
+                        v["pixels_decoded_total"]
+                        for v in per_video.values()),
+                    "per_video": per_video,
+                    "cache": dataclasses.asdict(self.tile_cache.stats())}
+
     # ------------------------------------------------------------- manifest
     def save(self, *, full: bool = False) -> None:
         """Persist durable state when backed by disk: the shards of dirty

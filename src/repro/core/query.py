@@ -25,6 +25,7 @@ repeat tiles from the epoch-keyed tile cache (``tile_cache.py``); see
 """
 from __future__ import annotations
 
+import dataclasses
 from dataclasses import dataclass, field
 from typing import Optional
 
@@ -94,6 +95,15 @@ class ScanStats:
     def total_s(self) -> float:
         return self.lookup_s + self.decode_s + self.retile_s + self.detect_s
 
+    # -- wire ---------------------------------------------------------------
+    def to_doc(self) -> dict:
+        """JSON-able field dict (wire layer; properties recompute)."""
+        return dataclasses.asdict(self)
+
+    @classmethod
+    def from_doc(cls, doc: dict) -> "ScanStats":
+        return cls(**doc)
+
 
 @dataclass
 class ScanResult:
@@ -101,6 +111,43 @@ class ScanResult:
     stats: ScanStats
     plan: Optional["PhysicalPlan"] = None
     regions_by_video: dict = field(default_factory=dict)
+
+    # -- wire ---------------------------------------------------------------
+    def to_doc(self, include_plan: bool = True) -> dict:
+        """Wire doc: JSON-able except the region pixel arrays, which stay
+        ``np.ndarray`` for the wire layer to pack into the frame's npz
+        payload.  Only ``regions_by_video`` is serialized — the flat
+        ``regions`` list shares its arrays and is rebuilt on the far side
+        from the plan's video order, so each crop ships once.
+        ``include_plan=False`` (clients with ``want_plans=False``) skips
+        the O(regions) plan-doc marshalling entirely — it runs on the
+        server's shared dispatcher thread."""
+        videos = list(self.plan.logical.videos) if self.plan is not None \
+            else sorted(self.regions_by_video)
+        return {
+            "videos": videos,
+            "stats": self.stats.to_doc(),
+            "plan": self.plan.to_doc()
+            if include_plan and self.plan is not None else None,
+            "rbv": {v: [[f, list(b), px] for f, b, px in rs]
+                    for v, rs in self.regions_by_video.items()},
+        }
+
+    @classmethod
+    def from_doc(cls, doc: dict) -> "ScanResult":
+        rbv = {v: [(int(f), tuple(b), px) for f, b, px in rs]
+               for v, rs in doc["rbv"].items()}
+        videos = list(doc["videos"])
+        if len(videos) == 1:
+            regions = list(rbv.get(videos[0], []))
+        else:  # multi-video flat list prepends the video (scheduler order)
+            regions = [(v, f, b, px) for v in videos
+                       for f, b, px in rbv.get(v, [])]
+        return cls(regions=regions,
+                   stats=ScanStats.from_doc(doc["stats"]),
+                   plan=PhysicalPlan.from_doc(doc["plan"])
+                   if doc.get("plan") is not None else None,
+                   regions_by_video=rbv)
 
 
 # ------------------------------------------------------------- logical plan
@@ -124,6 +171,22 @@ class ScanPlan:
             if self.frame_range else ""
         lim = f" LIMIT {self.limit}" if self.limit is not None else ""
         return f"SCAN {','.join(self.videos)} WHERE {pred}{rng}{lim}"
+
+    # -- wire ---------------------------------------------------------------
+    def to_doc(self) -> dict:
+        return {"videos": list(self.videos),
+                "cnf": [list(c) for c in self.cnf],
+                "frame_range": list(self.frame_range)
+                if self.frame_range else None,
+                "limit": self.limit, "decode": self.decode}
+
+    @classmethod
+    def from_doc(cls, doc: dict) -> "ScanPlan":
+        rng = doc.get("frame_range")
+        return cls(videos=tuple(doc["videos"]),
+                   cnf=tuple(tuple(c) for c in doc["cnf"]),
+                   frame_range=(int(rng[0]), int(rng[1])) if rng else None,
+                   limit=doc.get("limit"), decode=bool(doc.get("decode", True)))
 
 
 # ------------------------------------------------------------ physical plan
@@ -150,6 +213,43 @@ class SOTScan:
     est_tiles: float = 0.0
     est_cost_s: float = 0.0
     blocks_by_tile: dict = field(default_factory=dict)
+
+    # -- wire ---------------------------------------------------------------
+    def to_doc(self) -> dict:
+        """JSON-able doc.  Int-keyed dicts become ``[key, value]`` pair
+        lists (JSON objects cannot key on ints) and block masks keep the
+        ``None`` = every-block convention."""
+        return {
+            "video": self.video, "sot_id": self.sot_id, "epoch": self.epoch,
+            "tile_idxs": list(self.tile_idxs), "n_frames": self.n_frames,
+            "boxes_by_frame": [[f, [list(b) for b in boxes]]
+                               for f, boxes in
+                               sorted(self.boxes_by_frame.items())],
+            "query_range": list(self.query_range),
+            "labels": list(self.labels),
+            "est_pixels": self.est_pixels, "est_tiles": self.est_tiles,
+            "est_cost_s": self.est_cost_s,
+            "blocks_by_tile": [[t, None if m is None else list(m)]
+                               for t, m in
+                               sorted(self.blocks_by_tile.items())],
+        }
+
+    @classmethod
+    def from_doc(cls, doc: dict) -> "SOTScan":
+        return cls(
+            video=doc["video"], sot_id=int(doc["sot_id"]),
+            epoch=int(doc["epoch"]),
+            tile_idxs=tuple(int(t) for t in doc["tile_idxs"]),
+            n_frames=int(doc["n_frames"]),
+            boxes_by_frame={int(f): [tuple(int(c) for c in b) for b in boxes]
+                            for f, boxes in doc["boxes_by_frame"]},
+            query_range=tuple(int(v) for v in doc["query_range"]),
+            labels=tuple(doc["labels"]),
+            est_pixels=doc["est_pixels"], est_tiles=doc["est_tiles"],
+            est_cost_s=doc["est_cost_s"],
+            blocks_by_tile={int(t): None if m is None
+                            else tuple(int(b) for b in m)
+                            for t, m in doc["blocks_by_tile"]})
 
 
 @dataclass
@@ -199,6 +299,17 @@ class PhysicalPlan:
     def __str__(self) -> str:  # pragma: no cover - convenience
         return self.describe()
 
+    # -- wire ---------------------------------------------------------------
+    def to_doc(self) -> dict:
+        return {"logical": self.logical.to_doc(), "lookup_s": self.lookup_s,
+                "sot_scans": [s.to_doc() for s in self.sot_scans]}
+
+    @classmethod
+    def from_doc(cls, doc: dict) -> "PhysicalPlan":
+        return cls(logical=ScanPlan.from_doc(doc["logical"]),
+                   sot_scans=[SOTScan.from_doc(s) for s in doc["sot_scans"]],
+                   lookup_s=doc.get("lookup_s", 0.0))
+
 
 # ------------------------------------------------------------------ builder
 class ScanQuery:
@@ -222,7 +333,8 @@ class ScanQuery:
 
     # -- chain ---------------------------------------------------------------
     def _clone(self) -> "ScanQuery":
-        q = ScanQuery(self._engine, self._videos)
+        # type(self): a RemoteScanQuery (client.py) forks into its own kind
+        q = type(self)(self._engine, self._videos)
         q._cnf, q._range = self._cnf, self._range
         q._limit, q._decode = self._limit, self._decode
         return q
@@ -272,3 +384,25 @@ class ScanQuery:
 
     def execute(self) -> ScanResult:
         return self._engine.execute(self._engine.lower(self.plan()))
+
+    # -- wire ---------------------------------------------------------------
+    def to_doc(self) -> dict:
+        """Builder state as a JSON-able doc (``cnf`` may still be unset —
+        unlike :meth:`plan` this never raises, so partial queries ship)."""
+        return {"videos": list(self._videos),
+                "cnf": None if self._cnf is None
+                else [list(c) for c in self._cnf],
+                "frame_range": list(self._range) if self._range else None,
+                "limit": self._limit, "decode": self._decode}
+
+    @classmethod
+    def from_doc(cls, engine, doc: dict) -> "ScanQuery":
+        q = cls(engine, tuple(doc["videos"]))
+        cnf = doc.get("cnf")
+        q._cnf = None if cnf is None else tuple(tuple(c) for c in cnf)
+        rng = doc.get("frame_range")
+        q._range = (int(rng[0]), int(rng[1])) if rng else None
+        lim = doc.get("limit")
+        q._limit = None if lim is None else int(lim)
+        q._decode = bool(doc.get("decode", True))
+        return q

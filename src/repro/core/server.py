@@ -1,0 +1,443 @@
+"""VideoStoreServer: the cross-process serving front end.
+
+TASM's wins live in shared physical state — one tuned tile layout, one
+decoded-tile cache, one background tuner.  Before this module only threads
+inside a single Python process could share them; every external client
+re-decoded and re-tuned from cold.  ``VideoStoreServer`` draws the same
+system boundary VSS puts between its storage server and analytics clients:
+it owns ONE :class:`~repro.core.engine.VideoStore` and accepts concurrent
+client connections over a Unix-domain or TCP socket speaking the
+length-prefixed frames of ``wire.py``.
+
+Cross-client merging: every scan RPC — from any connection — is submitted
+to one shared :class:`~repro.core.scheduler.ServingSession`, whose
+dispatcher micro-batches whatever is queued into a single ``execute_many``
+call.  Scans from different client *processes* hitting the same
+``(video, sot_id, epoch)`` therefore merge into one union-of-tiles decode
+and share tile-cache entries, exactly like threads of one process: the
+second client's repeat of a scan the first client already ran decodes zero
+tiles.  The scheduler's serial-equivalence invariant makes every remote
+result bit-identical to an in-process ``execute()`` of the same plan.
+
+Protocol: request frames are ``{"id": n, "op": name, ...params}``;
+responses ``{"id": n, "ok": True, "value": ...}`` or ``{"id": n, "ok":
+False, "error": {"type", "message"}}``.  Ids multiplex one connection —
+scan responses are written from future callbacks, so a client can pipeline
+requests and a slow decode never blocks its neighbour's ping.  A malformed
+or oversized frame gets an error frame (id ``None``) and closes only that
+connection; the server — and every other client — keeps running.
+
+Durable mutations (``ingest``/``add_detections``/``retile``/…) run inline
+on the connection thread through the engine's own locking, so they
+serialize against scans the same way in-process callers do.
+"""
+from __future__ import annotations
+
+import dataclasses
+import os
+import pathlib
+import queue
+import socket
+import threading
+from typing import Optional
+
+from repro.codec.encode import EncoderConfig
+from repro.core import wire
+from repro.core.cost import CostModel
+from repro.core.engine import VideoStore
+from repro.core.layout import TileLayout
+from repro.core.policies import policy_from_spec
+from repro.core.query import ScanPlan
+
+
+def _cost_model_from_doc(doc: Optional[dict]) -> Optional[CostModel]:
+    if doc is None:
+        return None
+    cm = CostModel(beta=doc["beta"], gamma=doc["gamma"],
+                   r_squared=doc.get("r_squared", 0.0))
+    if doc.get("encode_per_pixel") is not None:
+        cm.encode_per_pixel = doc["encode_per_pixel"]
+    if doc.get("encode_per_tile") is not None:
+        cm.encode_per_tile = doc["encode_per_tile"]
+    return cm
+
+
+def _video_kw_from_doc(doc: dict) -> dict:
+    """Decode the add_video/ingest per-video kwargs (encoder dict, policy
+    spec, cost-model params, sot_len) into engine objects."""
+    kw = {}
+    if doc.get("encoder") is not None:
+        kw["encoder"] = EncoderConfig(**doc["encoder"])
+    if doc.get("policy") is not None:
+        kw["policy"] = policy_from_spec(doc["policy"])
+    if doc.get("cost_model") is not None:
+        kw["cost_model"] = _cost_model_from_doc(doc["cost_model"])
+    if doc.get("sot_len") is not None:
+        kw["sot_len"] = int(doc["sot_len"])
+    return kw
+
+
+def _detections_from_doc(pairs) -> dict:
+    return {int(f): [(label, tuple(int(c) for c in bbox))
+                     for label, bbox in dets]
+            for f, dets in pairs}
+
+
+class VideoStoreServer:
+    """Serve one :class:`VideoStore` to many client processes.
+
+    Exactly one of ``path`` (Unix-domain socket) or ``host`` (TCP; pass
+    ``port=0`` for an ephemeral port, read it back from :attr:`address`)
+    must be given.  Use as a context manager, or ``start()`` /
+    ``stop()`` explicitly; :meth:`serve_forever` blocks until
+    :meth:`stop` (e.g. from a signal handler) is called.
+
+    ``owns_store=True`` (default) closes the store on ``stop()``.
+    """
+
+    def __init__(self, store: VideoStore, *,
+                 path: Optional[str] = None,
+                 host: Optional[str] = None, port: int = 0,
+                 max_frame_bytes: int = wire.DEFAULT_MAX_FRAME_BYTES,
+                 codec: Optional[str] = None,
+                 max_batch: int = 64,
+                 owns_store: bool = True):
+        if (path is None) == (host is None):
+            raise ValueError("give exactly one of path= (unix socket) or "
+                             "host= (tcp)")
+        self.store = store
+        self.path = path
+        self.host, self.port = host, port
+        self.max_frame_bytes = int(max_frame_bytes)
+        self.codec = codec  # None = wire.default_codec()
+        self.max_batch = max_batch
+        self.owns_store = owns_store
+        self._listener: Optional[socket.socket] = None
+        self._session = None
+        self._accept_thread: Optional[threading.Thread] = None
+        self._conns: set[socket.socket] = set()
+        self._conn_lock = threading.Lock()
+        self._stopped = threading.Event()
+        self._cleanup_done = threading.Event()
+        self._stop_lock = threading.Lock()
+        self._stopper: Optional[threading.Thread] = None
+        self._started = False
+
+    # ---------------------------------------------------------- lifecycle
+    @property
+    def address(self):
+        """Bound address: the socket path, or ``(host, port)`` for TCP."""
+        if self.path is not None:
+            return self.path
+        assert self._listener is not None, "server not started"
+        return self._listener.getsockname()[:2]
+
+    def start(self) -> "VideoStoreServer":
+        if self._started:
+            raise RuntimeError("server already started")
+        self._started = True
+        if self.path is not None:
+            p = pathlib.Path(self.path)
+            if p.exists() and p.is_socket():
+                # recover a STALE socket (unclean previous shutdown) but
+                # refuse to hijack a live server's address: probe first
+                probe = socket.socket(socket.AF_UNIX, socket.SOCK_STREAM)
+                probe.settimeout(1.0)
+                try:
+                    probe.connect(self.path)
+                except OSError:
+                    p.unlink()  # nobody answering: genuinely stale
+                else:
+                    raise OSError(
+                        f"{self.path} is in use by a live server")
+                finally:
+                    probe.close()
+            sock = socket.socket(socket.AF_UNIX, socket.SOCK_STREAM)
+            sock.bind(self.path)
+        else:
+            sock = socket.socket(socket.AF_INET, socket.SOCK_STREAM)
+            sock.setsockopt(socket.SOL_SOCKET, socket.SO_REUSEADDR, 1)
+            sock.bind((self.host, self.port))
+        sock.listen(64)
+        self._listener = sock
+        self._session = self.store.serve(max_batch=self.max_batch)
+        self._accept_thread = threading.Thread(
+            target=self._accept_loop, name="tasm-server-accept", daemon=True)
+        self._accept_thread.start()
+        return self
+
+    def serve_forever(self) -> None:
+        """Block until :meth:`stop` has COMPLETED (not merely started):
+        the shutdown RPC runs ``stop`` on a daemon thread, so returning on
+        the stop *signal* would let the interpreter exit mid-cleanup —
+        before the session drained, the store flushed, and the socket file
+        was unlinked."""
+        self._stopped.wait()
+        self._cleanup_done.wait()
+
+    def stop(self) -> None:
+        """Stop accepting, close every connection, drain the shared serving
+        session, and (when ``owns_store``) close the store.  Idempotent;
+        concurrent callers block until the first caller's cleanup is
+        done."""
+        with self._stop_lock:
+            already = self._stopped.is_set()
+            if not already:
+                self._stopped.set()
+                self._stopper = threading.current_thread()
+        if already:
+            if self._stopper is threading.current_thread():
+                # re-entrant: a second SIGTERM/SIGINT interrupted the
+                # first handler's cleanup on this very thread — waiting
+                # here would deadlock (only the interrupted outer frame
+                # can finish the cleanup)
+                return
+            self._cleanup_done.wait()
+            return
+        if self._listener is not None:
+            # closing a listener does NOT wake a thread blocked in
+            # accept(); poke it with a throwaway connection so the accept
+            # loop observes _stopped and exits promptly
+            try:
+                if self.path is not None:
+                    poke = socket.socket(socket.AF_UNIX, socket.SOCK_STREAM)
+                    poke.settimeout(1.0)
+                    poke.connect(self.path)
+                else:
+                    poke = socket.create_connection(
+                        self._listener.getsockname()[:2], timeout=1.0)
+                poke.close()
+            except OSError:
+                pass
+            try:
+                self._listener.close()
+            except OSError:  # pragma: no cover - already closed
+                pass
+        if self._accept_thread is not None:
+            self._accept_thread.join(timeout=5)
+        with self._conn_lock:
+            conns = list(self._conns)
+        for c in conns:
+            try:
+                c.shutdown(socket.SHUT_RDWR)
+            except OSError:
+                pass
+            try:
+                c.close()
+            except OSError:  # pragma: no cover - already closed
+                pass
+        if self._session is not None:
+            self._session.close()
+        # only unlink a socket WE bound: a failed start() (e.g. the path
+        # belongs to a live server) must not tear down someone else's
+        if self.path is not None and self._listener is not None:
+            try:
+                pathlib.Path(self.path).unlink()
+            except OSError:
+                pass
+        if self.owns_store:
+            self.store.close()
+        self._cleanup_done.set()
+
+    def __enter__(self) -> "VideoStoreServer":
+        return self.start() if not self._started else self
+
+    def __exit__(self, *exc) -> None:
+        self.stop()
+
+    # -------------------------------------------------------- connections
+    def _accept_loop(self) -> None:
+        assert self._listener is not None
+        while not self._stopped.is_set():
+            try:
+                conn, _ = self._listener.accept()
+            except OSError:  # listener closed by stop()
+                return
+            with self._conn_lock:
+                self._conns.add(conn)
+            threading.Thread(target=self._serve_conn, args=(conn,),
+                             name="tasm-server-conn", daemon=True).start()
+
+    def _serve_conn(self, conn: socket.socket) -> None:
+        # responses go through a bounded per-connection queue drained by a
+        # writer thread: scan replies are sent from the shared serving
+        # session's dispatcher thread, and a blocking sendall to ONE
+        # stalled client there would wedge every other client's scans.  A
+        # full queue means the client stopped reading — drop it.
+        outq: queue.Queue = queue.Queue(maxsize=256)
+        writer = threading.Thread(target=self._write_loop,
+                                  args=(conn, outq),
+                                  name="tasm-server-write", daemon=True)
+        writer.start()
+        try:
+            while not self._stopped.is_set():
+                try:
+                    req = wire.read_frame(conn,
+                                          max_bytes=self.max_frame_bytes)
+                except wire.ConnectionClosed:
+                    return
+                except wire.WireError as e:
+                    # reply with an error frame instead of dying; the
+                    # stream may be mid-garbage, so close THIS connection
+                    self._send(conn, outq, wire.error_doc(None, e))
+                    return
+                self._dispatch(conn, outq, req)
+        except OSError:
+            return  # connection torn down under us (client gone / stop())
+        finally:
+            outq.put(None)  # writer drains what's queued, then exits
+            with self._conn_lock:
+                self._conns.discard(conn)
+
+    def _write_loop(self, conn: socket.socket, outq: queue.Queue) -> None:
+        """Single writer per connection; only this thread (and only this
+        connection) blocks when the peer stops reading."""
+        broken = False
+        while True:
+            payload = outq.get()
+            if payload is None:
+                break
+            if isinstance(payload, threading.Event):
+                payload.set()  # flush marker: everything before it went out
+                continue
+            if broken:
+                continue  # discard until the sentinel
+            try:
+                conn.sendall(wire._HEADER.pack(len(payload)) + payload)
+            except OSError:
+                broken = True
+        try:
+            conn.close()
+        except OSError:
+            pass
+
+    def _send(self, conn: socket.socket, outq: queue.Queue,
+              doc: dict) -> None:
+        try:
+            payload = wire.dumps(doc, codec=self.codec,
+                                 max_bytes=self.max_frame_bytes)
+        except wire.WireError as e:
+            # the RESPONSE broke the frame limit (e.g. a scan returned more
+            # region bytes than max_frame_bytes): tell the client instead
+            # of silently dropping the connection
+            payload = wire.dumps(wire.error_doc(doc.get("id"), e),
+                                 codec=self.codec,
+                                 max_bytes=self.max_frame_bytes)
+        try:
+            outq.put_nowait(payload)
+        except queue.Full:
+            # slow consumer: hundreds of unread responses queued — cut it
+            # loose rather than buffer unboundedly (its writer thread may
+            # be stuck in sendall; shutdown() unsticks that too)
+            try:
+                conn.shutdown(socket.SHUT_RDWR)
+            except OSError:
+                pass
+            try:
+                conn.close()
+            except OSError:
+                pass
+
+    # ----------------------------------------------------------- dispatch
+    def _dispatch(self, conn, outq, req) -> None:
+        rid = req.get("id") if isinstance(req, dict) else None
+        try:
+            if not isinstance(req, dict) or "op" not in req:
+                raise ValueError("request frame has no 'op'")
+            op = req["op"]
+            if op == "scan":
+                # async: the response is written from the future callback,
+                # so this connection can pipeline more requests meanwhile
+                fut = self._session.submit(ScanPlan.from_doc(req["plan"]))
+                want_plan = bool(req.get("want_plan", True))
+
+                def _done(f, rid=rid):
+                    try:
+                        doc = self._result_doc(f.result(), want_plan)
+                        resp = wire.result_doc(rid, doc)
+                    except BaseException as e:  # noqa: BLE001 - to client
+                        resp = wire.error_doc(rid, e)
+                    self._send(conn, outq, resp)
+
+                fut.add_done_callback(_done)
+                return
+            value = self._handle(op, req)
+        except BaseException as e:  # noqa: BLE001 - mapped to error frame
+            self._send(conn, outq, wire.error_doc(rid, e))
+            return
+        self._send(conn, outq, wire.result_doc(rid, value))
+        if req.get("op") == "shutdown":
+            # stop from a helper thread (stop() tears down connection
+            # machinery this thread is part of) — but only after the
+            # writer has flushed the queued reply, else stop()'s
+            # connection close races the send and the client sees EOF
+            # instead of its acknowledgement
+            flushed = threading.Event()
+            outq.put(flushed)
+
+            def _stop_after_flush():
+                flushed.wait(timeout=10)  # a non-reading client can't
+                self.stop()               # hold shutdown hostage
+
+            threading.Thread(target=_stop_after_flush,
+                             daemon=True).start()
+
+    def _result_doc(self, res, want_plan: bool) -> dict:
+        return res.to_doc(include_plan=want_plan)
+
+    # ------------------------------------------------------------- ops
+    def _handle(self, op: str, req: dict):
+        store = self.store
+        if op == "ping":
+            return {"pong": True, "pid": os.getpid(),
+                    "codec": self.codec or wire.default_codec()}
+        if op == "videos":
+            return store.videos()
+        if op == "add_video":
+            store.add_video(req["name"], **_video_kw_from_doc(req))
+            return True
+        if op == "ingest":
+            dets = req.get("detections")
+            layouts = req.get("initial_layouts")
+            stats = store.ingest(
+                req["name"], req["frames"],
+                detections=None if dets is None
+                else [[(label, tuple(int(c) for c in bbox))
+                       for label, bbox in frame_dets]
+                      for frame_dets in dets],
+                initial_layouts=None if layouts is None
+                else {int(s): TileLayout(tuple(h), tuple(w))
+                      for s, h, w in layouts},
+                **_video_kw_from_doc(req))
+            return dataclasses.asdict(stats)
+        if op == "add_detections":
+            store.add_detections(req["video"],
+                                 _detections_from_doc(req["pairs"]))
+            return True
+        if op == "add_metadata":
+            store.add_metadata(req["video"], int(req["frame"]),
+                               req["label"], int(req["x1"]), int(req["y1"]),
+                               int(req["x2"]), int(req["y2"]))
+            return True
+        if op == "execute_many":
+            # one submission wave through the shared session: same
+            # micro-batch, results strictly in submission order
+            futs = [self._session.submit(ScanPlan.from_doc(p))
+                    for p in req["plans"]]
+            want_plan = bool(req.get("want_plan", True))
+            return [self._result_doc(f.result(), want_plan) for f in futs]
+        if op == "explain":
+            return store.lower(ScanPlan.from_doc(req["plan"])).to_doc()
+        if op == "retile":
+            layout = TileLayout(tuple(int(h) for h in req["heights"]),
+                                tuple(int(w) for w in req["widths"]))
+            return store.retile(req["video"], int(req["sot_id"]), layout)
+        if op == "drain_tuner":
+            return dataclasses.asdict(store.drain_tuner(req.get("timeout")))
+        if op == "tuner_stats":
+            return dataclasses.asdict(store.tuner_stats())
+        if op == "stats":
+            return store.stats()
+        if op == "shutdown":
+            return True  # the dispatcher stops the server after replying
+        raise ValueError(f"unknown op {op!r}")
