@@ -2,7 +2,7 @@
 measurements; we re-fit on our codec as the paper prescribes)."""
 from __future__ import annotations
 
-from benchmarks.common import emit, shared_cost_model
+from benchmarks.common import emit, gate, quick_mode, shared_cost_model
 
 
 def run():
@@ -12,6 +12,19 @@ def run():
     emit("cost_model/r_squared", 0.0, f"{m.r_squared:.4f}")
     emit("cost_model/encode_s_per_pixel", m.encode_per_pixel * 1e6,
          f"{m.encode_per_pixel:.3e}")
+    emit("cost_model/io_s_per_pixel", m.io_per_pixel * 1e6,
+         f"{m.io_per_pixel:.3e}")
+    emit("cost_model/io_r_squared", 0.0, f"{m.io_r_squared:.4f}")
+    # The two-term fit quality is the paper's headline (R^2 = 0.996 on
+    # NVDEC); the io-term fit covers block-masked decodes whose residual
+    # the two-term model misattributes.  Timing-derived, so soft in quick
+    # (CI) mode like every other latency gate.
+    gate(m.r_squared > 0.9,
+         f"beta/gamma fit R^2 {m.r_squared:.4f} <= 0.9",
+         hard=not quick_mode())
+    gate(m.io_r_squared > 0.5,
+         f"io-term fit R^2 {m.io_r_squared:.4f} <= 0.5",
+         hard=not quick_mode())
     return m
 
 

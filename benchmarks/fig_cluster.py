@@ -1,0 +1,199 @@
+"""Distributed VideoStore benchmark: a 3-node cluster behind
+``ClusterRouter`` vs one in-process store, emitting ``BENCH_cluster.json``.
+
+The claim under test is the router tier's contract: consistent-hash
+placement spreads a video corpus evenly across nodes, fan-out batch
+execution returns results BIT-IDENTICAL to a single store, and
+primary-first routing keeps each video's repeat scans on one warm tile
+cache.  One corpus of ``N_VIDEOS`` videos is ingested twice — into a
+single reference ``VideoStore`` and through the router into 3 socket
+nodes with K=2 replication — then the same ``execute_many`` batch runs
+against both.
+
+Hard gates (CI fails if the distributed tier diverges):
+- the cluster batch is bit-identical to the single store's (region keys
+  AND pixels, canonical digest), and so is a warm repeat;
+- placement balance: with ``#videos >= 4 x #nodes``, the busiest node
+  primaries at most 2x the least busy (bounded-load placement actually
+  keeps the spread <= 1 video);
+- warm-repeat locality: re-running the batch leaves EVERY node's
+  ``tiles_decoded_total`` unchanged — replicated routing still sends
+  each video to the same warm primary, so no node re-decodes anything.
+
+Throughput (batch makespan single vs fanned-out) is reported; the gate
+is soft in quick mode (single-sample wall clock on a shared CI runner)
+and hard in full runs, where 3-node fan-out must not be catastrophically
+slower than in-process execution despite shipping every pixel over a
+socket.
+
+    PYTHONPATH=src:. python benchmarks/fig_cluster.py              # full
+    REPRO_QUICK=1 PYTHONPATH=src:. python benchmarks/fig_cluster.py  # smoke
+"""
+from __future__ import annotations
+
+import hashlib
+import json
+import os
+import pathlib
+import tempfile
+import time
+
+import numpy as np
+
+from benchmarks.common import ENC, corpus_video, emit, gate, quick_mode
+
+QUICK = quick_mode()
+N_NODES = 3
+REPLICATION = 2
+N_VIDEOS = 12                      # >= 4 x N_NODES arms the balance gate
+N_FRAMES = 32 if QUICK else 64
+H, W = 96, 160
+OUT = os.environ.get("REPRO_BENCH_OUT", "BENCH_cluster.json")
+
+VIDEOS = [f"cam{i:02d}" for i in range(N_VIDEOS)]
+
+
+def corpus():
+    return {v: corpus_video("sparse", i, N_FRAMES, height=H, width=W)[:2]
+            for i, v in enumerate(VIDEOS)}
+
+
+def seed(store, videos: dict) -> None:
+    """Identical declarative setup on the reference store and (routed to
+    every replica) through the cluster — encode is deterministic, so both
+    worlds hold byte-identical tiles."""
+    from repro.core import NoTilingPolicy
+
+    for name, (frames, dets) in videos.items():
+        store.add_video(name, encoder=ENC, policy=NoTilingPolicy())
+        store.ingest(name, frames)
+        store.add_detections(name, {f: d for f, d in enumerate(dets)})
+
+
+def workload(store) -> list:
+    """Two scans per video (full-range car + offset person window) plus
+    one multi-video scan per adjacent pair — the pairs exercise the
+    router's cross-node split/merge path whenever placement separates
+    them."""
+    qs = []
+    for i, v in enumerate(VIDEOS):
+        qs.append(store.scan(v).labels("car").frames(0, N_FRAMES))
+        lo = (i * ENC.gop) % (N_FRAMES - ENC.gop)
+        qs.append(store.scan(v).labels("person").frames(lo, lo + ENC.gop))
+    for a, b in zip(VIDEOS[::2], VIDEOS[1::2]):
+        qs.append(store.scan([a, b]).labels("car").frames(0, ENC.gop))
+    return qs
+
+
+def digest(results) -> str:
+    h = hashlib.sha256()
+    for r in results:
+        for reg in r.regions:  # (f, box, px) or (video, f, box, px)
+            *key, px = reg
+            h.update(repr((tuple(key), px.shape, str(px.dtype))).encode())
+            h.update(np.ascontiguousarray(px).tobytes())
+    return h.hexdigest()
+
+
+def main() -> None:
+    from repro.core import ClusterRouter, VideoStore, VideoStoreServer
+
+    videos = corpus()
+    tmp = tempfile.mkdtemp(prefix="tasm_fig_cluster_")
+    report: dict = {"n_nodes": N_NODES, "n_videos": N_VIDEOS,
+                    "replication": REPLICATION, "n_frames": N_FRAMES}
+
+    # -- single in-process store: the bit-identity + throughput baseline --
+    ref = VideoStore()
+    seed(ref, videos)
+    plans = [q.plan() for q in workload(ref)]  # engine-independent logic
+    n_queries = len(plans)
+    t0 = time.perf_counter()
+    ref_results = ref.execute_many(plans)
+    single_s = time.perf_counter() - t0
+    ref_digest = digest(ref_results)
+    report["single"] = {"batch_s": single_s,
+                        "qps": n_queries / max(single_s, 1e-9)}
+
+    # -- the cluster: 3 socket nodes, K=2, routed ingest + batch ----------
+    stores = [VideoStore() for _ in range(N_NODES)]
+    servers = [VideoStoreServer(s, path=os.path.join(tmp, f"n{i}.sock"),
+                                owns_store=False).start()
+               for i, s in enumerate(stores)]
+    router = ClusterRouter(
+        {f"n{i}": os.path.join(tmp, f"n{i}.sock")
+         for i in range(N_NODES)},
+        replication=REPLICATION,
+        placement_path=os.path.join(tmp, "placement.json"))
+    try:
+        t0 = time.perf_counter()
+        seed(router, videos)
+        report["cluster_ingest_s"] = time.perf_counter() - t0
+
+        counts = {n: 0 for n in router.placement.nodes}
+        for reps in router.placement.assignments.values():
+            counts[reps[0]] += 1
+        report["primaries_per_node"] = counts
+        assert N_VIDEOS >= 4 * N_NODES  # the balance gate's precondition
+        gate(max(counts.values()) <= 2 * max(min(counts.values()), 1),
+             f"placement imbalance: primaries {counts}")
+
+        t0 = time.perf_counter()
+        cluster_results = router.execute_many(plans)
+        cluster_s = time.perf_counter() - t0
+        report["cluster"] = {"batch_s": cluster_s,
+                             "qps": n_queries / max(cluster_s, 1e-9)}
+        report["bit_identical"] = digest(cluster_results) == ref_digest
+        gate(report["bit_identical"],
+             "cluster execute_many diverges from the single store")
+
+        # warm repeat: same batch again — primary-first routing must land
+        # every scan on the node that already decoded it
+        tiles_before = {n: (d or {}).get("tiles_decoded_total", 0)
+                        for n, d in router.stats()["nodes"].items()}
+        t0 = time.perf_counter()
+        warm_results = router.execute_many(plans)
+        warm_s = time.perf_counter() - t0
+        tiles_after = {n: (d or {}).get("tiles_decoded_total", 0)
+                       for n, d in router.stats()["nodes"].items()}
+        deltas = {n: tiles_after[n] - tiles_before[n] for n in tiles_after}
+        report["warm"] = {"batch_s": warm_s,
+                          "qps": n_queries / max(warm_s, 1e-9),
+                          "tiles_decoded_per_node": deltas}
+        gate(all(d == 0 for d in deltas.values()),
+             f"warm repeat re-decoded tiles per node: {deltas}")
+        gate(digest(warm_results) == ref_digest,
+             "warm cluster repeat diverges from the single store")
+
+        report["speedup_cluster"] = single_s / max(cluster_s, 1e-9)
+        # soft in quick mode (single-sample timing on a noisy runner);
+        # full runs must hold: fan-out across 3 nodes, even paying socket
+        # marshalling for every pixel, stays within 2x of in-process
+        gate(report["speedup_cluster"] >= 0.5,
+             f"cluster batch {cluster_s:.3f}s vs single {single_s:.3f}s "
+             f"(speedup {report['speedup_cluster']:.2f}x < 0.5x)",
+             hard=not QUICK)
+    finally:
+        router.close()
+        for srv in servers:
+            srv.stop()
+        for s in stores:
+            s.close()
+        ref.close()
+
+    pathlib.Path(OUT).write_text(json.dumps(report, indent=1))
+    emit("cluster_single", 1e6 * single_s / n_queries,
+         f"qps={report['single']['qps']:.1f}")
+    emit("cluster_fanout", 1e6 * cluster_s / n_queries,
+         f"qps={report['cluster']['qps']:.1f};"
+         f"speedup={report['speedup_cluster']:.2f}x")
+    emit("cluster_warm", 1e6 * warm_s / n_queries,
+         f"qps={report['warm']['qps']:.1f};tiles=0")
+    print(f"# wrote {OUT}: {N_VIDEOS} videos over {N_NODES} nodes (K="
+          f"{REPLICATION}), primaries {report['primaries_per_node']}, "
+          f"bit_identical={report['bit_identical']}, cluster speedup "
+          f"{report['speedup_cluster']:.2f}x, warm per-node decodes 0")
+
+
+if __name__ == "__main__":
+    main()

@@ -25,6 +25,7 @@ MODULES = [
     "benchmarks.fig_roi",
     "benchmarks.fig_tuning",
     "benchmarks.fig_server",
+    "benchmarks.fig_cluster",
     "benchmarks.kernel_bench",
     "benchmarks.roofline_report",
 ]

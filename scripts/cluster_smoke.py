@@ -1,0 +1,231 @@
+#!/usr/bin/env python
+"""Cluster smoke: 3 ``tasm_serve.py`` nodes behind one ``tasm_router.py``,
+two concurrent client PROCESSES, and a node killed mid-workload.  Asserts
+the distributed-serving contract end to end, across real process
+boundaries:
+
+- both clients' results are bit-identical to an in-process ``execute()``
+  of the same scans on an identically-built local store;
+- with ``--replication 2``, SIGKILLing one node while a client is
+  mid-workload loses NO reads — every remaining iteration still returns
+  bit-identical results (the router fails reads over to the surviving
+  replica);
+- the router reports the killed node down, and SIGTERM shuts router and
+  nodes down cleanly (exit 0, socket files gone).
+
+Exits non-zero on any violation — this is the CI cluster-smoke step::
+
+    python scripts/cluster_smoke.py
+
+The script doubles as its own client: ``cluster_smoke.py --client SOCK
+OUT [ITERS SLEEP]`` connects to the router, runs the canonical workload
+``ITERS`` times (sleeping ``SLEEP`` seconds between iterations), and
+writes results to ``OUT.npz`` + ``OUT.json`` for the parent to compare.
+"""
+from __future__ import annotations
+
+import json
+import os
+import pathlib
+import signal
+import socket
+import subprocess
+import sys
+import tempfile
+import time
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import numpy as np  # noqa: E402
+
+from repro.codec.encode import EncoderConfig  # noqa: E402
+from repro.core import (ClusterClient, NoTilingPolicy,  # noqa: E402
+                        VideoStore)
+from repro.data.video_gen import generate, sparse_spec  # noqa: E402
+
+ENC = EncoderConfig(gop=16, qp=8)
+N_FRAMES, H, W = 32, 96, 160
+VIDEOS = ["cam0", "cam1", "cam2", "cam3"]
+#: the canonical workload: per-video windows over two labels
+WORKLOAD = [(v, label, rng) for v in VIDEOS
+            for label, rng in (("car", (0, 32)), ("person", (8, 24)))]
+
+
+def corpus():
+    return {v: generate(sparse_spec(seed=i, n_frames=N_FRAMES, height=H,
+                                    width=W))
+            for i, v in enumerate(VIDEOS)}
+
+
+def run_workload(store):
+    return [store.scan(v).labels(label).frames(*rng).execute()
+            for v, label, rng in WORKLOAD]
+
+
+# --------------------------------------------------------------- client
+def client_main(sock_path: str, out: str, iters: str = "1",
+                sleep_s: str = "0") -> int:
+    with ClusterClient(sock_path) as cli:
+        waves = []
+        for _ in range(int(iters)):
+            waves.append(run_workload(cli))
+            time.sleep(float(sleep_s))
+    arrays, meta = {}, []
+    for w, results in enumerate(waves):
+        wave_meta = []
+        for i, r in enumerate(results):
+            regs = []
+            for j, (f, box, px) in enumerate(r.regions):
+                arrays[f"px_{w}_{i}_{j}"] = px
+                regs.append([f, list(box)])
+            wave_meta.append(regs)
+        meta.append(wave_meta)
+    np.savez(out + ".npz", **arrays)
+    pathlib.Path(out + ".json").write_text(json.dumps(meta))
+    return 0
+
+
+def load_client(out: str):
+    meta = json.loads(pathlib.Path(out + ".json").read_text())
+    npz = np.load(out + ".npz")
+    return [[[(f, tuple(box), npz[f"px_{w}_{i}_{j}"])
+              for j, (f, box) in enumerate(regs)]
+             for i, regs in enumerate(wave)]
+            for w, wave in enumerate(meta)]
+
+
+def assert_same_regions(a, b, where: str) -> None:
+    assert len(a) == len(b), f"{where}: {len(a)} vs {len(b)} regions"
+    for ra, rb in zip(a, b):
+        assert ra[:-1] == rb[:-1], f"{where}: region keys diverge"
+        if not np.array_equal(ra[-1], rb[-1]):
+            raise AssertionError(f"{where}: pixels not bit-identical at "
+                                 f"frame {ra[0]}")
+
+
+def assert_wave_matches(wave, reference, where: str) -> None:
+    assert len(wave) == len(reference), f"{where}: workload length"
+    for q, (got, ref) in enumerate(zip(wave, reference)):
+        assert_same_regions(ref.regions, got, f"{where} query {q}")
+
+
+# --------------------------------------------------------------- parent
+def wait_for_socket(path: str, proc, timeout: float = 60.0) -> None:
+    deadline = time.time() + timeout
+    while time.time() < deadline:
+        if proc.poll() is not None:
+            raise RuntimeError(f"server died early (rc={proc.returncode})")
+        if os.path.exists(path):
+            s = socket.socket(socket.AF_UNIX, socket.SOCK_STREAM)
+            try:
+                s.connect(path)
+                return
+            except OSError:
+                pass
+            finally:
+                s.close()
+        time.sleep(0.05)
+    raise RuntimeError(f"socket {path} never came up")
+
+
+def main() -> int:
+    if len(sys.argv) > 1 and sys.argv[1] == "--client":
+        return client_main(*sys.argv[2:])
+
+    tmp = tempfile.mkdtemp(prefix="tasm_cluster_smoke_")
+    here = os.path.dirname(os.path.abspath(__file__))
+    node_socks = [os.path.join(tmp, f"n{i}.sock") for i in range(3)]
+    router_sock = os.path.join(tmp, "router.sock")
+    nodes = [subprocess.Popen(
+        [sys.executable, os.path.join(here, "tasm_serve.py"),
+         "--socket", sock]) for sock in node_socks]
+    router = None
+    try:
+        for sock, proc in zip(node_socks, nodes):
+            wait_for_socket(sock, proc)
+        router = subprocess.Popen(
+            [sys.executable, os.path.join(here, "tasm_router.py"),
+             "--socket", router_sock, "--replication", "2",
+             "--placement", os.path.join(tmp, "placement.json")]
+            + [a for i, sock in enumerate(node_socks)
+               for a in ("--node", f"n{i}={sock}")])
+        wait_for_socket(router_sock, router)
+        videos = corpus()
+
+        # seed the cluster through the router, and build the in-process
+        # reference store identically (encode is deterministic)
+        local = VideoStore()
+        with ClusterClient(router_sock) as seed:
+            for name, (frames, dets) in videos.items():
+                for store in (seed, local):
+                    store.add_video(name, encoder=ENC,
+                                    policy=NoTilingPolicy())
+                    store.ingest(name, frames)
+                    store.add_detections(name,
+                                         {f: d for f, d in enumerate(dets)})
+            placement = seed.placement()["assignments"]
+        reference = run_workload(local)
+        local.close()
+
+        # two concurrent client processes over one router
+        outs = [os.path.join(tmp, f"client{i}") for i in (1, 2)]
+        clients = [subprocess.Popen(
+            [sys.executable, os.path.abspath(__file__), "--client",
+             router_sock, out]) for out in outs]
+        rcs = [c.wait(timeout=300) for c in clients]
+        assert rcs == [0, 0], f"client exit codes {rcs}"
+        got = [load_client(out)[0] for out in outs]
+        assert_wave_matches(got[0], reference, "client1 vs local")
+        assert_wave_matches(got[1], reference, "client2 vs local")
+        print(f"# two concurrent clients bit-identical to in-process "
+              f"execute ({sum(len(r) for r in got[0])} regions)")
+
+        # kill cam0's PRIMARY mid-workload: a third client iterates the
+        # workload; with K=2 every video keeps a live replica, so every
+        # wave — before, during, and after the kill — must stay
+        # bit-identical
+        victim = int(placement["cam0"][0][1:])  # "n2" -> index 2
+        out3 = os.path.join(tmp, "client3")
+        killer = subprocess.Popen(
+            [sys.executable, os.path.abspath(__file__), "--client",
+             router_sock, out3, "6", "0.2"])
+        time.sleep(0.6)  # a couple of waves in
+        nodes[victim].send_signal(signal.SIGKILL)
+        nodes[victim].wait(timeout=30)
+        rc = killer.wait(timeout=300)
+        assert rc == 0, f"mid-kill client exit code {rc}"
+        waves = load_client(out3)
+        assert len(waves) == 6
+        for w, wave in enumerate(waves):
+            assert_wave_matches(wave, reference,
+                                f"wave {w} (node n{victim} killed)")
+        with ClusterClient(router_sock) as probe:
+            health = probe.node_health()
+            assert health[f"n{victim}"] is False, health
+            assert sum(1 for ok in health.values() if ok) == 2, health
+        print(f"# killed n{victim} mid-workload: 6/6 waves bit-identical, "
+              f"router reports it down")
+
+        # clean shutdown: SIGTERM -> exit 0, sockets unlinked
+        router.send_signal(signal.SIGTERM)
+        rc = router.wait(timeout=60)
+        assert rc == 0, f"router exit code {rc}"
+        assert not os.path.exists(router_sock), "router socket left behind"
+        for i, proc in enumerate(nodes):
+            if i == victim:
+                continue
+            proc.send_signal(signal.SIGTERM)
+            rc = proc.wait(timeout=60)
+            assert rc == 0, f"node n{i} exit code {rc}"
+        print("# clean shutdown: router and surviving nodes exit 0")
+        print("cluster_smoke,0.0,ok")
+        return 0
+    finally:
+        for proc in ([router] if router else []) + nodes:
+            if proc.poll() is None:
+                proc.kill()
+                proc.wait(timeout=30)
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

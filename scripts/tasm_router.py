@@ -1,0 +1,113 @@
+#!/usr/bin/env python
+"""Serve a cluster of TASM nodes behind one router socket.
+
+    PYTHONPATH=src python scripts/tasm_router.py --socket /tmp/router.sock \
+        --node a=/tmp/node-a.sock --node b=/tmp/node-b.sock \
+        --node c=10.0.0.7:7841 --replication 2 \
+        --placement /data/tasm/placement.json
+
+Each ``--node name=addr`` names one running ``tasm_serve.py`` node (Unix
+socket path or ``host:port``).  The router presents the exact same wire
+protocol as a single node — clients connect with
+:class:`repro.core.ClusterClient` (or plain ``RemoteVideoStore``) and get
+the full declarative surface, routed: scans go to the video's replicas
+(consistent-hash placement, persisted to ``--placement`` so restarts and
+membership changes never silently re-home data), ``execute_many`` batches
+fan out per node, and mutations write every replica.  With
+``--replication K`` the cluster keeps serving a video's reads after K-1
+of its nodes die.
+
+Prints ``TASM router serving on <addr>`` once accepting.  SIGINT/SIGTERM
+shut down cleanly (drain in-flight scans, close node channels, exit 0).
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import signal
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro.core import ClusterRouter, ClusterRouterServer  # noqa: E402
+from repro.core import wire  # noqa: E402
+
+
+def parse_nodes(specs) -> dict:
+    nodes = {}
+    for spec in specs:
+        name, sep, addr = spec.partition("=")
+        if not sep or not name or not addr:
+            raise SystemExit(f"--node wants NAME=ADDR, got {spec!r}")
+        if name in nodes:
+            raise SystemExit(f"duplicate node name {name!r}")
+        nodes[name] = addr
+    return nodes
+
+
+def parse_args(argv=None) -> argparse.Namespace:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    where = ap.add_mutually_exclusive_group(required=True)
+    where.add_argument("--socket", metavar="PATH",
+                       help="unix-domain socket path to listen on")
+    where.add_argument("--tcp", metavar="HOST:PORT",
+                       help="TCP address to listen on (PORT 0 = ephemeral)")
+    ap.add_argument("--node", action="append", required=True,
+                    metavar="NAME=ADDR",
+                    help="a cluster node: unix socket path or host:port "
+                         "(repeat per node)")
+    ap.add_argument("--replication", type=int, default=1, metavar="K",
+                    help="replicas per video (default 1; capped at the "
+                         "node count)")
+    ap.add_argument("--placement", default=None, metavar="FILE",
+                    help="persisted placement map (loaded when it exists, "
+                         "written on every assignment)")
+    ap.add_argument("--max-frame-mb", type=int, default=None,
+                    help="reject wire frames larger than this many MiB "
+                         "(default 256)")
+    ap.add_argument("--codec", default=None, choices=("msgpack", "json"),
+                    help="wire codec (default: msgpack when installed, "
+                         "else json)")
+    ap.add_argument("--node-retries", type=int, default=1,
+                    help="per-channel reconnect retries for idempotent "
+                         "node RPCs (default 1)")
+    return ap.parse_args(argv)
+
+
+def main(argv=None) -> int:
+    args = parse_args(argv)
+    kw: dict = {}
+    if args.socket:
+        kw["path"] = args.socket
+    else:
+        host, _, port = args.tcp.rpartition(":")
+        kw["host"], kw["port"] = host or "127.0.0.1", int(port)
+    rkw: dict = {}
+    if args.max_frame_mb is not None:
+        rkw["max_frame_bytes"] = kw["max_frame_bytes"] = \
+            args.max_frame_mb << 20
+    router = ClusterRouter(parse_nodes(args.node),
+                           replication=args.replication,
+                           placement_path=args.placement,
+                           codec=args.codec, node_retries=args.node_retries,
+                           **rkw)
+    server = ClusterRouterServer(router, codec=args.codec, **kw)
+    server.start()
+
+    def _shutdown(signum, frame):
+        server.stop()
+
+    signal.signal(signal.SIGTERM, _shutdown)
+    signal.signal(signal.SIGINT, _shutdown)
+    down = sorted(router._down)
+    print(f"TASM router serving on {server.address} "
+          f"(pid {os.getpid()}, codec {args.codec or wire.default_codec()}, "
+          f"nodes {sorted(router.addresses)}, replication "
+          f"{router.placement.replication}"
+          + (f", DOWN {down}" if down else "") + ")", flush=True)
+    server.serve_forever()
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

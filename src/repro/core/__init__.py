@@ -16,8 +16,11 @@ share one scheduler, tile cache, and tuner.  The deprecated single-video
 """
 from repro.core.client import (RemoteError, RemoteScanQuery,
                                RemoteServingSession, RemoteVideoStore)
-from repro.core.cost import (CostModel, calibrate, pixels_and_tiles,
-                             query_cost, roi_pixels_and_tiles)
+from repro.core.cluster import (ClusterClient, ClusterRouter,
+                                ClusterRouterServer, PlacementMap)
+from repro.core.cost import (CostModel, calibrate, calibrate_io,
+                             pixels_and_tiles, query_cost,
+                             roi_pixels_and_tiles)
 from repro.core.engine import IngestStats, VideoEntry, VideoStore
 from repro.core.layout import (
     TileLayout,
@@ -37,7 +40,7 @@ from repro.core.policies import (
     RegretPolicy,
 )
 from repro.core.query import (PhysicalPlan, ScanPlan, ScanQuery, ScanResult,
-                              ScanStats, SOTScan)
+                              ScanStats, SOTScan, merge_results, split_plan)
 from repro.core.scheduler import ScanScheduler, ServingSession
 from repro.core.semantic_index import SemanticIndex
 from repro.core.server import VideoStoreServer

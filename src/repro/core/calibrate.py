@@ -13,7 +13,8 @@ import time
 import numpy as np
 
 from repro.codec.encode import EncoderConfig, decode_tile, encode_tile
-from repro.core.cost import CostModel, calibrate, calibrate_encode
+from repro.core.cost import (CostModel, calibrate, calibrate_encode,
+                             calibrate_io)
 from repro.core.layout import (TileLayout, fine_grained_layout,
                                single_tile_layout, uniform_layout)
 from repro.data.video_gen import dense_spec, generate, sparse_spec
@@ -65,6 +66,38 @@ def measure_decode_samples(enc_cfg: EncoderConfig, *, seeds=(0, 1),
     return samples
 
 
+def measure_io_samples(enc_cfg: EncoderConfig, *, seed=0,
+                       n_frames: int = 32, height: int = 192,
+                       width: int = 320, repeats: int = 2):
+    """``(masked_pixels, tiles, io_pixels, seconds)`` rows from
+    block-masked (ROI-restricted) decodes: a single 8x8 block gathered
+    out of tiles of varying size, across varying GOP prefixes, so the
+    opened-but-not-decoded pixel gap spans a wide range while the
+    gathered pixel count stays tiny.  Feeds :func:`calibrate_io`."""
+    spec = sparse_spec(seed=seed, n_frames=n_frames, height=height,
+                       width=width)
+    frames, _ = generate(spec)
+    samples: list[tuple[float, float, float, float]] = []
+    for r, c in [(1, 1), (2, 2), (3, 3), (4, 6)]:
+        layout = uniform_layout(height, width, r, c)
+        y1, x1, y2, x2 = layout.tile_rects()[0]
+        enc = encode_tile(np.ascontiguousarray(frames[:, y1:y2, x1:x2]),
+                          enc_cfg)
+        th, tw = y2 - y1, x2 - x1
+        n_gops = max(1, n_frames // enc_cfg.gop)
+        for k in sorted({1, max(1, n_gops // 2), n_gops}):
+            gops = list(range(k))
+            decode_tile(enc, gop_indices=gops, blocks=(0,))  # warm
+            t0 = time.perf_counter()
+            for _ in range(repeats):
+                decode_tile(enc, gop_indices=gops, blocks=(0,))
+            dt = (time.perf_counter() - t0) / repeats
+            f_decoded = k * enc_cfg.gop
+            samples.append((64.0 * f_decoded, float(k),
+                            float(th * tw * f_decoded), dt))
+    return samples
+
+
 def measure_encode_samples(enc_cfg: EncoderConfig, *, seed=0,
                            n_frames: int = 32, height: int = 192,
                            width: int = 320):
@@ -88,4 +121,5 @@ def calibrated_cost_model(enc_cfg: EncoderConfig | None = None,
     enc_cfg = enc_cfg or EncoderConfig()
     model = calibrate(measure_decode_samples(enc_cfg, **kw))
     model = calibrate_encode(measure_encode_samples(enc_cfg), model)
+    model = calibrate_io(measure_io_samples(enc_cfg), model)
     return model

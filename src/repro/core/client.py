@@ -33,6 +33,7 @@ from __future__ import annotations
 import dataclasses
 import socket
 import threading
+import time
 from concurrent.futures import Future
 from typing import Optional
 
@@ -48,6 +49,13 @@ from repro.core.tuner import TunerStats
 _ERROR_TYPES = {e.__name__: e for e in
                 (KeyError, ValueError, TypeError, RuntimeError,
                  IndexError, NotImplementedError)}
+
+#: ops safe to transparently re-send after a reconnect.  Mutations
+#: (ingest/add_detections/retile/…) are NOT here: the server may have
+#: applied one before the connection died, and re-sending would double
+#: it — those surface the ConnectionError to the caller instead.
+_IDEMPOTENT_OPS = frozenset({"ping", "videos", "stats", "explain",
+                             "execute_many", "tuner_stats", "epochs"})
 
 
 class RemoteError(RuntimeError):
@@ -74,7 +82,7 @@ class RemoteScanQuery(ScanQuery):
         return self._engine._explain(self.plan())
 
     def execute(self) -> ScanResult:
-        return self._engine._submit_plan(self.plan()).result()
+        return self._engine.execute(self.plan())
 
     def submit(self) -> Future:
         """Fire-and-collect: returns a Future resolving to the
@@ -135,7 +143,15 @@ class RemoteVideoStore:
                  timeout: Optional[float] = None,
                  codec: Optional[str] = None,
                  max_frame_bytes: int = wire.DEFAULT_MAX_FRAME_BYTES,
-                 want_plans: bool = True):
+                 want_plans: bool = True,
+                 retries: int = 0, retry_backoff: float = 0.05):
+        """``retries`` > 0 turns on reconnect-with-retry for *idempotent*
+        RPCs (scans, explain, stats, …): a ConnectionError tears the
+        socket down, redials, and re-sends, backing off
+        ``retry_backoff * attempt`` seconds between tries.  Mutations
+        never retry — the server may have applied one before the
+        connection died — so they surface the error.  The default 0
+        keeps the legacy fail-fast behaviour."""
         if (path is None) == (host is None):
             raise ValueError("give exactly one of path= (unix socket) or "
                              "host=/port= (tcp)")
@@ -144,34 +160,86 @@ class RemoteVideoStore:
         self.codec = codec
         self.max_frame_bytes = int(max_frame_bytes)
         self.want_plans = bool(want_plans)
-        if path is not None:
-            self._sock = socket.socket(socket.AF_UNIX, socket.SOCK_STREAM)
-            self._sock.settimeout(timeout)
-            self._sock.connect(path)
-        else:
-            self._sock = socket.create_connection((host, port),
-                                                  timeout=timeout)
-        # timeout= governs CONNECT only: left on the socket it would fire
-        # in the reader thread's blocking recv during any idle gap and
-        # poison the connection (the reader exits, failing everything)
-        self._sock.settimeout(None)
+        self.retries = int(retries)
+        self.retry_backoff = float(retry_backoff)
+        self._path, self._host, self._port = path, host, port
+        self._timeout = timeout
         self._send_lock = threading.Lock()
         self._pending: dict[int, Future] = {}
         self._pending_lock = threading.Lock()
         self._dead: Optional[BaseException] = None
         self._next_id = 0
         self._closed = False
-        self._reader = threading.Thread(target=self._read_loop,
-                                        name="tasm-client-reader",
-                                        daemon=True)
-        self._reader.start()
+        self._last_ingest_epochs: dict[int, int] = {}
+        self._sock = self._connect()
+        self._reader = self._start_reader()
 
     # ------------------------------------------------------------ plumbing
-    def _read_loop(self) -> None:
+    def _connect(self) -> socket.socket:
+        if self._path is not None:
+            sock = socket.socket(socket.AF_UNIX, socket.SOCK_STREAM)
+            sock.settimeout(self._timeout)
+            sock.connect(self._path)
+        else:
+            sock = socket.create_connection((self._host, self._port),
+                                            timeout=self._timeout)
+        # timeout= governs CONNECT only: left on the socket it would fire
+        # in the reader thread's blocking recv during any idle gap and
+        # poison the connection (the reader exits, failing everything)
+        sock.settimeout(None)
+        return sock
+
+    def _start_reader(self) -> threading.Thread:
+        t = threading.Thread(target=self._read_loop, args=(self._sock,),
+                             name="tasm-client-reader", daemon=True)
+        t.start()
+        return t
+
+    def _reconnect(self) -> None:
+        """Tear down the dead connection and dial a fresh one.  Futures
+        pending on the old connection were already failed by its reader's
+        death sweep (joined here, so the sweep can't race the reset);
+        requests sent afterwards ride the new socket."""
+        with self._send_lock:
+            if self._closed:
+                raise RuntimeError("remote store is closed")
+            try:
+                self._sock.shutdown(socket.SHUT_RDWR)
+            except OSError:
+                pass
+            try:
+                self._sock.close()
+            except OSError:
+                pass
+            self._reader.join(timeout=5)
+            self._sock = self._connect()  # may raise: _dead stays set
+            with self._pending_lock:
+                self._dead = None
+            self._reader = self._start_reader()
+
+    def _with_retry(self, fn):
+        """Run ``fn`` (which must be safe to repeat), reconnecting and
+        re-trying on connection-level failures up to ``self.retries``
+        times with linear backoff."""
+        attempt = 0
+        while True:
+            try:
+                return fn()
+            except (wire.ConnectionClosed, wire.WireError, OSError):
+                attempt += 1
+                if attempt > self.retries:
+                    raise
+                time.sleep(self.retry_backoff * attempt)
+                try:
+                    self._reconnect()
+                except OSError:
+                    pass  # still down: next attempt fails fast, re-counts
+
+    def _read_loop(self, sock: socket.socket) -> None:
         err: BaseException
         try:
             while True:
-                resp = wire.read_frame(self._sock,
+                resp = wire.read_frame(sock,
                                        max_bytes=self.max_frame_bytes)
                 rid = resp.get("id")
                 with self._pending_lock:
@@ -225,6 +293,9 @@ class RemoteVideoStore:
         return fut
 
     def _call(self, op: str, **params):
+        if self.retries and op in _IDEMPOTENT_OPS:
+            return self._with_retry(
+                lambda: self._request(op, **params).result())
         return self._request(op, **params).result()
 
     def close(self) -> None:
@@ -258,6 +329,18 @@ class RemoteVideoStore:
     def stats(self) -> dict:
         return self._call("stats")
 
+    def epochs(self, video: str) -> dict[int, int]:
+        """``{sot_id: layout epoch}`` on the server — the remote twin of
+        :meth:`VideoStore.epochs` (replica consistency checks)."""
+        return {int(s): int(e)
+                for s, e in self._call("epochs", video=video)}
+
+    @property
+    def last_ingest_epochs(self) -> dict[int, int]:
+        """Epoch table acknowledged by this client's most recent
+        ``ingest`` (empty before any ingest)."""
+        return dict(self._last_ingest_epochs)
+
     def shutdown_server(self) -> None:
         """Ask the server to stop (it replies, then shuts down)."""
         self._call("shutdown")
@@ -275,6 +358,7 @@ class RemoteVideoStore:
             doc["cost_model"] = {
                 "beta": cost_model.beta, "gamma": cost_model.gamma,
                 "r_squared": cost_model.r_squared,
+                "io_per_pixel": cost_model.io_per_pixel,
                 "encode_per_pixel": cost_model.encode_per_pixel,
                 "encode_per_tile": cost_model.encode_per_tile}
         if sot_len is not None:
@@ -298,6 +382,12 @@ class RemoteVideoStore:
             else [[int(s), list(lay.heights), list(lay.widths)]
                   for s, lay in initial_layouts.items()],
             **self._video_kw_doc(**video_kw))
+        doc = dict(doc)
+        # replica-aware ack: the server's post-ingest epoch table, kept
+        # for callers (the cluster router) that verify replicas landed on
+        # the same physical generation
+        self._last_ingest_epochs = {
+            int(s): int(e) for s, e in doc.pop("epochs", None) or []}
         return IngestStats(**doc)
 
     def add_detections(self, video: str, detections_by_frame: dict) -> None:
@@ -342,8 +432,15 @@ class RemoteVideoStore:
         return fut
 
     def execute(self, query) -> ScanResult:
-        """Execute one scan (accepts a ScanQuery or logical ScanPlan)."""
-        return self._submit_plan(self._as_plan(query)).result()
+        """Execute one scan (accepts a ScanQuery or logical ScanPlan).
+        Scans are idempotent, so with ``retries`` set a dropped
+        connection redials and re-sends; async ``submit()`` futures stay
+        fail-fast (the caller owns their lifecycle)."""
+        plan = self._as_plan(query)
+        if self.retries:
+            return self._with_retry(
+                lambda: self._submit_plan(plan).result())
+        return self._submit_plan(plan).result()
 
     def execute_many(self, queries) -> list[ScanResult]:
         """One merged batch on the server (union-of-tiles decode across the

@@ -393,13 +393,18 @@ class VideoStore:
                 layout = layout_by_sot.get(rec.sot_id, layout)
             bbt = None
             if granularity == "block":
-                p, t, bbt = roi_pixels_and_tiles(
+                # io_pixels feeds the third cost-model term: tile opens
+                # decompress the full coefficient stream even when the ROI
+                # gathers few blocks (0-cost when io_per_pixel is
+                # uncalibrated, so legacy stores estimate as before)
+                p, t, iop, bbt = roi_pixels_and_tiles(
                     layout, local, gop=entry.encoder.gop, sot_frames=span)
+                cost = entry.cost_model.cost(p, t, iop)
             else:
                 p, t = pixels_and_tiles(layout, local, gop=entry.encoder.gop,
                                         sot_frames=span)
-            yield (rec, epoch, layout, local, p, t,
-                   entry.cost_model.cost(p, t), bbt)
+                cost = entry.cost_model.cost(p, t)
+            yield (rec, epoch, layout, local, p, t, cost, bbt)
 
     def _lower(self, plan: ScanPlan) -> PhysicalPlan:
         pplan = PhysicalPlan(logical=plan)
@@ -555,6 +560,15 @@ class VideoStore:
                 entry, boxes_by_frame, layout_by_sot=layout_by_sot,
                 granularity=granularity))
 
+    def epochs(self, video: str) -> dict[int, int]:
+        """``{sot_id: layout epoch}`` snapshot for one video.  A retile
+        bumps the SOT's epoch, so two stores holding the same video serve
+        the same physical layout generation iff these tables match — the
+        check the cluster router runs before reading from a replica."""
+        with self.scheduler.lock:
+            return {r.sot_id: r.epoch
+                    for r in self.video(video).store.sots}
+
     # ---------------------------------------------------------------- stats
     def storage_bytes(self, video: Optional[str] = None) -> float:
         if video is not None:
@@ -625,6 +639,7 @@ class VideoStore:
             "policy": policy_spec(e.policy),
             "cost_model": {"beta": cm.beta, "gamma": cm.gamma,
                            "r_squared": cm.r_squared,
+                           "io_per_pixel": cm.io_per_pixel,
                            "encode_per_pixel": cm.encode_per_pixel,
                            "encode_per_tile": cm.encode_per_tile},
             "policy_state": e.policy.state_dict(),   # v3: runtime state
@@ -642,6 +657,8 @@ class VideoStore:
         cmd = v["cost_model"]
         cm = CostModel(beta=cmd["beta"], gamma=cmd["gamma"],
                        r_squared=cmd["r_squared"])
+        # additive since the io-term PR: older shards simply lack it (0.0)
+        cm.io_per_pixel = cmd.get("io_per_pixel", 0.0)
         cm.encode_per_pixel = cmd["encode_per_pixel"]
         cm.encode_per_tile = cmd["encode_per_tile"]
         policy = policy_from_spec(v["policy"])

@@ -311,6 +311,59 @@ class PhysicalPlan:
                    lookup_s=doc.get("lookup_s", 0.0))
 
 
+# ----------------------------------------------------- cluster split/merge
+def split_plan(plan: ScanPlan, key_of) -> list[tuple[object, ScanPlan]]:
+    """Split a multi-video logical plan into ``(key, subplan)`` runs for
+    cross-node execution: consecutive videos sharing ``key_of(video)``
+    (their owning node) form one subplan, in plan order.  Keeping the
+    runs contiguous — rather than grouping all of a node's videos into
+    one subplan — preserves the engine's *sequential* semantics exactly:
+    executing the runs in list order visits videos in the same order a
+    single store would, which is what makes a decremented ``limit``
+    bit-identical (the engine spends the limit video-by-video in plan
+    order).  The subplans inherit the parent's predicate/range/decode;
+    the caller owns limit accounting across runs."""
+    groups: list[tuple[object, list[str]]] = []
+    for v in plan.videos:
+        k = key_of(v)
+        if groups and groups[-1][0] == k:
+            groups[-1][1].append(v)
+        else:
+            groups.append((k, [v]))
+    return [(k, dataclasses.replace(plan, videos=tuple(vs)))
+            for k, vs in groups]
+
+
+def merge_results(plan: ScanPlan, parts: list) -> ScanResult:
+    """Re-assemble per-node partial :class:`ScanResult`\\ s of
+    :func:`split_plan` subplans into one result for the original plan —
+    bit-identical to a single store executing it: ``regions_by_video``
+    is the union, the flat ``regions`` list is rebuilt in the parent
+    plan's video order (multi-video tuples prepend the video name, the
+    scheduler's convention), and stats fields are summed.  The merged
+    physical plan concatenates the parts' SOT scans in run order when
+    every part carried one (else ``None``)."""
+    rbv: dict = {}
+    for r in parts:
+        rbv.update(r.regions_by_video)
+    if len(plan.videos) == 1:
+        regions = list(rbv.get(plan.videos[0], []))
+    else:
+        regions = [(v, f, b, px) for v in plan.videos
+                   for f, b, px in rbv.get(v, [])]
+    stats = ScanStats(**{
+        f.name: sum(getattr(r.stats, f.name) for r in parts)
+        for f in dataclasses.fields(ScanStats)})
+    merged_plan = None
+    if parts and all(r.plan is not None for r in parts):
+        merged_plan = PhysicalPlan(
+            logical=plan,
+            sot_scans=[s for r in parts for s in r.plan.sot_scans],
+            lookup_s=sum(r.plan.lookup_s for r in parts))
+    return ScanResult(regions=regions, stats=stats, plan=merged_plan,
+                      regions_by_video=rbv)
+
+
 # ------------------------------------------------------------------ builder
 class ScanQuery:
     """Chainable, immutable scan-query builder bound to a ``VideoStore``.

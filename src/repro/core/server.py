@@ -55,6 +55,8 @@ def _cost_model_from_doc(doc: Optional[dict]) -> Optional[CostModel]:
         return None
     cm = CostModel(beta=doc["beta"], gamma=doc["gamma"],
                    r_squared=doc.get("r_squared", 0.0))
+    if doc.get("io_per_pixel") is not None:
+        cm.io_per_pixel = doc["io_per_pixel"]
     if doc.get("encode_per_pixel") is not None:
         cm.encode_per_pixel = doc["encode_per_pixel"]
     if doc.get("encode_per_tile") is not None:
@@ -389,8 +391,11 @@ class VideoStoreServer:
     def _handle(self, op: str, req: dict):
         store = self.store
         if op == "ping":
+            # doubles as the router tier's node-health probe, so carry
+            # enough state for a cheap liveness + capacity check
             return {"pong": True, "pid": os.getpid(),
-                    "codec": self.codec or wire.default_codec()}
+                    "codec": self.codec or wire.default_codec(),
+                    "videos": len(store)}
         if op == "videos":
             return store.videos()
         if op == "add_video":
@@ -409,7 +414,15 @@ class VideoStoreServer:
                 else {int(s): TileLayout(tuple(h), tuple(w))
                       for s, h, w in layouts},
                 **_video_kw_from_doc(req))
-            return dataclasses.asdict(stats)
+            doc = dataclasses.asdict(stats)
+            # replica-aware acknowledgement: the post-ingest epoch table
+            # rides along so a router writing K replicas can verify they
+            # all landed on the same physical generation without a second
+            # round-trip (pairs, not a dict — JSON would stringify int
+            # keys)
+            doc["epochs"] = [[s, e]
+                             for s, e in store.epochs(req["name"]).items()]
+            return doc
         if op == "add_detections":
             store.add_detections(req["video"],
                                  _detections_from_doc(req["pairs"]))
@@ -436,6 +449,8 @@ class VideoStoreServer:
             return dataclasses.asdict(store.drain_tuner(req.get("timeout")))
         if op == "tuner_stats":
             return dataclasses.asdict(store.tuner_stats())
+        if op == "epochs":
+            return [[s, e] for s, e in store.epochs(req["video"]).items()]
         if op == "stats":
             return store.stats()
         if op == "shutdown":

@@ -213,16 +213,22 @@ def write_frame(sock: socket.socket, doc: dict, *,
 
 
 def _read_exact(sock: socket.socket, n: int, *, eof_ok: bool) -> bytes:
-    chunks, got = [], 0
+    """Read exactly ``n`` bytes, tolerant of arbitrarily fragmented
+    ``recv`` returns (a peer dribbling one byte at a time, or a header
+    split across TCP segments, reassembles identically).  Fills a single
+    preallocated buffer via ``recv_into`` so a heavily fragmented frame
+    costs no per-chunk allocations or a final join."""
+    buf = bytearray(n)
+    view = memoryview(buf)
+    got = 0
     while got < n:
-        chunk = sock.recv(min(n - got, 1 << 20))
-        if not chunk:
+        r = sock.recv_into(view[got:], min(n - got, 1 << 20))
+        if r == 0:
             if eof_ok and got == 0:
                 raise ConnectionClosed("peer closed the connection")
             raise WireError("connection closed mid-frame")
-        chunks.append(chunk)
-        got += len(chunk)
-    return b"".join(chunks)
+        got += r
+    return bytes(buf)
 
 
 def read_frame(sock: socket.socket, *,

@@ -2,7 +2,9 @@
 import numpy as np
 from hypothesis import given, settings, strategies as st
 
-from repro.core.cost import CostModel, calibrate, pixels_and_tiles, query_cost
+from repro.core.cost import (CostModel, calibrate, calibrate_io,
+                             pixels_and_tiles, query_cost,
+                             roi_pixels_and_tiles)
 from repro.core.layout import single_tile_layout, uniform_layout
 
 H, W = 192, 320
@@ -70,3 +72,57 @@ def test_tiling_never_increases_pixels():
         lay = uniform_layout(H, W, r, c)
         p_l, _ = pixels_and_tiles(lay, bbf, gop=GOP, sot_frames=(0, GOP))
         assert p_l <= p_o
+
+
+def test_io_term_zero_for_full_tile_mask():
+    """When the mask covers the whole tile, io_pixels == pixels and the
+    three-term cost collapses to the two-term one — the granularities
+    agree at the boundary."""
+    m = CostModel(beta=1e-8, gamma=1e-4, io_per_pixel=5e-9)
+    omega = single_tile_layout(H, W)
+    bbf = {0: [(0, 0, H, W)]}  # whole frame -> full-tile block coverage
+    p, t, iop, masks = roi_pixels_and_tiles(omega, bbf, gop=GOP,
+                                            sot_frames=(0, GOP))
+    assert masks == {0: None}
+    assert iop == p
+    assert m.cost(p, t, iop) == m.cost(p, t)
+
+
+def test_io_term_charges_opened_not_decoded_gap():
+    m = CostModel(beta=1e-8, gamma=1e-4, io_per_pixel=5e-9)
+    omega = single_tile_layout(H, W)
+    bbf = {0: [(0, 0, 8, 8)]}  # one 8x8 block of the full-frame tile
+    p, t, iop, _ = roi_pixels_and_tiles(omega, bbf, gop=GOP,
+                                        sot_frames=(0, GOP))
+    assert p == 64 and iop == H * W  # one block gathered, whole tile opened
+    assert m.cost(p, t, iop) == m.cost(p, t) + 5e-9 * (iop - p)
+    # omitting io_pixels keeps the legacy two-term estimate
+    assert m.cost(p, t) == 1e-8 * p + 1e-4 * t
+
+
+def test_calibrate_io_recovers_residual_slope():
+    """calibrate_io fits only the residual — beta/gamma are untouched and
+    the planted io_per_pixel is recovered."""
+    rng = np.random.default_rng(1)
+    beta, gamma, io = 2e-8, 3e-4, 6e-9
+    base = CostModel(beta=beta, gamma=gamma)
+    rows = []
+    for _ in range(200):
+        p = rng.uniform(64, 1e4)
+        t = rng.uniform(1, 10)
+        iop = p + rng.uniform(1e4, 1e7)
+        noise = rng.normal(0, 1e-6)
+        rows.append((p, t, iop,
+                     beta * p + gamma * t + io * (iop - p) + noise))
+    m = calibrate_io(rows, base)
+    assert m.beta == beta and m.gamma == gamma
+    assert abs(m.io_per_pixel - io) / io < 0.05
+    assert m.io_r_squared > 0.99
+
+
+def test_calibrate_io_clamps_negative_slope_to_zero():
+    base = CostModel(beta=1e-8, gamma=1e-4)
+    # decodes FASTER than the two-term model predicts: residual negative
+    rows = [(64.0, 1.0, 1e6, 0.0) for _ in range(10)]
+    m = calibrate_io(rows, base)
+    assert m.io_per_pixel == 0.0

@@ -324,6 +324,94 @@ class TestErrorHandling:
         c.close()
 
 
+# --------------------------------------------------- reconnect and epochs
+class TestReconnectRetry:
+    def _restartable(self, tmp_path, small_video):
+        frames, dets = small_video
+        store = VideoStore()
+        fill(store, "cam0", frames, dets)
+        sock = str(tmp_path / "t.sock")
+        server = VideoStoreServer(store, path=sock,
+                                  owns_store=False).start()
+        return store, server, sock
+
+    def test_idempotent_rpcs_retry_across_server_restart(
+            self, tmp_path, small_video):
+        store, s1, sock = self._restartable(tmp_path, small_video)
+        c = RemoteVideoStore(sock, retries=3)
+        try:
+            ref = c.scan("cam0").labels("car").frames(0, 16).execute()
+            s1.stop()
+            c._reader.join(timeout=10)
+            with VideoStoreServer(store, path=sock,
+                                  owns_store=False).start():
+                # redials transparently: ping, stats, and a scan all
+                # succeed on the fresh connection
+                assert c.ping()["pong"] is True
+                assert c.stats()["videos"] == ["cam0"]
+                got = c.scan("cam0").labels("car").frames(0, 16).execute()
+                assert_regions_equal(ref.regions, got.regions)
+        finally:
+            c.close()
+            store.close()
+
+    def test_mutations_never_retry(self, tmp_path, small_video):
+        store, s1, sock = self._restartable(tmp_path, small_video)
+        c = RemoteVideoStore(sock, retries=3)
+        try:
+            s1.stop()
+            c._reader.join(timeout=10)
+            with VideoStoreServer(store, path=sock,
+                                  owns_store=False).start():
+                # the server may have applied a mutation before the drop:
+                # re-sending could double it, so the error surfaces...
+                with pytest.raises((wire.ConnectionClosed, OSError)):
+                    c.add_metadata("cam0", 0, "x", 0, 0, 8, 8)
+                # ...and the next idempotent call heals the connection
+                assert c.ping()["pong"] is True
+        finally:
+            c.close()
+            store.close()
+
+    def test_zero_retries_stays_fail_fast(self, tmp_path, small_video):
+        store, s1, sock = self._restartable(tmp_path, small_video)
+        c = RemoteVideoStore(sock)  # default retries=0
+        try:
+            s1.stop()
+            c._reader.join(timeout=10)
+            with VideoStoreServer(store, path=sock,
+                                  owns_store=False).start():
+                with pytest.raises((wire.ConnectionClosed, OSError)):
+                    c.ping()
+        finally:
+            c.close()
+            store.close()
+
+
+class TestEpochs:
+    def test_epochs_rpc_matches_store(self, served):
+        store, _, client, _ = served
+        assert client.epochs("cam0") == store.epochs("cam0")
+
+    def test_epochs_tracks_retile(self, served):
+        _, _, client, _ = served
+        before = client.epochs("cam0")
+        client.retile("cam0", 0, uniform_layout(96, 160, 2, 2))
+        after = client.epochs("cam0")
+        assert after[0] == before[0] + 1
+        assert all(after[s] == before[s] for s in before if s != 0)
+
+    def test_ingest_ack_carries_epochs(self, served, small_video):
+        store, _, client, _ = served
+        frames, _ = small_video
+        assert client.last_ingest_epochs == {}
+        client.add_video("cam9", encoder=ENC, policy=NoTilingPolicy(),
+                         cost_model=MODEL)
+        client.ingest("cam9", frames)
+        assert client.last_ingest_epochs == store.epochs("cam9")
+        assert client.last_ingest_epochs == client.epochs("cam9")
+
+
 # ------------------------------------------------------------- transports
 class TestTransports:
     def test_tcp_transport(self, served):

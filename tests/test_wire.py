@@ -2,6 +2,8 @@
 round trips, and the oversized/malformed-frame rejection contract."""
 import socket
 import struct
+import threading
+import time
 
 import numpy as np
 import pytest
@@ -63,6 +65,99 @@ class TestFraming:
                "b": np.bool_(True)}
         out = wire.loads(wire.dumps(doc, codec=codec))
         assert out == {"id": 0, "i": 7, "f": 1.5, "b": True}
+
+
+class TestFragmentedReads:
+    """``read_frame`` against short/fragmented ``recv`` returns: the
+    kernel is free to deliver one byte per ``recv``, or to split the
+    4-byte header / payload at any boundary — framing must reassemble
+    bit-identically in every case."""
+
+    @staticmethod
+    def _dribble(sock, data: bytes, chunks) -> threading.Thread:
+        """Send ``data`` in the given chunk sizes from a helper thread
+        (the reader blocks in ``read_frame`` meanwhile)."""
+        def _send():
+            pos = 0
+            for c in chunks:
+                sock.sendall(data[pos:pos + c])
+                pos += c
+                time.sleep(0.001)  # let the reader drain between chunks
+            assert pos == len(data)
+        t = threading.Thread(target=_send, daemon=True)
+        t.start()
+        return t
+
+    def _frame_bytes(self, doc) -> bytes:
+        payload = wire.dumps(doc)
+        return struct.pack(">I", len(payload)) + payload
+
+    def test_one_byte_at_a_time(self):
+        a, b = socket.socketpair()
+        try:
+            doc = {"id": 9, "op": "ping", "arr": np.arange(6,
+                                                           dtype=np.uint8)}
+            data = self._frame_bytes(doc)
+            t = self._dribble(a, data, [1] * len(data))
+            out = wire.read_frame(b)
+            t.join(timeout=30)
+            assert out["id"] == 9 and out["op"] == "ping"
+            np.testing.assert_array_equal(out["arr"], doc["arr"])
+        finally:
+            a.close()
+            b.close()
+
+    @pytest.mark.parametrize("split", [1, 2, 3])
+    def test_header_split_across_recvs(self, split):
+        # the 4-byte length header itself arrives in two pieces
+        a, b = socket.socketpair()
+        try:
+            data = self._frame_bytes({"id": 1, "v": "x"})
+            t = self._dribble(a, data, [split, len(data) - split])
+            assert wire.read_frame(b)["id"] == 1
+            t.join(timeout=30)
+        finally:
+            a.close()
+            b.close()
+
+    def test_split_straddles_header_payload_boundary(self):
+        # one recv ends mid-header, the next spans header-end + payload
+        a, b = socket.socketpair()
+        try:
+            data = self._frame_bytes({"id": 2, "v": [1, 2, 3]})
+            t = self._dribble(a, data, [3, 4, len(data) - 7])
+            assert wire.read_frame(b)["v"] == [1, 2, 3]
+            t.join(timeout=30)
+        finally:
+            a.close()
+            b.close()
+
+    def test_two_frames_dribbled_back_to_back(self):
+        # fragmentation must never lose the boundary BETWEEN frames
+        a, b = socket.socketpair()
+        try:
+            data = self._frame_bytes({"id": 1}) + self._frame_bytes(
+                {"id": 2, "arr": np.ones((2, 3), dtype=np.float32)})
+            chunks = [5] * (len(data) // 5) + [len(data) % 5]
+            t = self._dribble(a, data, [c for c in chunks if c])
+            first = wire.read_frame(b)
+            second = wire.read_frame(b)
+            t.join(timeout=30)
+            assert first["id"] == 1 and second["id"] == 2
+            np.testing.assert_array_equal(
+                second["arr"], np.ones((2, 3), dtype=np.float32))
+        finally:
+            a.close()
+            b.close()
+
+    def test_eof_after_partial_payload_is_truncation(self):
+        a, b = socket.socketpair()
+        data = self._frame_bytes({"id": 3})
+        a.sendall(data[:len(data) - 2])  # header + most of the payload
+        a.close()
+        with pytest.raises(wire.WireError, match="mid-frame"):
+            wire.read_frame(b)
+        b.close()
 
 
 class TestFramingRejects:
