@@ -29,6 +29,27 @@ def run():
     g = jax.jit(lambda b: idct_dequant_ref(b, 8, True))
     emit("kernels/idct_ref_32k_blocks", time_call(lambda: g(q)), "jnp oracle")
 
+    # multi-tile batched decode: one fused dequant+IDCT+cumsum dispatch
+    # over a whole merged group fetch (F frames x M gathered block columns)
+    import numpy as np
+
+    from repro.kernels.decode.ops import decode_fused_op
+
+    rng = np.random.default_rng(0)
+    for f_frames, m_cols, tag in ((16, 1024, "48-tile-ish full batch"),
+                                  (16, 4096, "large merged batch")):
+        qs = jnp.asarray(rng.integers(-64, 64, (f_frames, m_cols, 8, 8),
+                                      dtype=np.int16))
+        emit(f"kernels/decode_fused_{f_frames}x{m_cols}",
+             time_call(lambda qs=qs: decode_fused_op(qs, qp=8)),
+             f"jnp fused XLA path; {tag}")
+    q_small = jnp.asarray(rng.integers(-64, 64, (8, 256, 8, 8),
+                                       dtype=np.int16))
+    emit("kernels/decode_fused_pallas_interp_8x256",
+         time_call(lambda: decode_fused_op(q_small, qp=8, use_pallas=True,
+                                           interpret=True)),
+         "Pallas kernel, interpret mode (NOT a TPU latency)")
+
     # SAD: 16x16 blocks, +-8 search, one frame of blocks
     cur = jax.random.normal(key, (480, 16, 16)) * 20
     win = jax.random.normal(key, (480, 32, 32)) * 20

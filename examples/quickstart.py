@@ -54,6 +54,25 @@ roi_px = query.execute().stats.pixels_decoded
 print(f"pixels decoded, full-tile {full_px / 1e6:.2f} M -> "
       f"ROI {roi_px / 1e6:.2f} M ({full_px / max(roi_px, 1):.1f}x fewer)")
 
+# 5b. batched fused decode: VideoStore(decode_backend="batched") (or env
+#     REPRO_DECODE_BACKEND=batched, or --decode-backend on tasm_serve.py)
+#     flattens every (tile, GOP, block-mask) selection of a group fetch
+#     into one fused dequant+IDCT+cumsum dispatch — Pallas on TPU, jitted
+#     XLA elsewhere — instead of the per-tile numpy loop.  Results and
+#     decode counters are bit-identical; fine-tiled merged batches decode
+#     1.5-5x faster (see BENCH_decode_kernel.json)
+batched = VideoStore(decode_backend="batched")
+batched.add_video("traffic", encoder=EncoderConfig(gop=16, qp=8))
+batched.ingest("traffic", frames)
+batched.add_detections("traffic", {f: d for f, d in enumerate(detections)})
+r_batched = batched.scan("traffic").labels("car").frames(0, 64).execute()
+r_numpy = query.execute()
+same = all(a[:-1] == b[:-1] and np.array_equal(a[-1], b[-1])
+           for a, b in zip(r_numpy.regions, r_batched.regions))
+print(f"batched decode backend: {len(r_batched.regions)} regions, "
+      f"bit-identical to numpy: {same}")
+batched.close()
+
 # 6. issue repeated declarative queries; the layout evolves under the policy
 #    and the tile cache absorbs repeat decodes (epoch bumps invalidate it).
 #    Tuning runs in the BACKGROUND by default: queries only emit workload

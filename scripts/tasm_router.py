@@ -28,9 +28,9 @@ import signal
 import sys
 
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+sys.path.insert(0, os.path.dirname(os.path.abspath(__file__)))
 
-from repro.core import ClusterRouter, ClusterRouterServer  # noqa: E402
-from repro.core import wire  # noqa: E402
+import _xla_env  # noqa: E402
 
 
 def parse_nodes(specs) -> dict:
@@ -71,11 +71,15 @@ def parse_args(argv=None) -> argparse.Namespace:
     ap.add_argument("--node-retries", type=int, default=1,
                     help="per-channel reconnect retries for idempotent "
                          "node RPCs (default 1)")
+    _xla_env.add_args(ap)
     return ap.parse_args(argv)
 
 
 def main(argv=None) -> int:
     args = parse_args(argv)
+    # env must land before the engine (hence XLA) initializes
+    _xla_env.apply(args)
+    from repro.core import ClusterRouter, ClusterRouterServer, wire
     kw: dict = {}
     if args.socket:
         kw["path"] = args.socket

@@ -24,9 +24,9 @@ import signal
 import sys
 
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+sys.path.insert(0, os.path.dirname(os.path.abspath(__file__)))
 
-from repro.core import VideoStore, VideoStoreServer  # noqa: E402
-from repro.core import wire  # noqa: E402
+import _xla_env  # noqa: E402
 
 
 def parse_args(argv=None) -> argparse.Namespace:
@@ -51,11 +51,20 @@ def parse_args(argv=None) -> argparse.Namespace:
                          "installed, else json)")
     ap.add_argument("--max-batch", type=int, default=64,
                     help="micro-batch cap of the shared serving session")
+    ap.add_argument("--decode-backend", default=None,
+                    choices=("numpy", "batched"),
+                    help="decode_tiles implementation: per-tile numpy loop "
+                         "or fused accelerator batches (default: "
+                         "$REPRO_DECODE_BACKEND, else numpy)")
+    _xla_env.add_args(ap)
     return ap.parse_args(argv)
 
 
 def main(argv=None) -> int:
     args = parse_args(argv)
+    # env must land before the engine (hence XLA) initializes
+    _xla_env.apply(args)
+    from repro.core import VideoStore, VideoStoreServer, wire
     kw: dict = {}
     if args.socket:
         kw["path"] = args.socket
@@ -66,7 +75,8 @@ def main(argv=None) -> int:
         kw["max_frame_bytes"] = args.max_frame_mb << 20
     store = VideoStore(store_root=args.store_root,
                        tile_cache_bytes=args.tile_cache_bytes,
-                       tuning=args.tuning)
+                       tuning=args.tuning,
+                       decode_backend=args.decode_backend)
     server = VideoStoreServer(store, codec=args.codec,
                               max_batch=args.max_batch, **kw)
     server.start()

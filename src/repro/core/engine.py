@@ -80,7 +80,7 @@ from repro.core.query import (PhysicalPlan, ScanPlan, ScanQuery, ScanResult,
                               ScanStats, SOTScan)
 from repro.core.scheduler import ScanScheduler, ServingSession
 from repro.core.semantic_index import SemanticIndex
-from repro.core.storage import SOTRecord, TileStore
+from repro.core.storage import DECODE_BACKENDS, SOTRecord, TileStore
 from repro.core.tile_cache import DEFAULT_CACHE_BYTES, TileCache
 from repro.core.tuner import PhysicalTuner, TunerStats
 
@@ -138,6 +138,7 @@ class VideoStore:
                  tuning: str = "background",
                  tuner_admission: str = "policy",
                  roi_decode: bool = True,
+                 decode_backend: Optional[str] = None,
                  autoload: bool = True):
         self.root = pathlib.Path(store_root) if store_root else None
         self.default_encoder = default_encoder or EncoderConfig()
@@ -162,6 +163,16 @@ class VideoStore:
         # are bit-identical either way; the flag may be flipped at runtime
         # and only affects plans lowered afterwards)
         self.roi_decode = bool(roi_decode)
+        # decode_backend="numpy"|"batched": how TileStore.decode_tiles runs —
+        # the per-tile numpy oracle loop, or fused accelerator dispatches
+        # over the whole merged batch (bit-identical; see codec/batch.py).
+        # REPRO_DECODE_BACKEND overrides the default for deployments.
+        backend = (decode_backend
+                   or os.environ.get("REPRO_DECODE_BACKEND") or "numpy")
+        if backend not in DECODE_BACKENDS:
+            raise ValueError(f"decode_backend must be one of "
+                             f"{DECODE_BACKENDS}, got {backend!r}")
+        self.decode_backend = backend
         # tuning="background"|"inline"|"off": where policy-driven retiling
         # runs (async tuner thread / inside the scan / nowhere);
         # tuner_admission="policy"|"gated": whether the background tuner
@@ -227,7 +238,8 @@ class VideoStore:
             cost_model=cost_model or self.default_cost_model or CostModel(),
             store=TileStore(name, enc,
                             root=str(self.root) if self.root else None,
-                            sot_len=sot_len),
+                            sot_len=sot_len,
+                            decode_backend=self.decode_backend),
             index=SemanticIndex())
         self._videos[name] = entry
         self._catalog_dirty = True
@@ -668,7 +680,8 @@ class VideoStore:
             name=name, encoder=enc, policy=policy,
             cost_model=cm,
             store=TileStore(name, enc, root=str(self.root),
-                            sot_len=v["sot_len"]),
+                            sot_len=v["sot_len"],
+                            decode_backend=self.decode_backend),
             index=SemanticIndex(),
             frame_hw=tuple(v["frame_hw"]) if v["frame_hw"] else None)
         entry.store.restore([

@@ -226,7 +226,8 @@ class ScanScheduler:
             # still squatting on the byte budget — purge is idempotent
             self.cache.invalidate(video, sot_id, before_epoch=epoch)
         out: dict[int, np.ndarray] = {}
-        to_decode: dict[int, dict[int, object]] = {}   # depth -> tile -> mask
+        to_decode: dict[int, object] = {}        # tile -> mask
+        decode_depth: dict[int, int] = {}        # tile -> decode depth
         for t in sorted(depth):
             key = (video, sot_id, epoch, t)
             arr = self.cache.get(key, depth[t], blocks=masks[t])
@@ -242,13 +243,18 @@ class ScanScheduler:
                 m = None if (m is None or cov[1] is None) else m | cov[1]
                 if m is not None and len(m) == rec.layout.tile_blocks(t):
                     m = None
-            to_decode.setdefault(nf, {})[t] = m
+            to_decode[t] = m
+            decode_depth[t] = nf
         fresh: set[int] = set()
         pixels_by_tile: dict[int, float] = {}
-        for nf, tiles in sorted(to_decode.items()):
+        if to_decode:
+            # the whole merged group goes down in ONE decode_tiles call —
+            # per-tile depths ride along, so the batched backend can fuse
+            # every (tile, GOP, mask) selection into one dispatch
             blocks = {t: (None if m is None else tuple(sorted(m)))
-                      for t, m in tiles.items()}
-            dec = entry.store.decode_tiles(sot_id, list(tiles), n_frames=nf,
+                      for t, m in to_decode.items()}
+            dec = entry.store.decode_tiles(sot_id, sorted(to_decode),
+                                           n_frames=decode_depth,
                                            blocks=blocks)
             for t, arr in dec.items():
                 out[t] = arr

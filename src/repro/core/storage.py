@@ -35,13 +35,23 @@ class SOTRecord:
     size_bytes: float = 0.0
 
 
+#: decode_tiles implementations: "numpy" = the per-tile oracle loop,
+#: "batched" = fused accelerator dispatches (bit-identical; codec/batch.py)
+DECODE_BACKENDS = ("numpy", "batched")
+
+
 class TileStore:
     def __init__(self, video: str, encoder: EncoderConfig, *,
-                 root: Optional[str] = None, sot_len: Optional[int] = None):
+                 root: Optional[str] = None, sot_len: Optional[int] = None,
+                 decode_backend: str = "numpy"):
         self.video = video
         self.encoder = encoder
         self.sot_len = sot_len or encoder.gop  # default: one SOT per GOP
         assert self.sot_len % encoder.gop == 0, "SOT must cover whole GOPs"
+        if decode_backend not in DECODE_BACKENDS:
+            raise ValueError(f"decode_backend must be one of "
+                             f"{DECODE_BACKENDS}, got {decode_backend!r}")
+        self.decode_backend = decode_backend
         self.root = pathlib.Path(root) if root else None
         self._mem: dict[tuple[int, int, int], dict] = {}
         self.sots: list[SOTRecord] = []
@@ -145,41 +155,75 @@ class TileStore:
 
     # -- decode ----------------------------------------------------------------
     def decode_tiles(self, sot_id: int, tile_idxs, *,
-                     n_frames: Optional[int] = None,
+                     n_frames=None,
                      blocks: Optional[dict] = None) -> dict[int, np.ndarray]:
         """Decode the given tile streams of a SOT up to n_frames.  Whole GOPs
         except the last, which stops at the last requested frame (temporal
-        random access never decodes past the request).
+        random access never decodes past the request).  ``n_frames`` is one
+        depth for every tile, or a ``tile_idx -> depth`` dict (a merged
+        group fetch decodes each tile only as deep as its deepest consumer).
 
         ``blocks``: optional ``tile_idx -> block mask`` (sorted tile-local
         8x8-block indices, or ``None`` for the full tile) — ROI-restricted
         decode: only masked blocks are dequantized/transformed, the rest of
         each returned array stays zero (see ``decode_tile``).  Tiles absent
-        from the dict decode fully."""
+        from the dict decode fully.
+
+        With ``decode_backend="batched"`` every (tile, GOP, mask) selection
+        of the call is flattened into fused accelerator dispatches
+        (``codec/batch.py``) instead of the per-tile numpy loop; arrays and
+        the decode counters are bit-identical either way."""
         rec = self.sots[sot_id]
         span = rec.frame_end - rec.frame_start
-        n_frames = span if n_frames is None else min(n_frames, span)
         gop = self.encoder.gop
-        n_full = n_frames // gop
-        tail = n_frames - n_full * gop
-        n_gops = n_full + (1 if tail else 0)
-        out = {}
         tile_idxs = list(tile_idxs)
+        if isinstance(n_frames, dict):
+            depth = {t: min(n_frames.get(t, span), span) for t in tile_idxs}
+        else:
+            nf = span if n_frames is None else min(n_frames, span)
+            depth = {t: nf for t in tile_idxs}
+        out = {}
         pixels = 0
+        plan = []   # (tile, enc, n_full, tail, mask)
         for t in tile_idxs:
+            nf = depth[t]
+            n_full = nf // gop
+            tail = nf - n_full * gop
+            n_gops = n_full + (1 if tail else 0)
             enc = self._read_tile(rec, t, n_gops=n_gops)
             mask = (blocks or {}).get(t)
             n_blocks = (enc["h"] // 8) * (enc["w"] // 8) if mask is None \
                 else len(mask)
-            pixels += n_blocks * 64 * n_frames
-            parts = []
-            if n_full:
-                parts.append(decode_tile(enc, gop_indices=range(n_full),
-                                         blocks=mask))
-            if tail:
-                parts.append(decode_tile(enc, gop_indices=[n_full],
-                                         frames_within=tail, blocks=mask))
-            out[t] = np.concatenate(parts, axis=0) if len(parts) > 1 else parts[0]
+            pixels += n_blocks * 64 * nf
+            plan.append((t, enc, n_full, tail, mask))
+        if self.decode_backend == "batched":
+            # jax rides in only when the batched backend is actually used
+            from repro.codec.batch import decode_tile_batch
+            owners, items = [], []
+            for t, enc, n_full, tail, mask in plan:
+                if n_full:
+                    owners.append(t)
+                    items.append((enc, list(range(n_full)), None, mask))
+                if tail:
+                    owners.append(t)
+                    items.append((enc, [n_full], tail, mask))
+            parts_by_tile: dict[int, list] = {}
+            for t, arr in zip(owners, decode_tile_batch(items)):
+                parts_by_tile.setdefault(t, []).append(arr)
+            for t, parts in parts_by_tile.items():
+                out[t] = (np.concatenate(parts, axis=0) if len(parts) > 1
+                          else parts[0])
+        else:
+            for t, enc, n_full, tail, mask in plan:
+                parts = []
+                if n_full:
+                    parts.append(decode_tile(enc, gop_indices=range(n_full),
+                                             blocks=mask))
+                if tail:
+                    parts.append(decode_tile(enc, gop_indices=[n_full],
+                                             frames_within=tail, blocks=mask))
+                out[t] = (np.concatenate(parts, axis=0) if len(parts) > 1
+                          else parts[0])
         with self._stats_lock:
             self.tiles_decoded_total += len(tile_idxs)
             self.pixels_decoded_total += pixels

@@ -1,4 +1,10 @@
-"""Jit'd public wrapper for the DCT+quant kernel with shape padding."""
+"""Jit'd public wrapper for the DCT+quant kernel with shape padding.
+
+Padding happens *outside* the jit and clamps to the shared power-of-two
+buckets (:func:`repro.kernels.decode.ops.pad_bucket`), so the jitted inner
+only ever sees one shape per octave — previously the whole wrapper was
+jitted on the raw block count and retraced for every distinct tile size.
+"""
 from __future__ import annotations
 
 import functools
@@ -7,17 +13,23 @@ import jax
 import jax.numpy as jnp
 
 from repro.kernels.dct.dct import BLK, dct_quant
+from repro.kernels.decode.ops import pad_bucket
 
 
 @functools.partial(jax.jit, static_argnames=("qp", "intra", "interpret"))
+def _dct_quant(blocks: jnp.ndarray, *, qp: int, intra: bool,
+               interpret: bool) -> jnp.ndarray:
+    return dct_quant(blocks, qp, intra, interpret=interpret,
+                     blk=min(BLK, blocks.shape[0]))
+
+
 def dct_quant_op(blocks: jnp.ndarray, *, qp: int, intra: bool,
                  interpret: bool = False) -> jnp.ndarray:
-    """[N, 8, 8] f32 -> [N, 8, 8] int16; pads N up to the kernel tile."""
+    """[N, 8, 8] f32 -> [N, 8, 8] int16; pads N up to the shared bucket."""
     n = blocks.shape[0]
-    blk = min(BLK, max(8, 1 << (n - 1).bit_length()))
-    pad = (-n) % blk
-    if pad:
+    padded = pad_bucket(n)
+    if padded != n:
         blocks = jnp.concatenate(
-            [blocks, jnp.zeros((pad, 8, 8), blocks.dtype)], axis=0)
-    out = dct_quant(blocks, qp, intra, interpret=interpret, blk=blk)
+            [blocks, jnp.zeros((padded - n, 8, 8), blocks.dtype)], axis=0)
+    out = _dct_quant(blocks, qp=qp, intra=intra, interpret=interpret)
     return out[:n]

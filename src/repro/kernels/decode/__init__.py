@@ -1,0 +1,6 @@
+from repro.kernels.decode.ops import (MIN_COLUMNS, decode_fused_op,
+                                      pad_bucket, use_pallas_default)
+from repro.kernels.decode.ref import decode_fused_ref
+
+__all__ = ["decode_fused_op", "decode_fused_ref", "pad_bucket",
+           "use_pallas_default", "MIN_COLUMNS"]

@@ -1,0 +1,46 @@
+"""jnp fused reference for the multi-tile batched decode — the XLA path.
+
+This is not just the kernel oracle: on non-TPU backends it IS the batched
+decode implementation (one jitted XLA dispatch per size bucket).  Every op
+is chosen to be bit-identical to the numpy ``decode_tile`` arithmetic:
+
+- dequant + the two 8x8 IDCT matmuls match ``np.einsum`` bitwise (same
+  two-GEMM contraction order);
+- the GOP reconstruction uses a *sequential* ``lax.scan`` prefix sum —
+  ``jnp.cumsum`` lowers to a log-depth parallel scan whose float
+  accumulation order differs from ``np.cumsum``, so it must not be used
+  here.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.codec.quant import quant_matrix
+from repro.codec.transform import dct_matrix
+
+
+def decode_fused_ref(q: jnp.ndarray, qp: int) -> jnp.ndarray:
+    """q: [F, M, 8, 8] int16 (row 0 intra, rows 1+ inter) -> [F, M, 8, 8]
+    f32 reconstructed frames (cumulative over F)."""
+    n_frames = q.shape[0]
+    d = jnp.asarray(dct_matrix())
+    mk = jnp.asarray(quant_matrix(qp, True))
+    mp = jnp.asarray(quant_matrix(qp, False))
+    if n_frames == 1:
+        scale = mk[None]
+    else:
+        scale = jnp.concatenate(
+            [mk[None], jnp.broadcast_to(mp, (n_frames - 1, 8, 8))], axis=0)
+    c = (q.astype(jnp.float32) * scale[:, None]).reshape(-1, 8, 8)
+    x = jnp.einsum("ji,njk->nik", d, c)
+    x = jnp.einsum("nik,kl->nil", x, d).reshape(q.shape)
+    if n_frames == 1:
+        return x
+
+    def step(carry, row):
+        s = carry + row
+        return s, s
+
+    _, rest = jax.lax.scan(step, x[0], x[1:])
+    return jnp.concatenate([x[:1], rest], axis=0)

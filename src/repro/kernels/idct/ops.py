@@ -1,4 +1,10 @@
-"""Jit'd public wrapper for the dequant+IDCT kernel with shape padding."""
+"""Jit'd public wrapper for the dequant+IDCT kernel with shape padding.
+
+Padding happens *outside* the jit and clamps to the shared power-of-two
+buckets (:func:`repro.kernels.decode.ops.pad_bucket`), so the jitted inner
+only ever sees one shape per octave — previously the whole wrapper was
+jitted on the raw block count and retraced for every distinct tile size.
+"""
 from __future__ import annotations
 
 import functools
@@ -6,16 +12,24 @@ import functools
 import jax
 import jax.numpy as jnp
 
+from repro.kernels.decode.ops import pad_bucket
 from repro.kernels.idct.idct import BLK, idct_dequant
 
 
 @functools.partial(jax.jit, static_argnames=("qp", "intra", "interpret"))
+def _idct_dequant(q: jnp.ndarray, *, qp: int, intra: bool,
+                  interpret: bool) -> jnp.ndarray:
+    return idct_dequant(q, qp, intra, interpret=interpret,
+                        blk=min(BLK, q.shape[0]))
+
+
 def idct_dequant_op(q: jnp.ndarray, *, qp: int, intra: bool,
                     interpret: bool = False) -> jnp.ndarray:
+    """[N, 8, 8] int16 -> [N, 8, 8] f32; pads N up to the shared bucket."""
     n = q.shape[0]
-    blk = min(BLK, max(8, 1 << (n - 1).bit_length()))
-    pad = (-n) % blk
-    if pad:
-        q = jnp.concatenate([q, jnp.zeros((pad, 8, 8), q.dtype)], axis=0)
-    out = idct_dequant(q, qp, intra, interpret=interpret, blk=blk)
+    padded = pad_bucket(n)
+    if padded != n:
+        q = jnp.concatenate([q, jnp.zeros((padded - n, 8, 8), q.dtype)],
+                            axis=0)
+    out = _idct_dequant(q, qp=qp, intra=intra, interpret=interpret)
     return out[:n]
