@@ -26,11 +26,22 @@ Hard gates (CI fails if cross-client sharing regresses):
   N x the tiles the shared server decodes for the same scans
   (deterministic counters, no timing involved).
 
-Throughput (scan-phase makespan, qps) is reported, and gated softly: it
-compares wall-clock of concurrent processes on one shared machine — the
-single server process serializes result marshalling while the N isolated
-baselines burn N cores — so it warns rather than fails (in every mode;
-CI runners are noisy).
+Throughput is gated HARD on end-to-end client makespan: the wall-clock a
+fresh client process needs to get its results — store build + scans for
+the isolated world, connect + scans for the served one — must favour the
+server (``speedup_served >= 1.0``).  That is the regime the paper argues:
+without a shared storage manager every analytics process re-ingests and
+re-decodes for itself.  The scan-phase-only split is still reported and
+soft-gated (``speedup_scan_only``): on a single-core runner it measures
+GIL time-slicing between N processes rather than storage sharing — the
+decode work being shared is memcpy-cheap in this synthetic codec while
+reply marshalling is a real added cost — so it warns rather than fails.
+Two transport gates ride along, both hard: served clients on a Unix
+socket must actually negotiate shm (when the host has /dev/shm), and an
+npz-transport client wave must produce byte-identical digests to the shm
+wave — flipping the transport can never change results.  The marshalling
+split (packing seconds, payload bytes, per-transport counts) is reported
+per wave and from the server's own ``stats()``.
 
     PYTHONPATH=src:. python benchmarks/fig_server.py              # full
     REPRO_QUICK=1 PYTHONPATH=src:. python benchmarks/fig_server.py  # smoke
@@ -51,8 +62,14 @@ import numpy as np
 from benchmarks.common import ENC, corpus_video, emit, gate, quick_mode
 
 QUICK = quick_mode()
+# The HARD makespan gate needs the workload in the regime the paper talks
+# about — decode-dominated.  At tiny resolutions GOP decode is ~3ms and
+# per-query planner overhead drowns the (N-1)x decode saving the shared
+# server exists to deliver, so the corpus here is larger than the other
+# figures' default (quick mode included).
 N_FRAMES = 96 if QUICK else 192
-N_CLIENTS = 2 if QUICK else 4
+HEIGHT, WIDTH = 288, 480
+N_CLIENTS = 3 if QUICK else 4
 SCANS_PER_CLIENT = 4 if QUICK else 8
 WINDOW = 32
 OUT = os.environ.get("REPRO_BENCH_OUT", "BENCH_server.json")
@@ -87,7 +104,7 @@ def build_local_store(cache: bool = True):
     from benchmarks.common import shared_cost_model
     from repro.core import NoTilingPolicy, VideoStore
 
-    frames, dets, _ = corpus_video("sparse", 0, N_FRAMES)
+    frames, dets, _ = corpus_video("sparse", 0, N_FRAMES, HEIGHT, WIDTH)
     store = VideoStore(tile_cache_bytes=None if cache else 0)
     store.add_video("cam0", encoder=ENC, policy=NoTilingPolicy(),
                     cost_model=shared_cost_model())
@@ -97,14 +114,29 @@ def build_local_store(cache: bool = True):
 
 
 # ------------------------------------------------------------- workers
+def _barrier(out_path: str) -> None:
+    """Align the measured scan phase across a wave's workers: signal
+    ready, then wait for the parent's go-file.  Without this the first
+    worker's scan window is polluted by its siblings' interpreter startup
+    (or store build) time-slicing the same machine — an artifact of
+    process staggering, not of the regime under test."""
+    pathlib.Path(out_path + ".ready").write_text("1")
+    deadline = time.time() + 300
+    while not os.path.exists(out_path + ".go"):
+        if time.time() > deadline:
+            raise RuntimeError("wave never released the start barrier")
+        time.sleep(0.005)
+
+
 def isolated_worker(out_path: str) -> None:
     """One pre-server client: its own store, its own decodes."""
     t0 = time.perf_counter()
     store = build_local_store()
     setup_s = time.perf_counter() - t0
     qs = workload(store)
+    _barrier(out_path)
     t0 = time.perf_counter()
-    results = [q.execute() for q in qs]
+    results = store.execute_many(qs)
     scan_s = time.perf_counter() - t0
     pathlib.Path(out_path).write_text(json.dumps(
         {"setup_s": setup_s, "scan_s": scan_s, "digest": digest(results),
@@ -112,19 +144,28 @@ def isolated_worker(out_path: str) -> None:
     store.close()
 
 
-def served_worker(sock: str, out_path: str) -> None:
+def served_worker(sock: str, transport: str, out_path: str) -> None:
     """One client process of the shared server."""
     from repro.core import RemoteVideoStore
 
-    with RemoteVideoStore(sock) as cli:
+    t0 = time.perf_counter()
+    cli = RemoteVideoStore(sock, transport=transport)
+    connect_s = time.perf_counter() - t0
+    with cli:
         qs = workload(cli)
+        _barrier(out_path)
         t0 = time.perf_counter()
-        results = [q.execute() for q in qs]
+        results = cli.execute_many(qs)
         scan_s = time.perf_counter() - t0
         pathlib.Path(out_path).write_text(json.dumps(
-            {"setup_s": 0.0, "scan_s": scan_s, "digest": digest(results),
+            {"setup_s": connect_s, "scan_s": scan_s,
+             "digest": digest(results),
              "cache_misses": sum(r.stats.cache_misses for r in results),
-             "cache_hits": sum(r.stats.cache_hits for r in results)}))
+             "cache_hits": sum(r.stats.cache_hits for r in results),
+             "transport": cli.transport,
+             "marshal_s": sum(r.stats.marshal_s for r in results),
+             "payload_bytes": sum(r.stats.payload_bytes
+                                  for r in results)}))
 
 
 def spawn(fn_name: str, *args: str) -> subprocess.Popen:
@@ -136,6 +177,15 @@ def spawn(fn_name: str, *args: str) -> subprocess.Popen:
 
 def run_wave(fn_name: str, outs: list[str], *extra: str) -> list[dict]:
     procs = [spawn(fn_name, *extra, out) for out in outs]
+    deadline = time.time() + 900
+    while not all(os.path.exists(o + ".ready") for o in outs):
+        if any(p.poll() not in (None, 0) for p in procs):
+            raise RuntimeError(f"a {fn_name} client died before ready")
+        if time.time() > deadline:
+            raise RuntimeError(f"{fn_name} clients never reached ready")
+        time.sleep(0.01)
+    for o in outs:  # release the start barrier for everyone at once
+        pathlib.Path(o + ".go").write_text("1")
     rcs = [p.wait(timeout=900) for p in procs]
     if any(rcs):
         raise RuntimeError(f"{fn_name} clients exited {rcs}")
@@ -143,7 +193,7 @@ def run_wave(fn_name: str, outs: list[str], *extra: str) -> list[dict]:
 
 
 def main() -> None:
-    corpus_video("sparse", 0, N_FRAMES)  # prime the cached generator
+    corpus_video("sparse", 0, N_FRAMES, HEIGHT, WIDTH)  # prime the cache
     tmp = tempfile.mkdtemp(prefix="tasm_fig_server_")
     n_queries = N_CLIENTS * SCANS_PER_CLIENT
     report: dict = {"n_clients": N_CLIENTS, "n_frames": N_FRAMES,
@@ -154,6 +204,7 @@ def main() -> None:
                    [f"{tmp}/iso{i}.json" for i in range(N_CLIENTS)])
     report["isolated"] = {
         "scan_makespan_s": max(w["scan_s"] for w in iso),
+        "e2e_makespan_s": max(w["setup_s"] + w["scan_s"] for w in iso),
         "setup_s_per_client": sum(w["setup_s"] for w in iso) / N_CLIENTS,
         "qps": n_queries / max(max(w["scan_s"] for w in iso), 1e-9)}
     gate(len({w["digest"] for w in iso}) == 1,
@@ -169,14 +220,30 @@ def main() -> None:
         tiles_cold = store.stats()["tiles_decoded_total"]
         served = run_wave("served_worker",
                           [f"{tmp}/srv{i}.json" for i in range(N_CLIENTS)],
-                          sock)
+                          sock, "auto")
         served_tiles = store.stats()["tiles_decoded_total"] - tiles_cold
         report["served"] = {
             "scan_makespan_s": max(w["scan_s"] for w in served),
+            "e2e_makespan_s": max(w["setup_s"] + w["scan_s"]
+                                  for w in served),
+            "connect_s_per_client": sum(w["setup_s"]
+                                        for w in served) / N_CLIENTS,
             "qps": n_queries / max(max(w["scan_s"] for w in served), 1e-9),
             "cache_misses": sum(w["cache_misses"] for w in served),
             "cache_hits": sum(w["cache_hits"] for w in served),
-            "tiles_decoded": served_tiles}
+            "tiles_decoded": served_tiles,
+            "transports": sorted({w["transport"] for w in served}),
+            "marshal_s": sum(w["marshal_s"] for w in served),
+            "payload_bytes": sum(w["payload_bytes"] for w in served)}
+
+        # zero-copy negotiation: same-host Unix-socket clients must land
+        # on the shm transport whenever the host offers shared memory
+        from repro.core.shm import shm_available
+        if shm_available():
+            gate(all(w["transport"] == "shm" for w in served),
+                 f"served clients negotiated "
+                 f"{report['served']['transports']} — expected every "
+                 "Unix-socket client on a /dev/shm host to ride shm")
 
         # decode-work efficiency, the deterministic heart of the matter:
         # N isolated stores each decode the full unique tile set; the
@@ -196,10 +263,27 @@ def main() -> None:
         gate(report["bit_identical"],
              "served client results diverge from in-process execute()")
 
+        # transport interop: an npz-pinned client wave must be byte-for-
+        # byte identical to the shm wave — the transport can never change
+        # what a query returns
+        (npz_wave,) = run_wave("served_worker", [f"{tmp}/npz.json"], sock,
+                               "socket")
+        report["npz_client"] = {
+            "transport": npz_wave["transport"],
+            "marshal_s": npz_wave["marshal_s"],
+            "payload_bytes": npz_wave["payload_bytes"],
+            "bit_identical": npz_wave["digest"] == ref}
+        gate(npz_wave["transport"] == "npz",
+             f"socket-pinned client negotiated {npz_wave['transport']!r}")
+        gate(npz_wave["digest"] == ref,
+             "shm and npz transports produce different bytes — zero-copy "
+             "path is corrupting results")
+
         # cross-process cache sharing: a fresh client process repeating
         # the (now warm) workload must decode NOTHING new
         tiles_before = store.stats()["tiles_decoded_total"]
-        (repeat,) = run_wave("served_worker", [f"{tmp}/repeat.json"], sock)
+        (repeat,) = run_wave("served_worker", [f"{tmp}/repeat.json"], sock,
+                             "auto")
         tiles_after = store.stats()["tiles_decoded_total"]
         report["repeat_client"] = {
             "cache_misses": repeat["cache_misses"],
@@ -213,16 +297,38 @@ def main() -> None:
              f"repeat client decoded {tiles_after - tiles_before} tiles")
         gate(repeat["digest"] == ref,
              "repeat client results diverge from in-process execute()")
+
+        # marshalling split: client-observed packing cost per wave plus
+        # the server's own per-transport accounting
+        report["marshalling"] = {
+            "served_shm": {
+                "marshal_s": report["served"]["marshal_s"],
+                "payload_bytes": report["served"]["payload_bytes"]},
+            "served_npz": {
+                "marshal_s": npz_wave["marshal_s"],
+                "payload_bytes": npz_wave["payload_bytes"]},
+            "server": store.stats()["marshalling"]}
     finally:
         server.stop()
         store.close()
 
-    report["speedup_served"] = (report["isolated"]["scan_makespan_s"]
-                                / max(report["served"]["scan_makespan_s"],
+    report["speedup_served"] = (report["isolated"]["e2e_makespan_s"]
+                                / max(report["served"]["e2e_makespan_s"],
                                       1e-9))
-    # soft in every mode: concurrent-process wall time on a shared machine
+    report["speedup_scan_only"] = (
+        report["isolated"]["scan_makespan_s"]
+        / max(report["served"]["scan_makespan_s"], 1e-9))
+    # HARD since the zero-copy transport: end-to-end, a fresh client of
+    # the shared server (connect + scan over shm) must beat a fresh
+    # isolated client (store build + scan)
     gate(report["speedup_served"] >= 1.0,
-         f"served makespan {report['served']['scan_makespan_s']:.3f}s "
+         f"served e2e makespan {report['served']['e2e_makespan_s']:.3f}s "
+         f"slower than isolated "
+         f"{report['isolated']['e2e_makespan_s']:.3f}s")
+    # soft: scan-phase-only wall on a shared machine measures process
+    # time-slicing more than storage sharing (see module docstring)
+    gate(report["speedup_scan_only"] >= 1.0,
+         f"served scan makespan {report['served']['scan_makespan_s']:.3f}s "
          f"slower than isolated "
          f"{report['isolated']['scan_makespan_s']:.3f}s", hard=False)
 
@@ -236,9 +342,18 @@ def main() -> None:
     emit("server_repeat_client", 1e6 * report["repeat_client"]["scan_s"]
          / SCANS_PER_CLIENT,
          f"tiles={report['repeat_client']['tiles_decoded']}")
+    m = report["marshalling"]
+    emit("server_marshal_shm",
+         1e6 * m["served_shm"]["marshal_s"] / n_queries,
+         f"bytes={int(m['served_shm']['payload_bytes'])}")
+    emit("server_marshal_npz",
+         1e6 * m["served_npz"]["marshal_s"] / SCANS_PER_CLIENT,
+         f"bytes={int(m['served_npz']['payload_bytes'])}")
     print(f"# wrote {OUT}: {N_CLIENTS} client processes, "
           f"{report['decode_work_ratio']:.1f}x less decode work shared, "
-          f"served speedup {report['speedup_served']:.2f}x, repeat-client "
+          f"served e2e speedup {report['speedup_served']:.2f}x "
+          f"(scan-only {report['speedup_scan_only']:.2f}x, "
+          f"{'/'.join(report['served']['transports'])}), repeat-client "
           f"tiles {report['repeat_client']['tiles_decoded']}, "
           f"bit_identical={report['bit_identical']}")
 

@@ -189,5 +189,28 @@ for srv in node_servers:
 for s in node_stores.values():
     s.close()
 
+# 13. zero-copy serving: on a same-host unix socket the server ships
+#     result arrays through POSIX shared memory — clients map the pages
+#     instead of copying them off the socket (transport="auto" negotiates
+#     it; "socket" forces the npz fallback used for TCP/cross-host).
+#     Both transports produce bit-identical bytes, and every reply's
+#     marshalling cost is stamped into its ScanStats.
+from repro.core.shm import shm_available
+
+sock13 = os.path.join(root, "tasm13.sock")
+with VideoStoreServer(reopened, path=sock13, owns_store=False).start():
+    with RemoteVideoStore(sock13) as fast, \
+         RemoteVideoStore(sock13, transport="socket") as slow:
+        r_shm = fast.scan("traffic").labels("car").frames(0, 64).execute()
+        r_npz = slow.scan("traffic").labels("car").frames(0, 64).execute()
+        same = all(a[:-1] == b[:-1] and np.array_equal(a[-1], b[-1])
+                   for a, b in zip(r_shm.regions, r_npz.regions))
+        print(f"\nzero-copy serving (shm available: {shm_available()}): "
+              f"negotiated {fast.transport!r} vs forced {slow.transport!r}, "
+              f"bit-identical: {same}; "
+              f"{r_shm.stats.payload_bytes} payload bytes marshalled in "
+              f"{r_shm.stats.marshal_s * 1e3:.2f} ms over "
+              f"{r_shm.stats.transport}")
+
 reopened.close()
 store.close()

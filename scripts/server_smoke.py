@@ -1,17 +1,24 @@
 #!/usr/bin/env python
 """Cross-process serving smoke: start ``tasm_serve.py`` on a Unix socket,
-run two concurrent client PROCESSES, and assert the serving contract:
+run two concurrent client PROCESSES, and assert the serving contract —
+once per reply transport (``--transport both``, the default, runs the
+whole smoke twice: a ``--transport shm`` server and a ``--transport
+socket`` one):
 
 - both clients' results are bit-identical to an in-process ``execute()``
   of the same scans on an identically-built local store;
+- every client negotiated the transport its server was started with
+  (``shm`` server -> clients report ``shm``; ``socket`` server -> ``npz``);
 - a repeat of the workload by a fresh client process decodes ZERO tiles
   (the tile cache is shared across the process boundary);
+- under shm, the server's segment pool drains back to zero once the
+  client processes exit (no leaked leases);
 - SIGTERM shuts the server down cleanly (exit code 0, socket file gone,
   no orphaned process).
 
 Exits non-zero on any violation — this is the CI server-smoke step::
 
-    python scripts/server_smoke.py
+    python scripts/server_smoke.py --transport shm
 
 The script doubles as its own client: ``server_smoke.py --client SOCK OUT``
 connects, runs the canonical workload, and writes results to ``OUT.npz`` +
@@ -19,6 +26,7 @@ connects, runs the canonical workload, and writes results to ``OUT.npz`` +
 """
 from __future__ import annotations
 
+import argparse
 import json
 import os
 import pathlib
@@ -43,6 +51,8 @@ N_FRAMES, H, W = 48, 96, 160
 #: the canonical two-client workload: overlapping windows over two labels
 WORKLOAD = [("car", (0, 32)), ("person", (16, 48)), ("car", (16, 48)),
             ("car", (0, 48))]
+#: client-visible transport expected per server transport flag
+EXPECT = {"shm": "shm", "socket": "npz"}
 
 
 def corpus():
@@ -58,16 +68,20 @@ def run_workload(store):
 # --------------------------------------------------------------- client
 def client_main(sock_path: str, out: str) -> int:
     with RemoteVideoStore(sock_path) as cli:
+        transport = cli.transport
         results = run_workload(cli)
-    arrays, meta = {}, []
-    for i, r in enumerate(results):
-        regs = []
-        for j, (f, box, px) in enumerate(r.regions):
-            arrays[f"px_{i}_{j}"] = px
-            regs.append([f, list(box)])
-        meta.append({"regions": regs,
-                     "cache_misses": r.stats.cache_misses,
-                     "cache_hits": r.stats.cache_hits})
+        arrays, meta = {}, []
+        for i, r in enumerate(results):
+            regs = []
+            for j, (f, box, px) in enumerate(r.regions):
+                arrays[f"px_{i}_{j}"] = np.ascontiguousarray(px)
+                regs.append([f, list(box)])
+            meta.append({"regions": regs,
+                         "cache_misses": r.stats.cache_misses,
+                         "cache_hits": r.stats.cache_hits,
+                         "transport": transport,
+                         "marshal_s": r.stats.marshal_s,
+                         "payload_bytes": r.stats.payload_bytes})
     np.savez(out + ".npz", **arrays)
     pathlib.Path(out + ".json").write_text(json.dumps(meta))
     return 0
@@ -112,16 +126,15 @@ def wait_for_socket(path: str, proc, timeout: float = 60.0) -> None:
     raise RuntimeError("server socket never came up")
 
 
-def main() -> int:
-    if len(sys.argv) > 1 and sys.argv[1] == "--client":
-        return client_main(sys.argv[2], sys.argv[3])
-
-    tmp = tempfile.mkdtemp(prefix="tasm_smoke_")
+def smoke(transport: str) -> None:
+    """One full smoke pass against a ``--transport <transport>`` server."""
+    expected = EXPECT[transport]
+    tmp = tempfile.mkdtemp(prefix=f"tasm_smoke_{transport}_")
     sock_path = os.path.join(tmp, "tasm.sock")
     here = os.path.dirname(os.path.abspath(__file__))
     server = subprocess.Popen(
         [sys.executable, os.path.join(here, "tasm_serve.py"),
-         "--socket", sock_path])
+         "--socket", sock_path, "--transport", transport])
     try:
         wait_for_socket(sock_path, server)
         frames, dets = corpus()
@@ -146,12 +159,20 @@ def main() -> int:
         rcs = [c.wait(timeout=300) for c in clients]
         assert rcs == [0, 0], f"client exit codes {rcs}"
         got = [load_client(out) for out in outs]
+        for out in got:
+            for _, m in out:
+                assert m["transport"] == expected, (
+                    f"client negotiated {m['transport']!r}, expected "
+                    f"{expected!r} from a --transport {transport} server")
         for (regions, _), ref in zip(got[0], reference):
             assert_same_regions(ref.regions, regions, "client1 vs local")
         for (r1, _), (r2, _) in zip(got[0], got[1]):
             assert_same_regions(r1, r2, "client1 vs client2")
-        print(f"# two concurrent clients bit-identical to in-process "
-              f"execute ({sum(len(r) for r, _ in got[0])} regions)")
+        marshal = sum(m["marshal_s"] for out in got for _, m in out)
+        print(f"# [{transport}] two concurrent clients bit-identical to "
+              f"in-process execute "
+              f"({sum(len(r) for r, _ in got[0])} regions, "
+              f"negotiated {expected}, marshal {marshal:.4f}s)")
 
         # a fresh third process repeating the workload must decode nothing
         with RemoteVideoStore(sock_path) as probe:
@@ -170,21 +191,54 @@ def main() -> int:
             f"repeat client decoded {tiles_after - tiles_before} tiles")
         for (r1, _), (r3, _) in zip(got[0], repeat):
             assert_same_regions(r1, r3, "client1 vs warm repeat")
-        print("# warm repeat from a fresh process decoded 0 tiles "
-              f"({misses} misses)")
+        print(f"# [{transport}] warm repeat from a fresh process decoded "
+              f"0 tiles ({misses} misses)")
+
+        # no leaked leases: with every client gone, the pool drains to 0
+        # (poll briefly — the connection-drop release can lag the client
+        # process's exit by a scheduler tick)
+        if transport == "shm":
+            deadline = time.time() + 30
+            with RemoteVideoStore(sock_path, transport="socket") as probe:
+                while True:
+                    shm_stats = probe.stats().get("shm")
+                    assert shm_stats is not None, "server lost shm stats"
+                    if shm_stats["segments"] == 0:
+                        break
+                    assert time.time() < deadline, (
+                        f"segment pool leaked {shm_stats['segments']} "
+                        f"segments ({shm_stats['bytes']} bytes) after "
+                        f"clients exited")
+                    time.sleep(0.1)
+            print(f"# [{transport}] segment pool drained to 0 after "
+                  f"clients exited")
 
         # clean shutdown: SIGTERM -> exit 0, socket unlinked, no orphan
         server.send_signal(signal.SIGTERM)
         rc = server.wait(timeout=60)
         assert rc == 0, f"server exit code {rc}"
         assert not os.path.exists(sock_path), "socket file left behind"
-        print("# clean shutdown: exit 0, socket removed")
-        print("server_smoke,0.0,ok")
-        return 0
+        print(f"# [{transport}] clean shutdown: exit 0, socket removed")
     finally:
         if server.poll() is None:
             server.kill()
             server.wait(timeout=30)
+
+
+def main() -> int:
+    if len(sys.argv) > 1 and sys.argv[1] == "--client":
+        return client_main(sys.argv[2], sys.argv[3])
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--transport", default="both",
+                    choices=("shm", "socket", "both"),
+                    help="which reply transport(s) to smoke (default both)")
+    args = ap.parse_args()
+    transports = (["shm", "socket"] if args.transport == "both"
+                  else [args.transport])
+    for transport in transports:
+        smoke(transport)
+    print("server_smoke,0.0,ok")
+    return 0
 
 
 if __name__ == "__main__":

@@ -49,6 +49,13 @@ def parse_args(argv=None) -> argparse.Namespace:
     ap.add_argument("--codec", default=None, choices=("msgpack", "json"),
                     help="wire codec for responses (default: msgpack when "
                          "installed, else json)")
+    ap.add_argument("--transport", default=None,
+                    choices=("shm", "socket", "auto"),
+                    help="scan-reply transport: shm = require the "
+                         "zero-copy shared-memory path, socket = npz "
+                         "payloads only, auto = offer shm to clients "
+                         "that prove they share /dev/shm (default: "
+                         "$REPRO_TRANSPORT, else auto)")
     ap.add_argument("--max-batch", type=int, default=64,
                     help="micro-batch cap of the shared serving session")
     ap.add_argument("--decode-backend", default=None,
@@ -78,7 +85,8 @@ def main(argv=None) -> int:
                        tuning=args.tuning,
                        decode_backend=args.decode_backend)
     server = VideoStoreServer(store, codec=args.codec,
-                              max_batch=args.max_batch, **kw)
+                              max_batch=args.max_batch,
+                              transport=args.transport, **kw)
     server.start()
 
     def _shutdown(signum, frame):
@@ -88,6 +96,7 @@ def main(argv=None) -> int:
     signal.signal(signal.SIGINT, _shutdown)
     print(f"TASM serving on {server.address} "
           f"(pid {os.getpid()}, codec {args.codec or wire.default_codec()}, "
+          f"transport {server.transport}, "
           f"store {args.store_root or '<memory>'})", flush=True)
     server.serve_forever()
     return 0

@@ -11,7 +11,9 @@ physical tuner (``tuner.py``; ``tuning="background"|"inline"|"off"``).
 Cross-process serving: ``VideoStoreServer`` (``server.py``) exposes one
 store over a Unix/TCP socket (``wire.py``) and ``RemoteVideoStore``
 (``client.py``) mirrors the declarative surface, so many client processes
-share one scheduler, tile cache, and tuner.  The deprecated single-video
+share one scheduler, tile cache, and tuner; same-host clients negotiate
+the zero-copy shared-memory reply transport (``shm.py``), with npz
+payloads as the remote/TCP fallback.  The deprecated single-video
 ``TASM`` facade remains as a shim.
 """
 from repro.core.client import (RemoteError, RemoteScanQuery,
@@ -44,6 +46,7 @@ from repro.core.query import (PhysicalPlan, ScanPlan, ScanQuery, ScanResult,
 from repro.core.scheduler import ScanScheduler, ServingSession
 from repro.core.semantic_index import SemanticIndex
 from repro.core.server import VideoStoreServer
+from repro.core.shm import SegmentPool, shm_available
 from repro.core.storage import TileStore
 from repro.core.tasm import TASM
 from repro.core.tile_cache import CacheStats, TileCache

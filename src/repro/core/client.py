@@ -20,6 +20,17 @@ scan RPCs through one shared ``ServingSession``).  Results are
 bit-identical to in-process ``execute()`` — region tuples, pixel crops
 (npz round-trip preserves dtype/bits), and ScanStats all cross the wire.
 
+Transport: with ``transport="auto"`` (default; ``$REPRO_TRANSPORT``
+overrides) a unix-socket client negotiates the server's zero-copy
+shared-memory reply path — region arrays arrive as read-only numpy views
+onto server-written /dev/shm segments instead of bytes copied off the
+socket — falling back silently to the npz payload when the server
+declines (TCP, ``--transport socket``, no /dev/shm).  ``transport="shm"``
+raises if negotiation fails; ``transport="socket"`` never negotiates.
+Segment leases are refcounted: each view's garbage collection (or
+``close()``) releases its segment back to the server.  Bits are identical
+on either transport.
+
 One socket, pipelined: requests carry ids; a reader thread resolves
 response frames to their futures, so many in-flight scans share the
 connection without head-of-line blocking on the server side (scan replies
@@ -34,12 +45,15 @@ import dataclasses
 import socket
 import threading
 import time
+import weakref
+from collections import deque
 from concurrent.futures import Future
 from typing import Optional
 
 import numpy as np
 
 from repro.core import wire
+from repro.core.shm import attach_segment, resolve_transport, shm_available
 from repro.core.engine import IngestStats
 from repro.core.policies import Policy, policy_spec
 from repro.core.query import (PhysicalPlan, ScanPlan, ScanQuery, ScanResult)
@@ -135,6 +149,37 @@ class RemoteServingSession:
         self.close()
 
 
+class _SegmentLease:
+    """One reply's shared-memory segment on the client side.
+
+    Each top-level array built on the mapping registers a finalizer that
+    derefs this lease; numpy's base-chain keeps a top-level array alive as
+    long as any derived view of it exists, so the last deref really is the
+    last reader.  ``deref`` runs in GC context — it may fire on ANY thread
+    at ANY allocation, including while that thread holds the client's
+    locks — so it must be lock-free: it only moves the lease onto the
+    owning client's release deque (GIL-atomic append).  The client's
+    janitor thread does the actual unmapping and the ``shm_release`` RPC."""
+
+    __slots__ = ("name", "seg", "_tokens", "_done_buf")
+
+    def __init__(self, name: str, seg, n_arrays: int, done_buf):
+        self.name = name
+        self.seg = seg
+        self._tokens = [None] * n_arrays
+        self._done_buf = done_buf
+
+    def deref(self) -> None:
+        try:
+            self._tokens.pop()
+        except IndexError:  # pragma: no cover - duplicate final deref
+            return
+        if not self._tokens:
+            # racing final derefs may BOTH land here (pop then observe
+            # empty) — the janitor dedupes by name, so that's harmless
+            self._done_buf.append(self)
+
+
 class RemoteVideoStore:
     """Connect to a :class:`~repro.core.server.VideoStoreServer`."""
 
@@ -144,6 +189,7 @@ class RemoteVideoStore:
                  codec: Optional[str] = None,
                  max_frame_bytes: int = wire.DEFAULT_MAX_FRAME_BYTES,
                  want_plans: bool = True,
+                 transport: Optional[str] = None,
                  retries: int = 0, retry_backoff: float = 0.05):
         """``retries`` > 0 turns on reconnect-with-retry for *idempotent*
         RPCs (scans, explain, stats, …): a ConnectionError tears the
@@ -160,6 +206,7 @@ class RemoteVideoStore:
         self.codec = codec
         self.max_frame_bytes = int(max_frame_bytes)
         self.want_plans = bool(want_plans)
+        self.transport_mode = resolve_transport(transport)
         self.retries = int(retries)
         self.retry_backoff = float(retry_backoff)
         self._path, self._host, self._port = path, host, port
@@ -171,8 +218,21 @@ class RemoteVideoStore:
         self._next_id = 0
         self._closed = False
         self._last_ingest_epochs: dict[int, int] = {}
+        self._leases: dict[str, _SegmentLease] = {}
+        self._lease_lock = threading.Lock()
+        # leases whose last view was GC'd, appended lock-free by
+        # finalizers; drained (unmap + release RPC) by the janitor thread
+        self._done_leases: deque = deque()
+        self._janitor: Optional[threading.Thread] = None
+        self._janitor_stop = threading.Event()
+        self._transport = "npz"
         self._sock = self._connect()
         self._reader = self._start_reader()
+        try:
+            self._transport = self._negotiate_transport()
+        except BaseException:
+            self.close()
+            raise
 
     # ------------------------------------------------------------ plumbing
     def _connect(self) -> socket.socket:
@@ -216,6 +276,142 @@ class RemoteVideoStore:
             with self._pending_lock:
                 self._dead = None
             self._reader = self._start_reader()
+        # leases from the old connection are already server-reclaimed (its
+        # drop sweep); our mappings stay valid (POSIX unlink semantics) and
+        # their finalizer releases turn into ignored unknown-name RPCs.
+        # Negotiation is a normal RPC, so it must run OUTSIDE _send_lock.
+        self._transport = self._negotiate_transport()
+
+    # ---------------------------------------------------------- transport
+    @property
+    def transport(self) -> str:
+        """What this connection's scan replies ride: ``"shm"`` or
+        ``"npz"``."""
+        return self._transport
+
+    def _negotiate_transport(self) -> str:
+        """Probe for the zero-copy reply path: attach the server's nonce
+        segment, read the nonce back, and echo it through ``shm_enable`` —
+        proof that both sides map the SAME /dev/shm (a remote peer, or a
+        container with a private shm namespace, fails the readback and
+        stays on npz).  ``transport="shm"`` escalates any failure;
+        ``"auto"`` falls back silently; ``"socket"`` never probes."""
+        mode = self.transport_mode
+        if mode == "socket":
+            return "npz"
+        if mode == "auto" and (self._path is None or not shm_available()):
+            return "npz"  # TCP peers don't share a host; don't even probe
+        try:
+            probe = self._request("shm_probe").result()
+            if not probe.get("enabled"):
+                raise RuntimeError(
+                    "server declines shared-memory transport")
+            seg = attach_segment(probe["segment"])
+            try:
+                nonce = bytes(seg.buf[:int(probe["nbytes"])]).hex()
+            finally:
+                seg.close()
+            if not self._request("shm_enable", segment=probe["segment"],
+                                 nonce=nonce).result():
+                raise RuntimeError("shared-memory nonce verification "
+                                   "failed")
+            return "shm"
+        except Exception as e:  # noqa: BLE001 - fallback is the contract
+            if mode == "shm":
+                raise RuntimeError(
+                    f"transport='shm' unavailable: {e}") from e
+            return "npz"
+
+    def _shm_read(self, shm_doc: dict) -> list:
+        """``wire`` shm reader: map the reply's segment and build
+        read-only array views onto it (zero copies).  Runs on the reader
+        thread, so a bad descriptor poisons only this connection."""
+        name = str(shm_doc["seg"])
+        items = shm_doc.get("items") or []
+        seg = attach_segment(name)
+        if not items:  # degenerate: no arrays — nothing to hold the lease
+            seg.close()
+            self._release_segments([name])
+            return []
+        lease = _SegmentLease(name, seg, len(items), self._done_leases)
+        views = []
+        for off, shape, dtype in items:
+            shape = tuple(int(s) for s in shape)
+            count = 1
+            for s in shape:
+                count *= s
+            a = np.frombuffer(seg.buf, dtype=np.dtype(str(dtype)),
+                              count=count, offset=int(off))
+            a.flags.writeable = False
+            a = a.reshape(shape)
+            weakref.finalize(a, lease.deref)
+            views.append(a)
+        with self._lease_lock:
+            self._leases[name] = lease
+            if self._janitor is None:
+                self._janitor = threading.Thread(
+                    target=self._janitor_loop,
+                    name="tasm-client-janitor", daemon=True)
+                self._janitor.start()
+        return views
+
+    def _janitor_loop(self) -> None:
+        """Drain GC'd leases every 50 ms: unmap the segment and tell the
+        server to unlink it.  A dedicated thread because finalizers must
+        not unmap or RPC themselves — they fire mid-allocation on
+        arbitrary threads, possibly while THAT thread holds the very
+        locks the release path needs."""
+        while not self._janitor_stop.wait(0.05):
+            self._drain_done_leases()
+        self._drain_done_leases()
+
+    def _drain_done_leases(self) -> None:
+        names = []
+        seen = set()
+        while True:
+            try:
+                lease = self._done_leases.popleft()
+            except IndexError:
+                break
+            if lease.name in seen:  # racing final derefs may duplicate
+                continue
+            seen.add(lease.name)
+            try:
+                lease.seg.close()
+            except BufferError:  # pragma: no cover - dealloc mid-flight
+                self._done_leases.append(lease)  # retry next tick
+                continue
+            names.append(lease.name)
+        if names:
+            self._release_segments(names)
+
+    def _release_segments(self, names: list) -> None:
+        """Fire-and-forget lease release (a redundant release of an
+        already-reclaimed name is ignored by the server).  Connection
+        failures are swallowed — a dead connection's leases are reclaimed
+        by the server's drop sweep."""
+        with self._lease_lock:
+            for n in names:
+                self._leases.pop(n, None)
+        try:
+            self._request("shm_release", segments=list(names))
+        except BaseException:  # noqa: BLE001 - best effort
+            pass
+
+    def _flush_leases(self) -> None:
+        """Release every outstanding lease and wait briefly for the
+        server to acknowledge — close() calls this BEFORE the socket goes
+        down so a well-behaved exit leaves zero segments behind even if
+        this process never runs another GC."""
+        self._drain_done_leases()
+        with self._lease_lock:
+            names, self._leases = list(self._leases), {}
+        if not names:
+            return
+        try:
+            self._request("shm_release", segments=names).result(timeout=5)
+        except BaseException:  # noqa: BLE001 - server sweep covers us
+            pass
 
     def _with_retry(self, fn):
         """Run ``fn`` (which must be safe to repeat), reconnecting and
@@ -240,19 +436,23 @@ class RemoteVideoStore:
         try:
             while True:
                 resp = wire.read_frame(sock,
-                                       max_bytes=self.max_frame_bytes)
+                                       max_bytes=self.max_frame_bytes,
+                                       shm_reader=self._shm_read)
                 rid = resp.get("id")
                 with self._pending_lock:
                     fut = self._pending.pop(rid, None)
-                if fut is None:
-                    continue  # response to an abandoned request
-                if resp.get("ok"):
-                    fut.set_result(resp.get("value"))
-                else:
-                    try:
-                        _raise_remote(resp.get("error") or {})
-                    except BaseException as e:  # noqa: BLE001
-                        fut.set_exception(e)
+                if fut is not None:
+                    if resp.get("ok"):
+                        fut.set_result(resp.get("value"))
+                    else:
+                        try:
+                            _raise_remote(resp.get("error") or {})
+                        except BaseException as e:  # noqa: BLE001
+                            fut.set_exception(e)
+                # clear the loop locals NOW: left bound while blocked in
+                # recv they would pin the reply's arrays (and their shm
+                # leases) until the next frame happens to arrive
+                fut = resp = None
         except BaseException as e:  # noqa: BLE001 - fail all pending
             err = e
         if isinstance(err, wire.ConnectionClosed):
@@ -302,6 +502,13 @@ class RemoteVideoStore:
         with self._send_lock:
             if self._closed:
                 return
+        # release outstanding shm leases over the still-open connection
+        # (idempotent if two closers race — the server ignores unknown
+        # names); must precede _closed, which _request refuses
+        self._flush_leases()
+        with self._send_lock:
+            if self._closed:
+                return
             self._closed = True
         try:
             self._sock.shutdown(socket.SHUT_RDWR)
@@ -309,6 +516,9 @@ class RemoteVideoStore:
             pass
         self._sock.close()
         self._reader.join(timeout=5)
+        self._janitor_stop.set()
+        if self._janitor is not None:
+            self._janitor.join(timeout=5)
 
     def __enter__(self) -> "RemoteVideoStore":
         return self

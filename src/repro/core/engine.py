@@ -603,6 +603,18 @@ class VideoStore:
                        "storage_bytes": e.store.storage_bytes(),
                        "queries": len(e.history)}
                 for name, e in self._videos.items()}
+            # reply-marshalling accounting: per-query ScanStats objects in
+            # history are stamped IN PLACE by the serving layer after the
+            # reply ships, so served queries show up here with their
+            # transport and packing cost (in-process queries contribute 0)
+            by_transport: dict[str, int] = {}
+            marshal_s = payload_bytes = 0.0
+            for s in self.history:
+                marshal_s += s.marshal_s
+                payload_bytes += s.payload_bytes
+                if s.transport:
+                    by_transport[s.transport] = \
+                        by_transport.get(s.transport, 0) + 1
             return {"videos": self.videos(),
                     "queries": len(self.history),
                     "storage_bytes": self.storage_bytes(),
@@ -612,6 +624,9 @@ class VideoStore:
                         v["pixels_decoded_total"]
                         for v in per_video.values()),
                     "per_video": per_video,
+                    "marshalling": {"marshal_s": marshal_s,
+                                    "payload_bytes": payload_bytes,
+                                    "by_transport": by_transport},
                     "cache": dataclasses.asdict(self.tile_cache.stats())}
 
     # ------------------------------------------------------------- manifest

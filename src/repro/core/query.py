@@ -65,7 +65,16 @@ class ScanStats:
     ``tuning="background"`` (the ``VideoStore`` default) queries are never
     charged tuning work: re-tiles run on the tuner thread and are
     observable only via :class:`~repro.core.tuner.TunerStats` and
-    ``store.drain_tuner()``."""
+    ``store.drain_tuner()``.
+
+    ``marshal_s``/``payload_bytes``/``transport`` — reply-marshalling
+    accounting, stamped by the serving layer as the result crosses a
+    process boundary (all-zero/empty for in-process execution).
+    ``marshal_s`` is seconds spent building the reply doc and packing its
+    payload; ``payload_bytes`` is the packed size of the region arrays
+    (npz blob bytes on the socket transport, raw shared bytes on shm);
+    ``transport`` is ``"shm"`` or ``"npz"`` — what this result actually
+    rode."""
     lookup_s: float = 0.0
     decode_s: float = 0.0
     retile_s: float = 0.0
@@ -75,6 +84,9 @@ class ScanStats:
     cache_hits: int = 0
     cache_misses: int = 0
     regions: int = 0
+    marshal_s: float = 0.0
+    payload_bytes: float = 0.0
+    transport: str = ""
 
     @property
     def tiles_fetched(self) -> int:
@@ -351,9 +363,14 @@ def merge_results(plan: ScanPlan, parts: list) -> ScanResult:
     else:
         regions = [(v, f, b, px) for v in plan.videos
                    for f, b, px in rbv.get(v, [])]
+    # numeric stats sum; the (string) transport field merges to the common
+    # value when every part rode the same transport, else "mixed"
+    transports = {r.stats.transport for r in parts if r.stats.transport}
     stats = ScanStats(**{
         f.name: sum(getattr(r.stats, f.name) for r in parts)
-        for f in dataclasses.fields(ScanStats)})
+        for f in dataclasses.fields(ScanStats) if f.name != "transport"},
+        transport=transports.pop() if len(transports) == 1
+        else "mixed" if transports else "")
     merged_plan = None
     if parts and all(r.plan is not None for r in parts):
         merged_plan = PhysicalPlan(

@@ -112,6 +112,7 @@ class ScanScheduler:
         self.max_workers = max_workers or engine.max_decode_workers
         self.lock = threading.RLock()
         self._pool: Optional[ThreadPoolExecutor] = None
+        self._pool_lock = threading.Lock()
 
     # ----------------------------------------------------------- frontend
     def _normalize(self, plan) -> PhysicalPlan:
@@ -139,19 +140,31 @@ class ScanScheduler:
 
     # -------------------------------------------------------------- batch
     def _ensure_pool(self) -> ThreadPoolExecutor:
-        if self._pool is None:
-            self._pool = ThreadPoolExecutor(
-                max_workers=self.max_workers,
-                thread_name_prefix="tasm-decode")
-        return self._pool
+        with self._pool_lock:
+            if self._pool is None:
+                self._pool = ThreadPoolExecutor(
+                    max_workers=self.max_workers,
+                    thread_name_prefix="tasm-decode")
+            return self._pool
+
+    def offload(self, fn, *args):
+        """Run ``fn(*args)`` on the decode worker pool WITHOUT taking the
+        batch lock — the serving layer uses this to marshal replies (doc
+        building + payload packing) off its dispatcher thread, and those
+        jobs must not queue behind in-flight batches.  Returns the
+        future.  Like ``execute``, a call after ``shutdown`` re-creates
+        the pool on demand; only a submit RACING the shutdown raises
+        ``RuntimeError`` (callers fall back to running inline)."""
+        return self._ensure_pool().submit(fn, *args)
 
     def shutdown(self) -> None:
         """Release the worker pool (idempotent; a later batch re-creates
         it on demand)."""
         with self.lock:
-            if self._pool is not None:
-                self._pool.shutdown(wait=True)
-                self._pool = None
+            with self._pool_lock:
+                pool, self._pool = self._pool, None
+            if pool is not None:
+                pool.shutdown(wait=True)
 
     def _execute_batch(self, pplans: list[PhysicalPlan]) -> list[ScanResult]:
         groups: dict[GroupKey, list[tuple[int, SOTScan]]] = {}

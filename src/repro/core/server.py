@@ -30,6 +30,17 @@ connection; the server — and every other client — keeps running.
 Durable mutations (``ingest``/``add_detections``/``retile``/…) run inline
 on the connection thread through the engine's own locking, so they
 serialize against scans the same way in-process callers do.
+
+Zero-copy transport: scan replies to same-host clients ride a
+shared-memory :class:`~repro.core.shm.SegmentPool` — the reply's region
+arrays are written once into a leased segment and only ``(segment,
+offset, shape, dtype)`` descriptors cross the socket (``transport="shm"``,
+negotiated per connection via a nonce probe that proves /dev/shm is
+genuinely shared).  Remote/TCP peers, declined probes, and pool overflow
+fall back to the npz payload automatically.  Reply *marshalling* (doc
+building + payload packing) runs on the scheduler's worker pool, not the
+serving session's dispatcher thread, so replies to many clients encode in
+parallel on either transport.
 """
 from __future__ import annotations
 
@@ -39,6 +50,8 @@ import pathlib
 import queue
 import socket
 import threading
+import time
+from concurrent.futures import ThreadPoolExecutor
 from typing import Optional
 
 from repro.codec.encode import EncoderConfig
@@ -48,6 +61,8 @@ from repro.core.engine import VideoStore
 from repro.core.layout import TileLayout
 from repro.core.policies import policy_from_spec
 from repro.core.query import ScanPlan
+from repro.core.shm import (SegmentPool, resolve_transport, shm_available,
+                            DEFAULT_POOL_BYTES)
 
 
 def _cost_model_from_doc(doc: Optional[dict]) -> Optional[CostModel]:
@@ -85,6 +100,26 @@ def _detections_from_doc(pairs) -> dict:
             for f, dets in pairs}
 
 
+class _ConnState:
+    """Per-connection serving state: the socket, its bounded reply queue,
+    and the shared-memory lease identity.  The state object itself is the
+    ``owner`` token segments are leased under, so reclaiming a dead
+    connection's segments is an identity lookup, not bookkeeping."""
+
+    __slots__ = ("sock", "outq", "shm", "closed")
+
+    def __init__(self, sock: socket.socket):
+        self.sock = sock
+        # responses go through a bounded per-connection queue drained by a
+        # writer thread: scan replies arrive from marshalling workers, and
+        # a blocking sendall to ONE stalled client there would wedge every
+        # other client's replies.  A full queue means the client stopped
+        # reading — drop it.
+        self.outq: queue.Queue = queue.Queue(maxsize=256)
+        self.shm = False      # negotiated: replies may ride shared memory
+        self.closed = False   # teardown begun: release, don't lease
+
+
 class VideoStoreServer:
     """Serve one :class:`VideoStore` to many client processes.
 
@@ -93,6 +128,11 @@ class VideoStoreServer:
     must be given.  Use as a context manager, or ``start()`` /
     ``stop()`` explicitly; :meth:`serve_forever` blocks until
     :meth:`stop` (e.g. from a signal handler) is called.
+
+    ``transport`` — ``"auto"`` (default; ``$REPRO_TRANSPORT`` overrides)
+    offers the shared-memory reply path to clients that prove they share
+    /dev/shm, ``"shm"`` requires it (``start()`` raises when unavailable),
+    ``"socket"`` disables it (every reply rides the npz payload).
 
     ``owns_store=True`` (default) closes the store on ``stop()``.
     """
@@ -103,6 +143,8 @@ class VideoStoreServer:
                  max_frame_bytes: int = wire.DEFAULT_MAX_FRAME_BYTES,
                  codec: Optional[str] = None,
                  max_batch: int = 64,
+                 transport: Optional[str] = None,
+                 shm_max_bytes: int = DEFAULT_POOL_BYTES,
                  owns_store: bool = True):
         if (path is None) == (host is None):
             raise ValueError("give exactly one of path= (unix socket) or "
@@ -113,12 +155,17 @@ class VideoStoreServer:
         self.max_frame_bytes = int(max_frame_bytes)
         self.codec = codec  # None = wire.default_codec()
         self.max_batch = max_batch
+        self.transport = resolve_transport(transport)
+        self.shm_max_bytes = int(shm_max_bytes)
         self.owns_store = owns_store
         self._listener: Optional[socket.socket] = None
         self._session = None
         self._accept_thread: Optional[threading.Thread] = None
-        self._conns: set[socket.socket] = set()
+        self._conns: dict[socket.socket, _ConnState] = {}
         self._conn_lock = threading.Lock()
+        self._shm_pool: Optional[SegmentPool] = None
+        self._marshal_pool: Optional[ThreadPoolExecutor] = None
+        self._marshal_lock = threading.Lock()
         self._stopped = threading.Event()
         self._cleanup_done = threading.Event()
         self._stop_lock = threading.Lock()
@@ -138,6 +185,13 @@ class VideoStoreServer:
         if self._started:
             raise RuntimeError("server already started")
         self._started = True
+        if self.transport != "socket":
+            # probe BEFORE binding so a refusal leaves no socket file
+            if shm_available():
+                self._shm_pool = SegmentPool(max_bytes=self.shm_max_bytes)
+            elif self.transport == "shm":
+                raise RuntimeError("transport='shm' but shared memory is "
+                                   "unavailable on this host")
         if self.path is not None:
             p = pathlib.Path(self.path)
             if p.exists() and p.is_socket():
@@ -237,6 +291,15 @@ class VideoStoreServer:
                 pathlib.Path(self.path).unlink()
             except OSError:
                 pass
+        with self._marshal_lock:
+            pool, self._marshal_pool = self._marshal_pool, None
+        if pool is not None:
+            pool.shutdown(wait=True)
+        if self._shm_pool is not None:
+            # after the session drained and marshal workers finished: no
+            # new segments can be written, outstanding ones unlink here
+            # (clients still mapping them keep valid pages)
+            self._shm_pool.close()
         if self.owns_store:
             self.store.close()
         self._cleanup_done.set()
@@ -255,20 +318,15 @@ class VideoStoreServer:
                 conn, _ = self._listener.accept()
             except OSError:  # listener closed by stop()
                 return
+            st = _ConnState(conn)
             with self._conn_lock:
-                self._conns.add(conn)
-            threading.Thread(target=self._serve_conn, args=(conn,),
+                self._conns[conn] = st
+            threading.Thread(target=self._serve_conn, args=(st,),
                              name="tasm-server-conn", daemon=True).start()
 
-    def _serve_conn(self, conn: socket.socket) -> None:
-        # responses go through a bounded per-connection queue drained by a
-        # writer thread: scan replies are sent from the shared serving
-        # session's dispatcher thread, and a blocking sendall to ONE
-        # stalled client there would wedge every other client's scans.  A
-        # full queue means the client stopped reading — drop it.
-        outq: queue.Queue = queue.Queue(maxsize=256)
-        writer = threading.Thread(target=self._write_loop,
-                                  args=(conn, outq),
+    def _serve_conn(self, st: _ConnState) -> None:
+        conn = st.sock
+        writer = threading.Thread(target=self._write_loop, args=(st,),
                                   name="tasm-server-write", daemon=True)
         writer.start()
         try:
@@ -281,22 +339,31 @@ class VideoStoreServer:
                 except wire.WireError as e:
                     # reply with an error frame instead of dying; the
                     # stream may be mid-garbage, so close THIS connection
-                    self._send(conn, outq, wire.error_doc(None, e))
+                    self._send(st, wire.error_doc(None, e))
                     return
-                self._dispatch(conn, outq, req)
+                self._dispatch(st, req)
         except OSError:
             return  # connection torn down under us (client gone / stop())
         finally:
-            outq.put(None)  # writer drains what's queued, then exits
+            st.closed = True  # before release: a marshal job that leases
+            #                   past this point sees the flag and releases
+            st.outq.put(None)  # writer drains what's queued, then exits
             with self._conn_lock:
-                self._conns.discard(conn)
+                self._conns.pop(conn, None)
+                live = list(self._conns.values())
+            if self._shm_pool is not None:
+                # reclaim every lease the peer (cleanly closed, crashed,
+                # or SIGKILLed alike) left behind, then sweep for strays
+                # orphaned by earlier teardown races
+                self._shm_pool.release_owner(st)
+                self._shm_pool.sweep(live)
 
-    def _write_loop(self, conn: socket.socket, outq: queue.Queue) -> None:
+    def _write_loop(self, st: _ConnState) -> None:
         """Single writer per connection; only this thread (and only this
         connection) blocks when the peer stops reading."""
         broken = False
         while True:
-            payload = outq.get()
+            payload = st.outq.get()
             if payload is None:
                 break
             if isinstance(payload, threading.Event):
@@ -305,43 +372,142 @@ class VideoStoreServer:
             if broken:
                 continue  # discard until the sentinel
             try:
-                conn.sendall(wire._HEADER.pack(len(payload)) + payload)
+                st.sock.sendall(wire._HEADER.pack(len(payload)) + payload)
             except OSError:
                 broken = True
         try:
-            conn.close()
+            st.sock.close()
         except OSError:
             pass
 
-    def _send(self, conn: socket.socket, outq: queue.Queue,
-              doc: dict) -> None:
+    def _segment_writer(self, st: _ConnState, leased: list):
+        """Per-reply shared-memory writer for ``wire.dumps``, or ``None``
+        when this connection's replies ride the npz payload.  Segment
+        names written are recorded in ``leased`` so the caller can release
+        them if the reply never reaches the client."""
+        if self._shm_pool is None or not st.shm or st.closed:
+            return None
+
+        def write(arrays):
+            doc = self._shm_pool.write(arrays, owner=st)
+            if doc is not None:
+                leased.append(doc["seg"])
+            return doc
+
+        return write
+
+    @staticmethod
+    def _stamp_marshalling(clean: dict, stats_objs: list,
+                           transport: str, nbytes: int,
+                           marshal_s: float) -> None:
+        """Stamp marshalling accounting into the outgoing reply doc AND
+        the live ScanStats objects (already appended to engine history by
+        the scheduler), so `store.stats()` and the client's result agree.
+        A multi-result reply (execute_many) splits cost evenly — the wire
+        packs all its arrays as one payload, so per-result attribution
+        finer than an even split would be fiction."""
+        value = clean.get("value")
+        docs = [value] if isinstance(value, dict) else \
+            value if isinstance(value, list) else []
+        share_s = marshal_s / max(len(stats_objs), 1)
+        share_b = nbytes / max(len(stats_objs), 1)
+        for stats, doc in zip(stats_objs, docs):
+            stats.marshal_s = share_s
+            stats.payload_bytes = share_b
+            stats.transport = transport
+            sdoc = doc.get("stats") if isinstance(doc, dict) else None
+            if isinstance(sdoc, dict):
+                sdoc["marshal_s"] = share_s
+                sdoc["payload_bytes"] = share_b
+                sdoc["transport"] = transport
+
+    def _send(self, st: _ConnState, doc: dict,
+              stats: Optional[list] = None) -> None:
+        """Encode and enqueue one reply.  ``stats`` — the reply's live
+        ScanStats objects — turns on marshalling accounting and makes the
+        reply eligible for the shared-memory transport."""
+        t0 = time.perf_counter()
+        leased: list = []
+        on_payload = None
+        if stats:
+            def on_payload(clean, transport, nbytes):
+                self._stamp_marshalling(clean, stats, transport, nbytes,
+                                        time.perf_counter() - t0)
         try:
-            payload = wire.dumps(doc, codec=self.codec,
-                                 max_bytes=self.max_frame_bytes)
+            payload = wire.dumps(
+                doc, codec=self.codec, max_bytes=self.max_frame_bytes,
+                segment_writer=self._segment_writer(st, leased)
+                if stats else None,
+                on_payload=on_payload)
         except wire.WireError as e:
             # the RESPONSE broke the frame limit (e.g. a scan returned more
             # region bytes than max_frame_bytes): tell the client instead
             # of silently dropping the connection
+            self._release_leases(st, leased)
+            leased = []
             payload = wire.dumps(wire.error_doc(doc.get("id"), e),
                                  codec=self.codec,
                                  max_bytes=self.max_frame_bytes)
+        delivered = False
         try:
-            outq.put_nowait(payload)
+            st.outq.put_nowait(payload)
+            delivered = True
         except queue.Full:
             # slow consumer: hundreds of unread responses queued — cut it
             # loose rather than buffer unboundedly (its writer thread may
             # be stuck in sendall; shutdown() unsticks that too)
             try:
-                conn.shutdown(socket.SHUT_RDWR)
+                st.sock.shutdown(socket.SHUT_RDWR)
             except OSError:
                 pass
             try:
-                conn.close()
+                st.sock.close()
             except OSError:
                 pass
+        # leases racing connection teardown: _serve_conn sets st.closed
+        # BEFORE release_owner, we re-check closed AFTER leasing — one of
+        # the two sides is guaranteed to observe the other's write, so a
+        # segment can't slip past both and leak
+        if leased and (not delivered or st.closed):
+            self._release_leases(st, leased)
+
+    def _release_leases(self, st: _ConnState, names: list) -> None:
+        if names and self._shm_pool is not None:
+            self._shm_pool.release(names, owner=st)
+
+    # -------------------------------------------------- reply marshalling
+    def _offload_marshal(self, fn, *args) -> None:
+        """Run a reply-marshalling job on the store's scheduler pool (the
+        decode workers, idle between batches), falling back to a
+        server-owned pool when the store has none (the cluster router
+        duck-types the store surface without a scheduler), and to inline
+        execution when the pools are draining at shutdown."""
+        sched = getattr(self.store, "scheduler", None)
+        try:
+            if sched is not None:
+                sched.offload(fn, *args)
+                return
+            with self._marshal_lock:
+                if self._marshal_pool is None:
+                    self._marshal_pool = ThreadPoolExecutor(
+                        max_workers=max(os.cpu_count() or 1, 2),
+                        thread_name_prefix="tasm-marshal")
+                pool = self._marshal_pool
+            pool.submit(fn, *args)
+        except RuntimeError:  # racing shutdown: last replies go inline
+            fn(*args)
+
+    def _marshal_scan_reply(self, st: _ConnState, rid, res,
+                            want_plan: bool) -> None:
+        try:
+            resp = wire.result_doc(rid, self._result_doc(res, want_plan))
+        except BaseException as e:  # noqa: BLE001 - to client
+            self._send(st, wire.error_doc(rid, e))
+            return
+        self._send(st, resp, stats=[res.stats])
 
     # ----------------------------------------------------------- dispatch
-    def _dispatch(self, conn, outq, req) -> None:
+    def _dispatch(self, st: _ConnState, req) -> None:
         rid = req.get("id") if isinstance(req, dict) else None
         try:
             if not isinstance(req, dict) or "op" not in req:
@@ -355,19 +521,44 @@ class VideoStoreServer:
 
                 def _done(f, rid=rid):
                     try:
-                        doc = self._result_doc(f.result(), want_plan)
-                        resp = wire.result_doc(rid, doc)
+                        res = f.result()
                     except BaseException as e:  # noqa: BLE001 - to client
-                        resp = wire.error_doc(rid, e)
-                    self._send(conn, outq, resp)
+                        self._send(st, wire.error_doc(rid, e))
+                        return
+                    # the callback runs on the shared session's dispatcher
+                    # thread — marshalling there would serialize every
+                    # client's replies behind one GIL-bound loop, so hand
+                    # the doc building + payload packing to the pool
+                    self._offload_marshal(self._marshal_scan_reply,
+                                          st, rid, res, want_plan)
 
                 fut.add_done_callback(_done)
                 return
-            value = self._handle(op, req)
+            if op == "execute_many":
+                # one submission wave through the shared session: same
+                # micro-batch, results strictly in submission order
+                futs = [self._session.submit(ScanPlan.from_doc(p))
+                        for p in req["plans"]]
+                want_plan = bool(req.get("want_plan", True))
+                results = [f.result() for f in futs]
+                value = [self._result_doc(r, want_plan) for r in results]
+                self._send(st, wire.result_doc(rid, value),
+                           stats=[r.stats for r in results])
+                return
+            if op in ("shm_probe", "shm_enable", "shm_release"):
+                value = self._handle_shm(op, req, st)
+            else:
+                value = self._handle(op, req)
+                if op == "ping":
+                    value["transport"] = "shm" if st.shm else "npz"
+                elif op == "stats" and isinstance(value, dict):
+                    value["shm"] = self._shm_pool.stats() \
+                        if self._shm_pool is not None \
+                        else {"segments": 0, "bytes": 0}
         except BaseException as e:  # noqa: BLE001 - mapped to error frame
-            self._send(conn, outq, wire.error_doc(rid, e))
+            self._send(st, wire.error_doc(rid, e))
             return
-        self._send(conn, outq, wire.result_doc(rid, value))
+        self._send(st, wire.result_doc(rid, value))
         if req.get("op") == "shutdown":
             # stop from a helper thread (stop() tears down connection
             # machinery this thread is part of) — but only after the
@@ -375,7 +566,7 @@ class VideoStoreServer:
             # connection close races the send and the client sees EOF
             # instead of its acknowledgement
             flushed = threading.Event()
-            outq.put(flushed)
+            st.outq.put(flushed)
 
             def _stop_after_flush():
                 flushed.wait(timeout=10)  # a non-reading client can't
@@ -386,6 +577,32 @@ class VideoStoreServer:
 
     def _result_doc(self, res, want_plan: bool) -> dict:
         return res.to_doc(include_plan=want_plan)
+
+    # ------------------------------------------------- shm lease protocol
+    def _handle_shm(self, op: str, req: dict, st: _ConnState):
+        """Transport negotiation + lease release.  ``shm_probe`` leases a
+        nonce segment; the client proves it genuinely shares /dev/shm
+        (same-host, same namespace — not a TCP peer with a coincidental
+        segment name) by echoing the nonce through ``shm_enable``."""
+        if op == "shm_release":
+            if self._shm_pool is not None:
+                self._shm_pool.release(
+                    [str(n) for n in req.get("segments") or []], owner=st)
+            return True
+        if self._shm_pool is None or self.transport == "socket":
+            if op == "shm_probe":
+                return {"enabled": False}
+            return False  # shm_enable against a socket-only server
+        if op == "shm_probe":
+            name, nbytes = self._shm_pool.probe(owner=st)
+            return {"enabled": True, "segment": name, "nbytes": nbytes}
+        # shm_enable: verify the nonce readback, then release the probe
+        ok = self._shm_pool.verify(str(req.get("segment")),
+                                   str(req.get("nonce")))
+        self._shm_pool.release([str(req.get("segment"))], owner=st)
+        if ok:
+            st.shm = True
+        return ok
 
     # ------------------------------------------------------------- ops
     def _handle(self, op: str, req: dict):
@@ -432,13 +649,6 @@ class VideoStoreServer:
                                req["label"], int(req["x1"]), int(req["y1"]),
                                int(req["x2"]), int(req["y2"]))
             return True
-        if op == "execute_many":
-            # one submission wave through the shared session: same
-            # micro-batch, results strictly in submission order
-            futs = [self._session.submit(ScanPlan.from_doc(p))
-                    for p in req["plans"]]
-            want_plan = bool(req.get("want_plan", True))
-            return [self._result_doc(f.result(), want_plan) for f in futs]
         if op == "explain":
             return store.lower(ScanPlan.from_doc(req["plan"])).to_doc()
         if op == "retile":

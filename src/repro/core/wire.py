@@ -18,6 +18,15 @@ region crops and ingest frames round-trip bit-identically with their
 dtype/shape intact (``allow_pickle`` stays off — object arrays are
 rejected, not smuggled).
 
+Payload transport is swappable per frame: instead of the npz blob a frame
+may carry an ``"s"`` shared-memory descriptor — ``{"seg": name, "items":
+[[offset, shape, dtype], ...]}`` indexed like the array list — produced by
+a ``segment_writer`` (the server's :class:`~repro.core.shm.SegmentPool`)
+and resolved by an ``shm_reader`` (the client maps the segment and builds
+zero-copy numpy views).  A writer returning ``None`` (remote peer, pool
+exhausted, /dev/shm missing) falls back to the npz blob in the same
+frame format, so both transports decode through one :func:`loads`.
+
 Oversized frames are rejected on BOTH sides before any payload allocation:
 :func:`dumps` raises when the encoded frame would exceed ``max_bytes`` and
 :func:`read_frame` raises after reading only the 4-byte header, so a
@@ -137,22 +146,41 @@ def _pack_npz(arrays: list[np.ndarray]) -> tuple[bytes, list]:
 
 # ------------------------------------------------------------ dumps/loads
 def dumps(doc: dict, *, codec: Optional[str] = None,
-          max_bytes: int = DEFAULT_MAX_FRAME_BYTES) -> bytes:
-    """Encode one message to a tagged payload (no length prefix)."""
+          max_bytes: int = DEFAULT_MAX_FRAME_BYTES,
+          segment_writer=None, on_payload=None) -> bytes:
+    """Encode one message to a tagged payload (no length prefix).
+
+    ``segment_writer(arrays)`` — when given — is offered the frame's
+    array list first; if it returns a shared-memory descriptor doc the
+    frame ships that (``"s"``) instead of the npz blob, and if it returns
+    ``None`` the npz path proceeds unchanged.  ``on_payload(clean,
+    transport, payload_bytes)`` fires after array packing (the dominant
+    marshalling cost) but *before* the envelope encode, so a caller can
+    stamp marshalling accounting into the outgoing doc itself."""
     codec = codec or default_codec()
     arrays: list[np.ndarray] = []
     clean = _extract_arrays(doc, arrays)
-    blob, index = _pack_npz(arrays) if arrays else (None, None)
+    blob, index, shm_doc = None, None, None
+    if arrays:
+        if segment_writer is not None:
+            shm_doc = segment_writer(arrays)
+        if shm_doc is None:
+            blob, index = _pack_npz(arrays)
+    if on_payload is not None:
+        nbytes = len(blob) if blob is not None else \
+            sum(int(a.nbytes) for a in arrays)
+        on_payload(clean, "shm" if shm_doc is not None else "npz", nbytes)
     if codec == "msgpack":
         if _msgpack is None:
             raise WireError("msgpack codec requested but not installed")
         payload = _TAG_MSGPACK + _msgpack.packb(
-            {"d": clean, "z": blob, "zi": index}, use_bin_type=True)
+            {"d": clean, "z": blob, "zi": index, "s": shm_doc},
+            use_bin_type=True)
     else:
         payload = _TAG_JSON + json.dumps(
             {"d": clean,
              "z": base64.b64encode(blob).decode("ascii") if blob else None,
-             "zi": index},
+             "zi": index, "s": shm_doc},
             separators=(",", ":")).encode("utf-8")
     if len(payload) > max_bytes:
         raise WireError(f"frame of {len(payload)} bytes exceeds the "
@@ -160,8 +188,14 @@ def dumps(doc: dict, *, codec: Optional[str] = None,
     return payload
 
 
-def loads(payload: bytes) -> dict:
-    """Decode a tagged payload back to its message doc."""
+def loads(payload: bytes, *, shm_reader=None) -> dict:
+    """Decode a tagged payload back to its message doc.
+
+    ``shm_reader(shm_doc)`` — when given — resolves an ``"s"``
+    shared-memory descriptor to the list of arrays it describes (index-
+    aligned with the frame's ``__nd__`` refs).  A frame carrying ``"s"``
+    with no reader installed raises: silently returning refs would hand
+    the caller descriptor dicts where arrays belong."""
     if not payload:
         raise WireError("empty frame payload")
     tag, body = payload[:1], payload[1:]
@@ -184,7 +218,17 @@ def loads(payload: bytes) -> dict:
         if isinstance(blob, str):  # JSON ships the npz blob base64'd
             blob = base64.b64decode(blob)
         lookup = None
-        if blob:
+        shm_doc = msg.get("s")
+        if shm_doc is not None:
+            if shm_reader is None:
+                raise WireError("frame carries a shared-memory payload "
+                                "but no shm reader is installed")
+            views = shm_reader(shm_doc)
+
+            def lookup(i: int, views=views):
+                return views[i]
+
+        elif blob:
             npz = np.load(io.BytesIO(blob), allow_pickle=False)
             index = msg.get("zi") or []
             members: dict[str, np.ndarray] = {}
@@ -232,7 +276,8 @@ def _read_exact(sock: socket.socket, n: int, *, eof_ok: bool) -> bytes:
 
 
 def read_frame(sock: socket.socket, *,
-               max_bytes: int = DEFAULT_MAX_FRAME_BYTES) -> dict:
+               max_bytes: int = DEFAULT_MAX_FRAME_BYTES,
+               shm_reader=None) -> dict:
     """Read one frame; raises :class:`ConnectionClosed` on a clean EOF
     between frames, :class:`WireError` on truncation, oversize, or an
     undecodable payload.  The length header is validated BEFORE the payload
@@ -244,7 +289,8 @@ def read_frame(sock: socket.socket, *,
                         f"{max_bytes}")
     if length == 0:
         raise WireError("zero-length frame")
-    return loads(_read_exact(sock, length, eof_ok=False))
+    return loads(_read_exact(sock, length, eof_ok=False),
+                 shm_reader=shm_reader)
 
 
 # -------------------------------------------------------------- RPC docs

@@ -273,7 +273,9 @@ class TestErrorHandling:
         store = VideoStore()
         fill(store, "cam0", frames, dets)
         sock = str(tmp_path / "t.sock")
-        with VideoStoreServer(store, path=sock,
+        # pin the npz transport: this test exercises the oversized-PAYLOAD
+        # path, and under shm the crops leave the frame (descriptors only)
+        with VideoStoreServer(store, path=sock, transport="socket",
                               max_frame_bytes=32_768).start():
             with RemoteVideoStore(sock) as client:
                 # the result (hundreds of KB of crops) breaks the frame

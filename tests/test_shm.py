@@ -1,0 +1,347 @@
+"""Zero-copy serving: shared-memory transport, lease lifecycle, stats.
+
+The contract under test: transport negotiation picks shm only when the
+client genuinely shares /dev/shm with the server (and honours explicit
+``transport=``/``$REPRO_TRANSPORT`` overrides, raising on bogus values);
+shm and npz replies are bit-identical to in-process ``execute()``; every
+lease is released — on result GC, on client ``close()``, and when a
+client is SIGKILLed mid-lease — so the server's segment pool drains to
+zero; and the serving layer stamps ``marshal_s``/``payload_bytes``/
+``transport`` into the reply stats.
+"""
+import gc
+import os
+import signal
+import subprocess
+import sys
+import time
+
+import numpy as np
+import pytest
+
+from repro.codec.encode import EncoderConfig
+from repro.core import (NoTilingPolicy, RemoteVideoStore, VideoStore,
+                        VideoStoreServer)
+from repro.core import wire
+from repro.core.cost import CostModel
+from repro.core.shm import (SegmentPool, resolve_transport, shm_available,
+                            attach_segment)
+
+pytestmark = pytest.mark.skipif(not shm_available(),
+                                reason="no POSIX shared memory on host")
+
+ENC = EncoderConfig(gop=16, qp=8)
+MODEL = CostModel(beta=1.4e-8, gamma=1e-5)
+
+
+def fill(store, name, frames, dets):
+    store.add_video(name, encoder=ENC, policy=NoTilingPolicy(),
+                    cost_model=MODEL)
+    store.ingest(name, frames)
+    store.add_detections(name, {f: d for f, d in enumerate(dets)})
+
+
+def assert_regions_equal(a, b):
+    assert len(a) == len(b)
+    for ra, rb in zip(a, b):
+        assert ra[:-1] == rb[:-1]
+        np.testing.assert_array_equal(ra[-1], rb[-1])
+
+
+def wait_until(cond, timeout=20.0, what="condition"):
+    deadline = time.time() + timeout
+    while time.time() < deadline:
+        if cond():
+            return
+        time.sleep(0.02)
+    raise AssertionError(f"timed out waiting for {what}")
+
+
+@pytest.fixture
+def served_shm(tmp_path, small_video):
+    """Unix-socket server with the shm transport enabled (auto), seeded
+    store kept open in-process for bit-identity comparisons."""
+    frames, dets = small_video
+    store = VideoStore()
+    fill(store, "cam0", frames, dets)
+    sock = str(tmp_path / "tasm.sock")
+    server = VideoStoreServer(store, path=sock, owns_store=False).start()
+    yield store, server, sock
+    server.stop()
+    store.close()
+
+
+def pool_stats(server):
+    return server._shm_pool.stats()
+
+
+# ----------------------------------------------------- SegmentPool units
+class TestSegmentPool:
+    def test_write_release_accounting(self):
+        pool = SegmentPool(max_bytes=1 << 20)
+        a = np.arange(100, dtype=np.int64)
+        b = np.zeros((3, 4), dtype=np.uint8)
+        doc = pool.write([a, b], owner="conn")
+        assert doc is not None and len(doc["items"]) == 2
+        st = pool.stats()
+        assert st["segments"] == 1 and st["bytes"] >= a.nbytes + b.nbytes
+        # the descriptor round-trips bit-identically through a mapping
+        seg = attach_segment(doc["seg"])
+        try:
+            for src, (off, shape, dtype) in zip((a, b), doc["items"]):
+                got = np.frombuffer(seg.buf, dtype=np.dtype(dtype),
+                                    count=int(np.prod(shape)) or 0,
+                                    offset=off).reshape(shape).copy()
+                np.testing.assert_array_equal(got, src)
+        finally:
+            seg.close()
+        assert pool.release([doc["seg"]]) == 1
+        assert pool.stats() == {"segments": 0, "bytes": 0}
+        # double release is a no-op, not an error
+        assert pool.release([doc["seg"]]) == 0
+        pool.close()
+
+    def test_owner_filtering(self):
+        pool = SegmentPool()
+        owner_a, owner_b = object(), object()
+        doc = pool.write([np.ones(8)], owner=owner_a)
+        # a neighbour cannot release someone else's lease
+        assert pool.release([doc["seg"]], owner=owner_b) == 0
+        assert pool.stats()["segments"] == 1
+        assert pool.release([doc["seg"]], owner=owner_a) == 1
+        pool.close()
+
+    def test_release_owner_and_sweep(self):
+        pool = SegmentPool()
+        live, dead = object(), object()
+        pool.write([np.ones(4)], owner=live)
+        pool.write([np.ones(4)], owner=dead)
+        pool.write([np.ones(4)], owner=dead)
+        assert pool.release_owner(dead) == 2
+        assert pool.stats()["segments"] == 1
+        # sweep reclaims anything whose owner fell out of the live set
+        assert pool.sweep(live_owners=[]) == 1
+        assert pool.stats() == {"segments": 0, "bytes": 0}
+        pool.close()
+
+    def test_budget_overflow_falls_back(self):
+        pool = SegmentPool(max_bytes=128)
+        assert pool.write([np.zeros(1024, dtype=np.uint8)]) is None
+        small = pool.write([np.zeros(16, dtype=np.uint8)])
+        assert small is not None  # within budget still works
+        pool.close()
+
+    def test_closed_pool_declines(self):
+        pool = SegmentPool()
+        doc = pool.write([np.ones(4)])
+        pool.close()
+        assert pool.stats() == {"segments": 0, "bytes": 0}
+        assert pool.write([np.ones(4)]) is None
+        assert doc is not None  # close() after write unlinked it already
+
+    def test_probe_verify(self):
+        pool = SegmentPool()
+        name, nbytes = pool.probe(owner="c")
+        seg = attach_segment(name)
+        try:
+            nonce = bytes(seg.buf[:nbytes])
+        finally:
+            seg.close()
+        assert pool.verify(name, "deadbeef") is False
+        assert pool.verify(name, "not-hex") is False
+        assert pool.verify(name, nonce.hex()) is True
+        pool.close()
+
+
+# -------------------------------------------------- transport negotiation
+class TestNegotiation:
+    def test_unix_auto_negotiates_shm(self, served_shm):
+        _, server, sock = served_shm
+        assert server.transport == "auto"
+        with RemoteVideoStore(sock) as cli:
+            assert cli.transport == "shm"
+            assert cli.ping()["transport"] == "shm"
+
+    def test_socket_server_declines(self, served_shm, tmp_path):
+        store, _, _ = served_shm
+        sock2 = str(tmp_path / "npz.sock")
+        with VideoStoreServer(store, path=sock2, owns_store=False,
+                              transport="socket").start():
+            with RemoteVideoStore(sock2) as cli:
+                assert cli.transport == "npz"
+                assert cli.ping()["transport"] == "npz"
+            # a client that REQUIRES shm fails fast against it
+            with pytest.raises(RuntimeError, match="shm"):
+                RemoteVideoStore(sock2, transport="shm")
+
+    def test_client_socket_mode_skips_negotiation(self, served_shm):
+        _, _, sock = served_shm
+        with RemoteVideoStore(sock, transport="socket") as cli:
+            assert cli.transport == "npz"
+
+    def test_tcp_auto_silently_npz(self, served_shm):
+        store, _, _ = served_shm
+        with VideoStoreServer(store, host="127.0.0.1", port=0,
+                              owns_store=False).start() as tcp:
+            host, port = tcp.address
+            with RemoteVideoStore(host=host, port=port) as cli:
+                assert cli.transport == "npz"
+                ref = store.scan("cam0").labels("car").frames(0, 16) \
+                    .execute()
+                got = cli.scan("cam0").labels("car").frames(0, 16) \
+                    .execute()
+                assert_regions_equal(ref.regions, got.regions)
+
+    def test_invalid_transport_values_raise(self, served_shm, monkeypatch):
+        _, _, sock = served_shm
+        with pytest.raises(ValueError, match="auto|shm|socket"):
+            RemoteVideoStore(sock, transport="carrier-pigeon")
+        with pytest.raises(ValueError, match="auto|shm|socket"):
+            VideoStoreServer(VideoStore(), path="/tmp/x.sock",
+                             transport="bogus")
+        monkeypatch.setenv("REPRO_TRANSPORT", "bogus")
+        with pytest.raises(ValueError, match="REPRO_TRANSPORT"):
+            resolve_transport(None)
+        # explicit value still wins over a bogus env override
+        assert resolve_transport("shm") == "shm"
+
+    def test_resolve_transport_env(self, monkeypatch):
+        monkeypatch.delenv("REPRO_TRANSPORT", raising=False)
+        assert resolve_transport(None) == "auto"
+        monkeypatch.setenv("REPRO_TRANSPORT", "socket")
+        assert resolve_transport(None) == "socket"
+        assert resolve_transport("auto") == "auto"
+
+    def test_serve_cli_rejects_bogus_transport(self):
+        sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..",
+                                        "scripts"))
+        try:
+            import tasm_serve
+        finally:
+            sys.path.pop(0)
+        with pytest.raises(SystemExit):
+            tasm_serve.parse_args(["--socket", "/tmp/x.sock",
+                                   "--transport", "carrier-pigeon"])
+
+    def test_wire_frame_with_shm_needs_reader(self):
+        payload = wire.dumps(
+            {"v": np.arange(6).reshape(2, 3)},
+            segment_writer=lambda arrays: {"seg": "fake", "items":
+                                           [[0, [2, 3], "int64"]]})
+        with pytest.raises(wire.WireError, match="shm reader"):
+            wire.loads(payload)
+
+
+# ---------------------------------------------------- interop + identity
+class TestInterop:
+    def test_shm_and_npz_clients_bit_identical(self, served_shm):
+        store, server, sock = served_shm
+        ref = store.scan("cam0").labels("car").frames(0, 32).execute()
+        with RemoteVideoStore(sock) as shm_cli, \
+                RemoteVideoStore(sock, transport="socket") as npz_cli:
+            assert (shm_cli.transport, npz_cli.transport) == ("shm", "npz")
+            a = shm_cli.scan("cam0").labels("car").frames(0, 32).execute()
+            b = npz_cli.scan("cam0").labels("car").frames(0, 32).execute()
+            assert_regions_equal(ref.regions, a.regions)
+            assert_regions_equal(ref.regions, b.regions)
+            # both transports show up in the server's marshalling stats
+            by_t = shm_cli.stats()["marshalling"]["by_transport"]
+            assert by_t.get("shm", 0) >= 1 and by_t.get("npz", 0) >= 1
+
+    def test_shm_views_are_read_only(self, served_shm):
+        _, _, sock = served_shm
+        with RemoteVideoStore(sock) as cli:
+            got = cli.scan("cam0").labels("car").frames(0, 32).execute()
+            assert got.regions, "workload should produce regions"
+            px = got.regions[0][-1]
+            assert px.flags.writeable is False
+            with pytest.raises(ValueError):
+                px[...] = 0
+
+    def test_stats_stamped_on_served_replies(self, served_shm):
+        store, _, sock = served_shm
+        ref = store.scan("cam0").labels("car").frames(0, 32).execute()
+        assert ref.stats.transport == ""  # in-process: no serving layer
+        with RemoteVideoStore(sock) as cli:
+            got = cli.scan("cam0").labels("car").frames(0, 32).execute()
+            assert got.stats.transport == "shm"
+            assert got.stats.payload_bytes > 0
+            assert got.stats.marshal_s >= 0.0
+            est = cli.stats()["marshalling"]
+            assert est["payload_bytes"] >= got.stats.payload_bytes
+
+
+# ------------------------------------------------------- lease lifecycle
+class TestLeases:
+    def test_gc_of_result_releases_segments(self, served_shm):
+        _, server, sock = served_shm
+        with RemoteVideoStore(sock) as cli:
+            got = cli.scan("cam0").labels("car").frames(0, 32).execute()
+            assert got.regions
+            assert pool_stats(server)["segments"] >= 1
+            del got
+            gc.collect()
+            wait_until(lambda: pool_stats(server)["segments"] == 0,
+                       what="pool to drain after result GC")
+            # the connection keeps working after the lease cycle
+            again = cli.scan("cam0").labels("car").frames(0, 32).execute()
+            assert again.regions
+
+    def test_client_close_flushes_leases(self, served_shm):
+        _, server, sock = served_shm
+        cli = RemoteVideoStore(sock)
+        got = cli.scan("cam0").labels("car").frames(0, 32).execute()
+        assert got.regions and pool_stats(server)["segments"] >= 1
+        cli.close()
+        wait_until(lambda: pool_stats(server)["segments"] == 0,
+                   what="pool to drain on client close")
+        # views survive the unlink (POSIX mmap semantics): still readable
+        assert int(np.asarray(got.regions[0][-1]).sum()) >= 0
+
+    def test_sigkilled_client_leases_are_reclaimed(self, served_shm,
+                                                   tmp_path):
+        """A client killed with its leases outstanding must not leak
+        segments: the connection-drop release + sweep reclaim them."""
+        _, server, sock = served_shm
+        marker = str(tmp_path / "holding")
+        prog = (
+            "import sys, time\n"
+            "from repro.core import RemoteVideoStore\n"
+            "sock, marker = sys.argv[1], sys.argv[2]\n"
+            "cli = RemoteVideoStore(sock)\n"
+            "r = cli.scan('cam0').labels('car').frames(0, 32).execute()\n"
+            "assert cli.transport == 'shm', cli.transport\n"
+            "assert r.regions\n"
+            "open(marker, 'w').write(str(len(r.regions)))\n"
+            "time.sleep(300)  # hold the lease until SIGKILL\n")
+        env = dict(os.environ, PYTHONPATH=os.pathsep.join(sys.path))
+        proc = subprocess.Popen([sys.executable, "-c", prog, sock, marker],
+                                env=env)
+        try:
+            wait_until(lambda: os.path.exists(marker) or
+                       proc.poll() is not None, timeout=120,
+                       what="client to take its lease")
+            assert proc.poll() is None, "client died before holding lease"
+            assert pool_stats(server)["segments"] >= 1
+            proc.send_signal(signal.SIGKILL)
+            proc.wait(timeout=30)
+            wait_until(lambda: pool_stats(server)["segments"] == 0,
+                       what="server to reclaim orphaned leases")
+        finally:
+            if proc.poll() is None:
+                proc.kill()
+                proc.wait(timeout=30)
+
+    def test_execute_many_over_shm(self, served_shm):
+        store, server, sock = served_shm
+        mk = lambda s: [s.scan("cam0").labels("car").frames(0, 32),
+                        s.scan("cam0").labels("person").frames(0, 16)]
+        ref = [q.execute() for q in mk(store)]
+        with RemoteVideoStore(sock) as cli:
+            got = cli.execute_many(mk(cli))
+            for r, g in zip(ref, got):
+                assert_regions_equal(r.regions, g.regions)
+            del got, g  # the loop var pins the last result's lease too
+            gc.collect()
+            wait_until(lambda: pool_stats(server)["segments"] == 0,
+                       what="pool to drain after execute_many GC")
