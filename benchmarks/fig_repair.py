@@ -1,0 +1,232 @@
+"""Self-healing benchmark: kill one node of a K=2 cluster mid-workload,
+run background repair, and measure what the serving path notices —
+emitting ``BENCH_repair.json``.
+
+The claim under test is the repair plane's contract: after a permanent
+node loss, ``ClusterRouter.repair(node=...)`` restores the replication
+factor by streaming tiles node→node OFF the serving path — reads keep
+flowing (zero failures), every wave of the workload stays bit-identical
+to a single in-process store, and the placement flip lands only after
+per-tile checksums and the epoch table verify on the rebuilt replica.
+
+Hard gates (CI fails if self-healing breaks):
+- every repair job completes and replication is restored: the dead node
+  leaves every assignment, every video is back to K=2 replicas;
+- zero failed reads across every wave — before the kill, during the
+  background copy, and after the flip;
+- every wave (idle, degraded, during-repair, post-repair) is
+  bit-identical to the single-store reference digest;
+- the rebuilt replica holds the full expected epoch table.
+
+Latency impact is reported: per-query p95 during the background copy vs
+idle.  The gate (p95 during repair <= 5x idle p95) is soft in quick mode
+(single-sample wall clock on a shared runner) and hard in full runs —
+the data plane must not head-of-line-block scans.
+
+    PYTHONPATH=src:. python benchmarks/fig_repair.py               # full
+    REPRO_QUICK=1 PYTHONPATH=src:. python benchmarks/fig_repair.py # smoke
+"""
+from __future__ import annotations
+
+import hashlib
+import json
+import os
+import pathlib
+import tempfile
+import time
+
+import numpy as np
+
+from benchmarks.common import ENC, corpus_video, emit, gate, quick_mode
+
+QUICK = quick_mode()
+N_NODES = 3
+REPLICATION = 2
+N_VIDEOS = 8
+N_FRAMES = 32 if QUICK else 64
+H, W = 96, 160
+OUT = os.environ.get("REPRO_BENCH_OUT", "BENCH_repair.json")
+
+VIDEOS = [f"cam{i:02d}" for i in range(N_VIDEOS)]
+
+
+def corpus():
+    return {v: corpus_video("sparse", i, N_FRAMES, height=H, width=W)[:2]
+            for i, v in enumerate(VIDEOS)}
+
+
+def seed(store, videos: dict) -> None:
+    from repro.core import NoTilingPolicy
+
+    for name, (frames, dets) in videos.items():
+        store.add_video(name, encoder=ENC, policy=NoTilingPolicy())
+        store.ingest(name, frames)
+        store.add_detections(name, {f: d for f, d in enumerate(dets)})
+
+
+def workload(store) -> list:
+    """Two scans per video: full-range car + an offset person window."""
+    qs = []
+    for i, v in enumerate(VIDEOS):
+        qs.append(store.scan(v).labels("car").frames(0, N_FRAMES))
+        lo = (i * ENC.gop) % (N_FRAMES - ENC.gop)
+        qs.append(store.scan(v).labels("person").frames(lo, lo + ENC.gop))
+    return qs
+
+
+def digest(results) -> str:
+    h = hashlib.sha256()
+    for r in results:
+        for reg in r.regions:
+            *key, px = reg
+            h.update(repr((tuple(key), px.shape, str(px.dtype))).encode())
+            h.update(np.ascontiguousarray(px).tobytes())
+    return h.hexdigest()
+
+
+def run_wave(store, lats: list, failures: list) -> str:
+    """One pass over the workload, one query at a time (per-query
+    latency), never letting an exception kill the wave — failed reads
+    are counted and gated to zero."""
+    results = []
+    for q in workload(store):
+        t0 = time.perf_counter()
+        try:
+            results.append(q.execute())
+        except Exception as e:  # noqa: BLE001 - a failed read is the gate
+            failures.append(f"{type(e).__name__}: {e}")
+            continue
+        lats.append(time.perf_counter() - t0)
+    return digest(results)
+
+
+def p95(lats: list) -> float:
+    return float(np.percentile(np.asarray(lats), 95)) if lats else 0.0
+
+
+def main() -> None:
+    from repro.core import ClusterRouter, VideoStore, VideoStoreServer
+
+    videos = corpus()
+    tmp = tempfile.mkdtemp(prefix="tasm_fig_repair_")
+    report: dict = {"n_nodes": N_NODES, "n_videos": N_VIDEOS,
+                    "replication": REPLICATION, "n_frames": N_FRAMES}
+
+    ref = VideoStore()
+    seed(ref, videos)
+    ref_digest = digest([q.execute() for q in workload(ref)])
+    ref.close()
+
+    stores = {f"n{i}": VideoStore() for i in range(N_NODES)}
+    servers = {n: VideoStoreServer(s, path=os.path.join(tmp, f"{n}.sock"),
+                                   owns_store=False).start()
+               for n, s in stores.items()}
+    router = ClusterRouter(
+        {n: os.path.join(tmp, f"{n}.sock") for n in stores},
+        replication=REPLICATION, timeout=60.0,
+        placement_path=os.path.join(tmp, "placement.json"))
+    failures: list = []
+    try:
+        seed(router, videos)
+
+        # -- idle baseline ------------------------------------------------
+        idle_lats: list = []
+        idle_digests = {run_wave(router, idle_lats, failures)
+                        for _ in range(2 if QUICK else 3)}
+        gate(idle_digests == {ref_digest},
+             "idle cluster waves diverge from the single store")
+        report["idle"] = {"p95_ms": 1e3 * p95(idle_lats),
+                          "queries": len(idle_lats)}
+
+        # -- kill one node of K=2 mid-workload ----------------------------
+        primaries = {n: 0 for n in stores}
+        for reps in router.placement.assignments.values():
+            primaries[reps[0]] += 1
+        victim = max(primaries, key=lambda n: primaries[n])
+        report["victim"] = victim
+        report["victim_primaries"] = primaries[victim]
+        servers.pop(victim).stop()
+        stores.pop(victim).close()
+
+        degraded_lats: list = []
+        got = run_wave(router, degraded_lats, failures)
+        gate(got == ref_digest,
+             "degraded wave (node dead, pre-repair) diverges")
+
+        # -- background repair, workload still running --------------------
+        jobs = router.repair(node=victim)
+        report["jobs_enqueued"] = len(jobs)
+        gate(len(jobs) > 0, f"nothing to repair after killing {victim} "
+             f"({primaries[victim]} primaries)")
+        during_lats: list = []
+        waves = 0
+        while True:
+            got = run_wave(router, during_lats, failures)
+            waves += 1
+            gate(got == ref_digest,
+                 f"wave {waves} during repair diverges")
+            status = router.repair_status()
+            settled = all(j["status"] in ("done", "failed")
+                          for j in status["jobs"])
+            if settled and waves >= 2:
+                break
+        t0 = time.perf_counter()
+        status = router.drain_repair(timeout=600)
+        report["drain_wait_s"] = time.perf_counter() - t0
+        report["during"] = {"p95_ms": 1e3 * p95(during_lats),
+                            "queries": len(during_lats), "waves": waves}
+
+        # -- hard gates: healed, bit-identical, zero failed reads ---------
+        gate(all(j["status"] == "done" for j in status["jobs"]),
+             f"repair jobs failed: {status['jobs']}")
+        for v, reps in router.placement.assignments.items():
+            gate(victim not in reps and len(reps) == REPLICATION,
+                 f"replication not restored for {v}: {reps}")
+        post_lats: list = []
+        got = run_wave(router, post_lats, failures)
+        gate(got == ref_digest, "post-repair wave diverges")
+        gate(not failures, f"{len(failures)} failed reads: {failures[:3]}")
+        report["failed_reads"] = len(failures)
+        report["repair"] = {
+            "chunks": status["stats"]["chunks_copied"],
+            "bytes": status["stats"]["bytes_copied"],
+            "retries": status["stats"]["retries"],
+            "copy_s": status["stats"]["copy_s"],
+        }
+
+        # -- latency impact: off the serving path means bounded p95 -------
+        ratio = report["during"]["p95_ms"] / max(report["idle"]["p95_ms"],
+                                                 1e-9)
+        report["p95_during_over_idle"] = ratio
+        gate(ratio <= 5.0,
+             f"repair head-of-line-blocks scans: during p95 "
+             f"{report['during']['p95_ms']:.1f}ms vs idle "
+             f"{report['idle']['p95_ms']:.1f}ms ({ratio:.2f}x > 5x)",
+             hard=not QUICK)
+    finally:
+        router.close()
+        for srv in servers.values():
+            srv.stop()
+        for s in stores.values():
+            s.close()
+
+    pathlib.Path(OUT).write_text(json.dumps(report, indent=1))
+    emit("repair_idle", 1e6 * p95(idle_lats),
+         f"p95_ms={report['idle']['p95_ms']:.2f}")
+    emit("repair_during", 1e6 * p95(during_lats),
+         f"p95_ms={report['during']['p95_ms']:.2f};"
+         f"ratio={report['p95_during_over_idle']:.2f}x")
+    emit("repair_copy", 1e6 * report["repair"]["copy_s"],
+         f"chunks={report['repair']['chunks']};"
+         f"MB={report['repair']['bytes'] / 1e6:.1f}")
+    print(f"# wrote {OUT}: killed {report['victim']} "
+          f"({report['victim_primaries']} primaries), "
+          f"{report['jobs_enqueued']} jobs, "
+          f"{report['repair']['chunks']} chunks "
+          f"{report['repair']['bytes'] / 1e6:.1f} MB copied in "
+          f"{report['repair']['copy_s']:.2f}s, p95 during/idle "
+          f"{report['p95_during_over_idle']:.2f}x, failed reads 0")
+
+
+if __name__ == "__main__":
+    main()

@@ -26,6 +26,7 @@ MODULES = [
     "benchmarks.fig_tuning",
     "benchmarks.fig_server",
     "benchmarks.fig_cluster",
+    "benchmarks.fig_repair",
     "benchmarks.fig_decode_kernel",
     "benchmarks.kernel_bench",
     "benchmarks.roofline_report",

@@ -154,11 +154,11 @@ with VideoStoreServer(reopened, path=sock, owns_store=False).start():
 from repro.core import (ClusterClient, ClusterRouter, ClusterRouterServer,
                         NoTilingPolicy)
 
-nodes = {f"n{i}": os.path.join(root, f"node{i}.sock") for i in range(2)}
+nodes = {f"n{i}": os.path.join(root, f"node{i}.sock") for i in range(3)}
 node_stores = {name: VideoStore() for name in nodes}
-node_servers = [VideoStoreServer(node_stores[name], path=path,
-                                 owns_store=False).start()
-                for name, path in nodes.items()]
+node_servers = {name: VideoStoreServer(node_stores[name], path=path,
+                                       owns_store=False).start()
+                for name, path in nodes.items()}
 router = ClusterRouter(nodes, replication=2,
                        placement_path=os.path.join(root, "placement.json"))
 router.add_video("traffic", encoder=EncoderConfig(gop=16, qp=8),
@@ -182,9 +182,35 @@ with ClusterRouterServer(router, path=rsock, owns_store=False).start():
               f"{len(r_cluster.regions)} regions, bit-identical to a "
               f"single store: {same}, placement "
               f"{cluster.placement()['assignments']}")
+
+        # 12b. self-healing: kill the video's primary node for good, then
+        #      one repair command re-replicates everything it held onto
+        #      the spare node — tiles stream node→node in the background
+        #      (checksummed, resumable, committed atomically), reads keep
+        #      serving from the surviving replica throughout, and the
+        #      placement flips only after the copy verifies.  (From a
+        #      shell this is `tasm_router.py --socket ... --repair
+        #      node=<name>`; the same RPCs drive it here.)
+        victim = cluster.placement()["assignments"]["traffic"][0]
+        node_servers.pop(victim).stop()
+        node_stores.pop(victim).close()
+        r_degraded = cluster.scan("traffic").labels("car").frames(0, 64) \
+                            .execute()          # failover, no repair yet
+        jobs = cluster.repair(node=victim)
+        status = cluster.drain_repair()         # wait for the copy
+        r_healed = cluster.scan("traffic").labels("car").frames(0, 64) \
+                          .execute()
+        same = all(a[:-1] == b[:-1] and np.array_equal(a[-1], b[-1])
+                   for a, b in zip(r_single.regions, r_healed.regions))
+        print(f"killed {victim} -> {len(r_degraded.regions)} regions via "
+              f"failover; repair streamed {len(jobs)} job(s), "
+              f"{status['stats']['chunks_copied']} chunks "
+              f"({status['stats']['bytes_copied'] / 1e6:.2f} MB); healed "
+              f"placement {cluster.placement()['assignments']['traffic']}, "
+              f"bit-identical: {same}")
         ref.close()
 router.close()
-for srv in node_servers:
+for srv in node_servers.values():
     srv.stop()
 for s in node_stores.values():
     s.close()

@@ -13,8 +13,13 @@ store over a Unix/TCP socket (``wire.py``) and ``RemoteVideoStore``
 (``client.py``) mirrors the declarative surface, so many client processes
 share one scheduler, tile cache, and tuner; same-host clients negotiate
 the zero-copy shared-memory reply transport (``shm.py``), with npz
-payloads as the remote/TCP fallback.  The deprecated single-video
-``TASM`` facade remains as a shim.
+payloads as the remote/TCP fallback.  ``ClusterRouter`` (``cluster.py``)
+scales that out across nodes with consistent-hash placement and
+replicated failover, and the self-healing data plane (``repair.py``)
+streams tiles node-to-node in resumable chunked waves to re-replicate
+after permanent node loss (``repair``) and apply rebalance plans
+(``rebalance(apply=True)``) off the serving path.  The deprecated
+single-video ``TASM`` facade remains as a shim.
 """
 from repro.core.client import (RemoteError, RemoteScanQuery,
                                RemoteServingSession, RemoteVideoStore)
@@ -41,6 +46,7 @@ from repro.core.policies import (
     PretileAllPolicy,
     RegretPolicy,
 )
+from repro.core.repair import RepairJob, RepairStats, RepairWorker
 from repro.core.query import (PhysicalPlan, ScanPlan, ScanQuery, ScanResult,
                               ScanStats, SOTScan, merge_results, split_plan)
 from repro.core.scheduler import ScanScheduler, ServingSession

@@ -48,6 +48,7 @@ import time
 import weakref
 from collections import deque
 from concurrent.futures import Future
+from concurrent.futures import TimeoutError as _FutTimeout
 from typing import Optional
 
 import numpy as np
@@ -197,7 +198,16 @@ class RemoteVideoStore:
         ``retry_backoff * attempt`` seconds between tries.  Mutations
         never retry — the server may have applied one before the
         connection died — so they surface the error.  The default 0
-        keeps the legacy fail-fast behaviour."""
+        keeps the legacy fail-fast behaviour.
+
+        ``timeout`` is the connect timeout AND the per-RPC deadline: a
+        call whose reply hasn't arrived within ``timeout`` seconds severs
+        the connection and raises ``ConnectionClosed`` — a hung (not
+        dead) node fails fast instead of blocking the calling thread
+        forever, so a router can fail over.  ``None`` (default) waits
+        indefinitely.  RPCs that legitimately block server-side
+        (``drain_tuner(timeout=t)``) extend the deadline by their own
+        wait."""
         if (path is None) == (host is None):
             raise ValueError("give exactly one of path= (unix socket) or "
                              "host=/port= (tcp)")
@@ -243,9 +253,10 @@ class RemoteVideoStore:
         else:
             sock = socket.create_connection((self._host, self._port),
                                             timeout=self._timeout)
-        # timeout= governs CONNECT only: left on the socket it would fire
-        # in the reader thread's blocking recv during any idle gap and
-        # poison the connection (the reader exits, failing everything)
+        # the socket itself stays blocking after connect: a recv timeout
+        # would fire in the reader thread during any idle gap and poison
+        # the connection.  The per-RPC deadline is enforced in _result()
+        # instead — only calls with an outstanding reply are on the clock
         sock.settimeout(None)
         return sock
 
@@ -302,7 +313,7 @@ class RemoteVideoStore:
         if mode == "auto" and (self._path is None or not shm_available()):
             return "npz"  # TCP peers don't share a host; don't even probe
         try:
-            probe = self._request("shm_probe").result()
+            probe = self._result(self._request("shm_probe"), "shm_probe")
             if not probe.get("enabled"):
                 raise RuntimeError(
                     "server declines shared-memory transport")
@@ -311,8 +322,9 @@ class RemoteVideoStore:
                 nonce = bytes(seg.buf[:int(probe["nbytes"])]).hex()
             finally:
                 seg.close()
-            if not self._request("shm_enable", segment=probe["segment"],
-                                 nonce=nonce).result():
+            if not self._result(
+                    self._request("shm_enable", segment=probe["segment"],
+                                  nonce=nonce), "shm_enable"):
                 raise RuntimeError("shared-memory nonce verification "
                                    "failed")
             return "shm"
@@ -492,11 +504,35 @@ class RemoteVideoStore:
                 raise
         return fut
 
-    def _call(self, op: str, **params):
+    def _result(self, fut: Future, op: str, deadline=...):
+        """Wait for an RPC reply, enforcing the per-RPC deadline.  A hung
+        (not dead) node never replies and never drops the socket; without
+        a deadline that blocks the calling thread — a router serving
+        thread — forever.  On expiry the connection is severed (failing
+        every pipelined call on it, exactly as if the node died) and
+        ``ConnectionClosed`` surfaces so retry/failover machinery treats
+        the node as down."""
+        if deadline is ...:
+            deadline = self._timeout
+        if deadline is None:
+            return fut.result()
+        try:
+            return fut.result(timeout=deadline)
+        except _FutTimeout:
+            try:
+                self._sock.shutdown(socket.SHUT_RDWR)
+            except OSError:
+                pass
+            raise wire.ConnectionClosed(
+                f"RPC {op!r} exceeded the {deadline}s deadline "
+                f"(node hung?)") from None
+
+    def _call(self, op: str, _deadline=..., **params):
         if self.retries and op in _IDEMPOTENT_OPS:
             return self._with_retry(
-                lambda: self._request(op, **params).result())
-        return self._request(op, **params).result()
+                lambda: self._result(self._request(op, **params), op,
+                                     _deadline))
+        return self._result(self._request(op, **params), op, _deadline)
 
     def close(self) -> None:
         with self._send_lock:
@@ -649,8 +685,8 @@ class RemoteVideoStore:
         plan = self._as_plan(query)
         if self.retries:
             return self._with_retry(
-                lambda: self._submit_plan(plan).result())
-        return self._submit_plan(plan).result()
+                lambda: self._result(self._submit_plan(plan), "scan"))
+        return self._result(self._submit_plan(plan), "scan")
 
     def execute_many(self, queries) -> list[ScanResult]:
         """One merged batch on the server (union-of-tiles decode across the
@@ -678,10 +714,53 @@ class RemoteVideoStore:
                           widths=list(new_layout.widths))
 
     def drain_tuner(self, timeout: Optional[float] = None) -> TunerStats:
-        return TunerStats(**self._call("drain_tuner", timeout=timeout))
+        # the server legitimately blocks for up to `timeout` before
+        # replying — extend the per-RPC deadline by that wait
+        dl = ... if self._timeout is None \
+            else self._timeout + (timeout or 0.0)
+        return TunerStats(**self._call("drain_tuner", timeout=timeout,
+                                       _deadline=dl))
 
     def tuner_stats(self) -> TunerStats:
         return TunerStats(**self._call("tuner_stats"))
+
+    # ----------------------------------------------------- replica streaming
+    # The cluster repair data plane: each chunk is one request/reply RPC,
+    # so copies are resumable at chunk granularity.  Called by the repair
+    # worker (core/repair.py), not by applications.
+    def export_meta(self, video: str) -> dict:
+        """The source video's manifest doc (incl. its SOT epoch table)."""
+        return self._call("export_meta", video=video)
+
+    def export_chunk(self, video: str, sot_id: int, tile_idx: int) -> dict:
+        """One encoded tile stream with its content checksum, stamped with
+        the epoch it was read at (the caller re-streams on a mismatch)."""
+        return self._call("export_chunk", video=video, sot_id=int(sot_id),
+                          tile_idx=int(tile_idx))
+
+    def import_begin(self, video: str) -> dict:
+        """Open or resume the destination's staging namespace; returns
+        the chunks already staged intact."""
+        return self._call("import_begin", video=video)
+
+    def import_chunk(self, video: str, sot_id: int, epoch: int,
+                     tile_idx: int, enc: dict, checksum: str) -> None:
+        """Stage one chunk (checksum re-verified server-side)."""
+        self._call("import_chunk", video=video, sot_id=int(sot_id),
+                   epoch=int(epoch), tile_idx=int(tile_idx), enc=enc,
+                   checksum=checksum)
+
+    def import_commit(self, video: str, doc: dict,
+                      min_epochs: Optional[dict] = None) -> dict:
+        """Atomically flip the staged copy live (after epoch-table and
+        per-tile checksum verification)."""
+        return self._call(
+            "import_commit", video=video, doc=doc,
+            min_epochs=[[int(s), int(e)]
+                        for s, e in sorted((min_epochs or {}).items())])
+
+    def import_abort(self, video: str) -> None:
+        self._call("import_abort", video=video)
 
 
 def _chain_result(src: Future, dst: Future, decode) -> None:

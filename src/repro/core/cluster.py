@@ -49,13 +49,16 @@ import json
 import math
 import os
 import pathlib
+import random
 import threading
+import time
 from concurrent.futures import Future, ThreadPoolExecutor
 from typing import Optional
 
 from repro.core import wire
 from repro.core.client import RemoteVideoStore
 from repro.core.engine import IngestStats
+from repro.core.repair import RepairStats, RepairWorker
 from repro.core.query import (PhysicalPlan, ScanPlan, ScanQuery, ScanResult,
                               ScanStats, merge_results, split_plan)
 from repro.core.server import VideoStoreServer
@@ -265,12 +268,28 @@ class PlacementMap:
         return pm
 
     def save(self) -> None:
+        """Durable write: temp file + fsync + atomic rename (+ best-effort
+        directory fsync), so a crash — even a power loss — mid-save leaves
+        either the old table or the new one, never a torn file.  The
+        assignment table is what routing obeys; a torn table would orphan
+        every video."""
         if self.path is None:
             return
         p = pathlib.Path(self.path)
         tmp = p.with_suffix(p.suffix + ".tmp")
-        tmp.write_text(json.dumps(self.to_doc(), indent=1, sort_keys=True))
+        with open(tmp, "w") as fh:
+            fh.write(json.dumps(self.to_doc(), indent=1, sort_keys=True))
+            fh.flush()
+            os.fsync(fh.fileno())
         os.replace(tmp, p)
+        try:  # the rename itself must survive a power loss too
+            dfd = os.open(str(p.parent), os.O_RDONLY)
+            try:
+                os.fsync(dfd)
+            finally:
+                os.close(dfd)
+        except OSError:  # pragma: no cover - dir fsync is best-effort
+            pass
 
     @classmethod
     def load(cls, path: str) -> "PlacementMap":
@@ -356,7 +375,15 @@ class ClusterRouter:
                  placement_path: Optional[str] = None,
                  codec: Optional[str] = None,
                  max_frame_bytes: int = wire.DEFAULT_MAX_FRAME_BYTES,
-                 node_retries: int = 1, timeout: Optional[float] = None):
+                 node_retries: int = 1, timeout: Optional[float] = None,
+                 health_interval: Optional[float] = None):
+        """``timeout`` is the per-node connect timeout AND per-RPC
+        deadline (a hung node fails over instead of blocking a serving
+        thread; see ``RemoteVideoStore``).  ``health_interval`` starts a
+        background health loop probing every node about that often
+        (jittered) so recovered nodes rejoin automatically; down nodes
+        are probed with exponential backoff.  ``None`` (default) keeps
+        revival explicit via :meth:`ping_nodes`."""
         if not nodes:
             raise ValueError("cluster needs at least one node")
         self.addresses = dict(nodes)
@@ -364,6 +391,7 @@ class ClusterRouter:
         self.max_frame_bytes = int(max_frame_bytes)
         self.node_retries = int(node_retries)
         self.timeout = timeout
+        self.health_interval = health_interval
         if placement is None:
             if placement_path is not None and os.path.exists(placement_path):
                 placement = PlacementMap.load(placement_path)
@@ -385,11 +413,21 @@ class ClusterRouter:
         self._pool = ThreadPoolExecutor(
             max_workers=max(8, 4 * len(self.addresses)),
             thread_name_prefix="tasm-router")
+        self.repairer: Optional[RepairWorker] = None  # lazily started
+        self._health_stop = threading.Event()
+        self._health_thread: Optional[threading.Thread] = None
+        self._health_next: dict[str, float] = {}   # down-node probe gate
+        self._health_backoff: dict[str, float] = {}
         for name in self.addresses:  # eager dial; down nodes mark themselves
             try:
                 self._channel(name)
             except OSError:
                 self._down.add(name)
+        if health_interval is not None:
+            self._health_thread = threading.Thread(
+                target=self._health_loop, name="tasm-router-health",
+                daemon=True)
+            self._health_thread.start()
 
     # ------------------------------------------------------------ channels
     def _channel(self, name: str) -> RemoteVideoStore:
@@ -434,6 +472,47 @@ class ClusterRouter:
                 out[name] = False
         return out
 
+    def _health_loop(self) -> None:
+        """Periodic background ``ping_nodes``: live nodes are probed every
+        (jittered) interval so a hang/death is noticed off the serving
+        path, and down nodes rejoin automatically when they answer —
+        probed with exponential backoff so a corpse isn't hammered."""
+        interval = float(self.health_interval)
+        while not self._health_stop.wait(interval *
+                                         random.uniform(0.75, 1.25)):
+            with self._lock:
+                if self._closed:
+                    return
+                down = set(self._down)
+            now = time.monotonic()
+            for name in sorted(self.addresses):
+                if name in down and now < self._health_next.get(name, 0.0):
+                    continue
+                try:
+                    self._channel(name).ping()
+                    with self._lock:
+                        self._down.discard(name)
+                    self._health_backoff.pop(name, None)
+                    self._health_next.pop(name, None)
+                except _CONN_ERRORS:
+                    self._mark_down(name)
+                    b = min(self._health_backoff.get(name, interval) * 2,
+                            interval * 16)
+                    self._health_backoff[name] = b
+                    self._health_next[name] = time.monotonic() + b
+
+    def _dial_node(self, name: str) -> RemoteVideoStore:
+        """A FRESH connection to one node — repair streams ride their own
+        socket (caller closes it) so bulk chunk frames never head-of-line
+        block the shared serving channel."""
+        with self._lock:
+            if self._closed:
+                raise RuntimeError("cluster router is closed")
+            addr = self.addresses[name]
+        return RemoteVideoStore(
+            codec=self.codec, max_frame_bytes=self.max_frame_bytes,
+            want_plans=True, timeout=self.timeout, **_parse_addr(addr))
+
     def close(self) -> None:
         with self._lock:
             if self._closed:
@@ -441,6 +520,12 @@ class ClusterRouter:
             self._closed = True
             chans = list(self._channels.values())
             self._channels.clear()
+            repairer = self.repairer
+        self._health_stop.set()
+        if self._health_thread is not None:
+            self._health_thread.join(timeout=5)
+        if repairer is not None:
+            repairer.stop()
         self._pool.shutdown(wait=True)
         for ch in chans:
             try:
@@ -783,6 +868,172 @@ class ClusterRouter:
                 tbl[int(sot_id)] = tbl.get(int(sot_id), 0) + 1
         return dt
 
+    # -------------------------------------------------- repair / rebalance
+    def _repair_worker(self) -> RepairWorker:
+        with self._lock:
+            if self._closed:
+                raise RuntimeError("cluster router is closed")
+            if self.repairer is None:
+                self.repairer = RepairWorker(self)
+            return self.repairer
+
+    def expected_epochs(self, video: str) -> dict[int, int]:
+        """The layout-generation table this video is expected to serve
+        (ingest acks + router-acknowledged retiles) — what failover and
+        the repair commit verify against."""
+        with self._lock:
+            return dict(self._epochs.get(video) or {})
+
+    def _repair_source(self, video: str, *, exclude=()) -> Optional[str]:
+        """Next live, non-stale replica a copy can stream from."""
+        exclude = set(exclude)
+        with self._lock:
+            for n in self.placement.nodes_for(video):
+                if n in exclude or n in self._down:
+                    continue
+                if (video, n) in self._stale:
+                    continue
+                return n
+        return None
+
+    def _apply_repair(self, job) -> None:
+        """Flip placement after a verified copy: ``dst`` joins the
+        replica list (first for moves — it's the new primary), the dead
+        replicas this copy replaced leave it.  Verified marks clear so
+        the epoch check runs against the fresh replica before its first
+        read — a rebuilt replica can never serve a pre-retile
+        generation."""
+        with self._lock:
+            drop = set(job.drop)
+            reps = [n for n in self.placement.nodes_for(job.video)
+                    if n != job.dst and n not in drop]
+            reps = [job.dst] + reps if job.dst_primary else reps + [job.dst]
+            self.placement.assign(job.video, reps)
+            self._stale = {(v, n) for v, n in self._stale
+                           if not (v == job.video and n == job.dst)}
+            self._verified = {(v, n) for v, n in self._verified
+                              if v != job.video}
+
+    def repair(self, video: Optional[str] = None,
+               node: Optional[str] = None) -> list[dict]:
+        """Enqueue background copy jobs restoring the replication factor.
+        ``video=`` heals one video; ``node=`` treats that node as
+        permanently lost and re-replicates everything it held; neither
+        heals every under-replicated video (currently-down nodes count as
+        lost).  Returns the enqueued job descriptors immediately — the
+        copies run off the serving path; poll :meth:`repair_status` (or
+        :meth:`drain_repair`) for completion.  Reads keep routing to live
+        replicas throughout, and each video's assignment only flips after
+        its copy verifies."""
+        with self._lock:
+            lost = set(self._down)
+        if node is not None:
+            if node not in self.addresses:
+                raise KeyError(f"unknown node {node!r}")
+            lost.add(node)
+        if video is not None:
+            if video not in self.placement.assignments:
+                raise KeyError(f"unknown video {video!r}")
+            targets = [video]
+        else:
+            targets = sorted(self.placement.assignments)
+        jobs = []
+        for v in targets:
+            reps = self.placement.nodes_for(v)
+            live = [n for n in reps if n not in lost]
+            k = min(self.placement.replication,
+                    len([n for n in self.addresses if n not in lost]))
+            if len(live) >= k:
+                continue
+            src = self._repair_source(v, exclude=lost)
+            drop = tuple(n for n in reps if n in lost)
+            candidates = [n for n in self.placement._ring_walk(v)
+                          if n not in lost and n not in reps]
+            worker = self._repair_worker()
+            for dst in candidates[:k - len(live)]:
+                jobs.append(worker.submit(v, src or "", dst,
+                                          kind="replicate", drop=drop))
+        return [j.describe() for j in jobs]
+
+    def rebalance(self, apply: bool = False) -> dict:
+        """The moves :meth:`PlacementMap.plan_rebalance` suggests — and,
+        with ``apply=True``, their application: each moved video streams
+        to its ring owner in the background and flips to it as primary
+        only after verification.  A ring owner that already holds a
+        replica flips immediately (no data to move)."""
+        moves = self.placement.plan_rebalance()
+        doc: dict = {"moves": {v: list(m) for v, m in sorted(moves.items())},
+                     "applied": bool(apply), "jobs": [], "flipped": []}
+        if not apply:
+            return doc
+        with self._lock:
+            lost = set(self._down)
+        k = self.placement.replication
+        for v, (_cur, new) in sorted(moves.items()):
+            reps = self.placement.nodes_for(v)
+            if new in reps:
+                with self._lock:
+                    self.placement.assign(
+                        v, [new] + [n for n in reps if n != new])
+                    self._verified = {(vv, n) for vv, n in self._verified
+                                      if vv != v}
+                doc["flipped"].append(v)
+                continue
+            if new in lost:
+                continue    # cannot move onto a dead node; plan again later
+            src = self._repair_source(v, exclude={new})
+            worker = self._repair_worker()
+            # dst becomes primary; the old replica list is kept behind it,
+            # trimmed back to K
+            doc["jobs"].append(worker.submit(
+                v, src or "", new, kind="move", drop=tuple(reps[k - 1:]),
+                dst_primary=True).describe())
+        return doc
+
+    def repair_status(self) -> dict:
+        """Per-job progress (chunks/bytes/retries/re-streams) plus
+        worker-lifetime totals — the admin RPC the CLI polls."""
+        with self._lock:
+            worker = self.repairer
+        if worker is None:
+            return {"jobs": [], "stats": dataclasses.asdict(RepairStats())}
+        return {"jobs": worker.jobs(),
+                "stats": dataclasses.asdict(worker.stats())}
+
+    def drain_repair(self, timeout: Optional[float] = None) -> dict:
+        """Barrier: wait for every queued copy to finish, then return
+        :meth:`repair_status`.  Re-raises the most recent job failure."""
+        with self._lock:
+            worker = self.repairer
+        if worker is not None:
+            worker.drain(timeout)
+        return self.repair_status()
+
+    def join_node(self, name: str, addr) -> dict:
+        """Register a node at runtime: address book + placement ring.
+        Existing assignments are untouched (future placements may land on
+        it, and :meth:`repair` / :meth:`rebalance` can copy onto it)."""
+        with self._lock:
+            if self._closed:
+                raise RuntimeError("cluster router is closed")
+            known = self.addresses.get(name)
+            if known is not None and known != addr:
+                raise ValueError(
+                    f"node {name!r} is already registered at {known!r}")
+            self.addresses[name] = addr
+            if name not in self.placement.nodes:
+                self.placement.add_node(name)
+        try:
+            self._channel(name).ping()
+            with self._lock:
+                self._down.discard(name)
+            alive = True
+        except _CONN_ERRORS:
+            self._mark_down(name)
+            alive = False
+        return {"node": name, "alive": alive,
+                "nodes": sorted(self.addresses)}
+
     # ------------------------------------------------------------- tuning
     def _sum_tuner(self, fn) -> TunerStats:
         total = TunerStats()
@@ -870,6 +1121,17 @@ class ClusterRouterServer(VideoStoreServer):
             return router.placement.to_doc()
         if op == "node_health":
             return router.ping_nodes()
+        if op == "repair":
+            return router.repair(video=req.get("video"),
+                                 node=req.get("node"))
+        if op == "rebalance":
+            return router.rebalance(apply=bool(req.get("apply")))
+        if op == "repair_status":
+            return router.repair_status()
+        if op == "drain_repair":
+            return router.drain_repair(req.get("timeout"))
+        if op == "join_node":
+            return router.join_node(req["name"], req["addr"])
         return super()._handle(op, req)
 
 
@@ -884,3 +1146,28 @@ class ClusterClient(RemoteVideoStore):
     def node_health(self) -> dict:
         """Router-side health probe of every node (revives answerers)."""
         return self._call("node_health")
+
+    def repair(self, video: Optional[str] = None,
+               node: Optional[str] = None) -> list:
+        """Enqueue background re-replication; returns job descriptors."""
+        params: dict = {}
+        if video is not None:
+            params["video"] = video
+        if node is not None:
+            params["node"] = node
+        return self._call("repair", **params)
+
+    def rebalance(self, apply: bool = False) -> dict:
+        return self._call("rebalance", apply=bool(apply))
+
+    def repair_status(self) -> dict:
+        return self._call("repair_status")
+
+    def drain_repair(self, timeout: Optional[float] = None) -> dict:
+        """Block until every queued copy job finishes (or *timeout*)."""
+        dl = None if self._timeout is None else self._timeout + (timeout or 0.0)
+        return self._call("drain_repair", timeout=timeout, _deadline=dl)
+
+    def join_node(self, name: str, addr) -> dict:
+        """Register a (possibly fresh) node with the router at runtime."""
+        return self._call("join_node", name=name, addr=addr)

@@ -80,7 +80,8 @@ from repro.core.query import (PhysicalPlan, ScanPlan, ScanQuery, ScanResult,
                               ScanStats, SOTScan)
 from repro.core.scheduler import ScanScheduler, ServingSession
 from repro.core.semantic_index import SemanticIndex
-from repro.core.storage import DECODE_BACKENDS, SOTRecord, TileStore
+from repro.core.storage import (DECODE_BACKENDS, SOTRecord, TileStore,
+                                tile_checksum)
 from repro.core.tile_cache import DEFAULT_CACHE_BYTES, TileCache
 from repro.core.tuner import PhysicalTuner, TunerStats
 
@@ -90,6 +91,7 @@ GRANULARITIES = ("tile", "block")
 
 CATALOG_NAME = "catalog.json"      # v2+: version + video names, O(#videos)
 MANIFEST_NAME = "manifest.json"    # v2+: per-video shard; v1: the monolith
+IMPORT_DIR_NAME = ".import"        # staging namespace for replica copies
 MANIFEST_VERSION = 3               # v3: + per-video policy runtime state
 COMPAT_SHARD_VERSIONS = (2, MANIFEST_VERSION)   # v2 adopted, rewritten as v3
 LEGACY_MANIFEST_VERSION = 1
@@ -147,6 +149,9 @@ class VideoStore:
         self.max_decode_workers = max_decode_workers or min(
             8, os.cpu_count() or 4)
         self._videos: dict[str, VideoEntry] = {}
+        # replica-import staging for in-memory stores (on-disk stores stage
+        # under <root>/.import/<video>/ so a killed destination can resume)
+        self._import_mem: dict[str, dict[tuple, tuple]] = {}
         self.history: list[ScanStats] = []
         self._dirty_videos: set[str] = set()
         # videos whose policy runtime state mutated without dirtying the
@@ -581,6 +586,208 @@ class VideoStore:
             return {r.sot_id: r.epoch
                     for r in self.video(video).store.sots}
 
+    # ------------------------------------------------------ repair copy path
+    # Node->node replica streaming (the cluster's repair/rebalance data
+    # plane).  The source side is read-only (`export_entry` snapshots the
+    # manifest doc, `export_tile` one encoded tile stream at its current
+    # epoch); the destination stages chunks under a temp namespace keyed by
+    # video, verifies each chunk's sha256 on arrival AND again at commit,
+    # and only `commit_import` makes the video visible — the catalog write
+    # is the commit point, so a SIGKILL anywhere mid-copy leaves zero torn
+    # state (stray staging files are re-verified or discarded on resume).
+
+    def export_entry(self, name: str) -> dict:
+        """The video's manifest-shard doc (encoder, policy + runtime state,
+        cost model, semantic index, SOT/epoch table) — the metadata leg of
+        a replica copy, fetched last so the epoch table it carries reflects
+        every chunk already streamed."""
+        with self.scheduler.lock:
+            return {"version": MANIFEST_VERSION, "name": name,
+                    **self._entry_doc(self.video(name))}
+
+    def export_tile(self, name: str, sot_id: int, tile_idx: int) -> dict:
+        """One encoded tile stream at its current epoch, with a content
+        checksum.  Reads run off-lock so exports never stall serving; a
+        foreground retile racing the read is detected by an epoch re-check
+        and the read retries against the new generation."""
+        for _ in range(8):
+            with self.scheduler.lock:
+                entry = self.video(name)
+                if not 0 <= sot_id < len(entry.store.sots):
+                    raise ValueError(f"video {name!r} has no SOT {sot_id}")
+                rec = entry.store.sots[sot_id]
+                if not 0 <= tile_idx < rec.layout.n_tiles:
+                    raise ValueError(
+                        f"SOT {sot_id} of {name!r} has no tile {tile_idx} "
+                        f"(layout {rec.layout.describe()})")
+                epoch = rec.epoch
+            try:
+                enc = entry.store._read_tile(rec, tile_idx)
+            except (KeyError, FileNotFoundError):
+                continue    # retile raced the read: retry at the new epoch
+            with self.scheduler.lock:
+                if rec.epoch != epoch:
+                    continue
+            return {"sot_id": sot_id, "epoch": epoch, "tile_idx": tile_idx,
+                    "enc": {"kq": list(enc["kq"]), "pq": list(enc["pq"]),
+                            "h": enc["h"], "w": enc["w"], "gop": enc["gop"],
+                            "qp": enc["qp"], "n_frames": enc["n_frames"],
+                            "size_bytes": float(enc["size_bytes"])},
+                    "checksum": tile_checksum(enc)}
+        raise RuntimeError(f"export of {name!r} SOT {sot_id} kept racing "
+                           f"retiles; giving up after 8 attempts")
+
+    def _import_dir(self, name: str) -> pathlib.Path:
+        assert self.root is not None
+        return self.root / IMPORT_DIR_NAME / name
+
+    def begin_import(self, name: str) -> dict:
+        """Open — or resume — the staging namespace for an incoming replica
+        copy.  Returns every chunk already staged and intact
+        (``{"staged": [[sot_id, epoch, tile_idx, checksum], ...]}``) so a
+        retried repair re-streams only what is missing; torn leftovers from
+        a killed destination are verified against their stored checksum and
+        discarded."""
+        with self.scheduler.lock:
+            if name in self._videos:
+                raise ValueError(
+                    f"video {name!r} already exists on this node")
+            staged = []
+            if self.root is None:
+                for (s, e, t), (_enc, sha) in sorted(
+                        self._import_mem.get(name, {}).items()):
+                    staged.append([s, e, t, sha])
+                return {"staged": staged}
+            d = self._import_dir(name)
+            d.mkdir(parents=True, exist_ok=True)
+            for f in sorted(d.iterdir()):
+                if f.name.startswith("."):  # tmp torn by a mid-write kill
+                    f.unlink(missing_ok=True)
+                    continue
+                chunk = _load_staged_tile(f)
+                if chunk is None:           # unreadable or checksum-torn
+                    f.unlink(missing_ok=True)
+                    continue
+                s, e, t, _enc, sha = chunk
+                staged.append([s, e, t, sha])
+            return {"staged": staged}
+
+    def stage_import_chunk(self, name: str, sot_id: int, epoch: int,
+                           tile_idx: int, enc: dict, checksum: str) -> None:
+        """Land one streamed tile chunk in the staging namespace.  The
+        checksum is recomputed over the decoded payload — a chunk torn in
+        flight is rejected here, before it can ever reach a commit."""
+        enc = {"kq": list(enc["kq"]), "pq": list(enc["pq"]),
+               "h": int(enc["h"]), "w": int(enc["w"]),
+               "gop": int(enc["gop"]), "qp": int(enc["qp"]),
+               "n_frames": int(enc["n_frames"]),
+               "size_bytes": float(enc["size_bytes"])}
+        got = tile_checksum(enc)
+        if got != checksum:
+            raise ValueError(
+                f"checksum mismatch staging {name!r} SOT {sot_id} tile "
+                f"{tile_idx} (epoch {epoch}): chunk arrived torn")
+        with self.scheduler.lock:
+            if name in self._videos:
+                raise ValueError(
+                    f"video {name!r} already exists on this node")
+            if self.root is None:
+                self._import_mem.setdefault(name, {})[
+                    (int(sot_id), int(epoch), int(tile_idx))] = (enc, checksum)
+                return
+        d = self._import_dir(name)
+        d.mkdir(parents=True, exist_ok=True)
+        final = d / f"s{int(sot_id)}_e{int(epoch)}_t{int(tile_idx)}.npz"
+        tmp = d / f".{final.name}.tmp"
+        members = {}
+        for g in range(len(enc["kq"])):
+            members[f"kq_{g}"] = enc["kq"][g]
+            members[f"pq_{g}"] = enc["pq"][g]
+        with open(tmp, "wb") as fh:  # handle, not name: numpy would
+            np.savez_compressed(     # append ".npz" to the tmp name
+                fh,
+                meta=np.array([enc["h"], enc["w"], enc["gop"], enc["qp"],
+                               enc["n_frames"]]),
+                size=np.array([enc["size_bytes"]]),
+                key=np.array([sot_id, epoch, tile_idx], dtype=np.int64),
+                sha=np.frombuffer(checksum.encode(),
+                                  dtype=np.uint8).copy(),
+                **members)
+            fh.flush()
+            os.fsync(fh.fileno())
+        os.replace(tmp, final)
+
+    def _staged_chunk(self, name: str, sot_id: int, epoch: int,
+                      tile_idx: int):
+        """The staged enc for one chunk, re-verified, or None."""
+        if self.root is None:
+            got = self._import_mem.get(name, {}).get(
+                (sot_id, epoch, tile_idx))
+            return got[0] if got else None
+        f = self._import_dir(name) / f"s{sot_id}_e{epoch}_t{tile_idx}.npz"
+        if not f.exists():
+            return None
+        chunk = _load_staged_tile(f)
+        return chunk[3] if chunk else None
+
+    def commit_import(self, name: str, doc: dict,
+                      min_epochs: Optional[dict] = None) -> dict:
+        """Flip a fully staged replica copy live, atomically.  Verifies the
+        doc's epoch table against ``min_epochs`` (the router's expected
+        generations — a pre-retile copy never commits), re-verifies every
+        tile's checksum from staging, then installs the entry and persists
+        shard + catalog; the catalog write is the commit point.  Idempotent:
+        re-committing a video already present at >= epochs is a no-op."""
+        with self.scheduler.lock:
+            doc_epochs = {int(s["sot_id"]): int(s["epoch"])
+                          for s in doc["sots"]}
+            if name in self._videos:
+                have = {r.sot_id: r.epoch
+                        for r in self._videos[name].store.sots}
+                if all(have.get(s, -1) >= e for s, e in doc_epochs.items()):
+                    self._discard_import(name)
+                    return {"ok": True, "already": True,
+                            "epochs": sorted(have.items())}
+                raise ValueError(
+                    f"video {name!r} already exists at older epochs; "
+                    f"drop it before re-importing")
+            for s, e in (min_epochs or {}).items():
+                if doc_epochs.get(int(s), -1) < int(e):
+                    raise ValueError(
+                        f"import of {name!r} is stale: SOT {s} staged at "
+                        f"epoch {doc_epochs.get(int(s), -1)} < required {e}")
+            tiles = {}
+            for s in doc["sots"]:
+                n_tiles = len(s["heights"]) * len(s["widths"])
+                for t in range(n_tiles):
+                    key = (int(s["sot_id"]), int(s["epoch"]), t)
+                    enc = self._staged_chunk(name, *key)
+                    if enc is None:
+                        raise ValueError(
+                            f"cannot commit {name!r}: SOT {key[0]} tile {t} "
+                            f"(epoch {key[1]}) is not staged intact")
+                    tiles[key] = enc
+            entry = self._entry_from_doc(name, doc, tiles=tiles)
+            self._videos[name] = entry
+            self._catalog_dirty = True
+            self._dirty_videos.add(name)
+            self.save()
+            self._discard_import(name)
+            return {"ok": True, "already": False,
+                    "epochs": sorted(doc_epochs.items())}
+
+    def abort_import(self, name: str) -> None:
+        """Drop the staging namespace for a cancelled copy."""
+        with self.scheduler.lock:
+            self._discard_import(name)
+
+    def _discard_import(self, name: str) -> None:
+        self._import_mem.pop(name, None)
+        if self.root is not None:
+            d = self._import_dir(name)
+            if d.exists():
+                shutil.rmtree(d, ignore_errors=True)
+
     # ---------------------------------------------------------------- stats
     def storage_bytes(self, video: Optional[str] = None) -> float:
         if video is not None:
@@ -679,7 +886,8 @@ class VideoStore:
             "index": e.index.dump(e.name),
         }
 
-    def _entry_from_doc(self, name: str, v: dict) -> VideoEntry:
+    def _entry_from_doc(self, name: str, v: dict, *,
+                        tiles: Optional[dict] = None) -> VideoEntry:
         enc = EncoderConfig(**v["encoder"])
         cmd = v["cost_model"]
         cm = CostModel(beta=cmd["beta"], gamma=cmd["gamma"],
@@ -694,16 +902,29 @@ class VideoStore:
         entry = VideoEntry(
             name=name, encoder=enc, policy=policy,
             cost_model=cm,
-            store=TileStore(name, enc, root=str(self.root),
+            store=TileStore(name, enc,
+                            root=str(self.root) if self.root else None,
                             sot_len=v["sot_len"],
                             decode_backend=self.decode_backend),
             index=SemanticIndex(),
             frame_hw=tuple(v["frame_hw"]) if v["frame_hw"] else None)
-        entry.store.restore([
+        records = [
             SOTRecord(s["sot_id"], s["frame_start"], s["frame_end"],
                       TileLayout(tuple(s["heights"]), tuple(s["widths"])),
                       epoch=s["epoch"], size_bytes=s["size_bytes"])
-            for s in v["sots"]])
+            for s in v["sots"]]
+        if tiles is None:
+            # catalog reopen: tile data already in its on-disk home
+            entry.store.restore(records)
+        else:
+            # replica import: materialize every tile stream from the staged
+            # chunks (works for in-memory and on-disk stores alike), then
+            # register the records
+            for rec in records:
+                for t in range(rec.layout.n_tiles):
+                    entry.store._write_tile(
+                        rec, t, tiles[(rec.sot_id, rec.epoch, t)])
+                entry.store._register(rec)
         entry.index.load(name, v["index"])
         return entry
 
@@ -748,6 +969,29 @@ class VideoStore:
 
 
 # ------------------------------------------------------------------ helpers
+def _load_staged_tile(path: pathlib.Path):
+    """Read one staged import chunk back and re-verify it against its
+    stored checksum.  Returns ``(sot_id, epoch, tile_idx, enc, sha)`` or
+    ``None`` for anything unreadable or torn (a SIGKILLed destination can
+    leave both) — callers discard those and re-stream."""
+    try:
+        with np.load(path) as z:
+            sot_id, epoch, tile_idx = (int(x) for x in z["key"])
+            h, w, gop, qp, n_frames = (int(x) for x in z["meta"])
+            n_gops = n_frames // gop
+            enc = {"kq": [z[f"kq_{g}"] for g in range(n_gops)],
+                   "pq": [z[f"pq_{g}"] for g in range(n_gops)],
+                   "h": h, "w": w, "gop": gop, "qp": qp,
+                   "n_frames": n_frames,
+                   "size_bytes": float(z["size"][0])}
+            sha = z["sha"].tobytes().decode()
+        if tile_checksum(enc) != sha:
+            return None
+        return sot_id, epoch, tile_idx, enc, sha
+    except Exception:
+        return None
+
+
 def _atomic_write_json(path: pathlib.Path, doc: dict) -> None:
     path.parent.mkdir(parents=True, exist_ok=True)
     tmp = path.parent / f".{path.name}.tmp"

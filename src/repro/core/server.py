@@ -661,6 +661,29 @@ class VideoStoreServer:
             return dataclasses.asdict(store.tuner_stats())
         if op == "epochs":
             return [[s, e] for s, e in store.epochs(req["video"]).items()]
+        # -- replica streaming (the cluster repair data plane): each chunk
+        # is one request/reply frame, so copies are resumable at chunk
+        # granularity and ride the same wire/codec as everything else
+        if op == "export_meta":
+            return store.export_entry(req["video"])
+        if op == "export_chunk":
+            return store.export_tile(req["video"], int(req["sot_id"]),
+                                     int(req["tile_idx"]))
+        if op == "import_begin":
+            return store.begin_import(req["video"])
+        if op == "import_chunk":
+            store.stage_import_chunk(req["video"], int(req["sot_id"]),
+                                     int(req["epoch"]), int(req["tile_idx"]),
+                                     req["enc"], str(req["checksum"]))
+            return True
+        if op == "import_commit":
+            min_epochs = {int(s): int(e)
+                          for s, e in (req.get("min_epochs") or [])}
+            return store.commit_import(req["video"], req["doc"],
+                                       min_epochs=min_epochs)
+        if op == "import_abort":
+            store.abort_import(req["video"])
+            return True
         if op == "stats":
             return store.stats()
         if op == "shutdown":

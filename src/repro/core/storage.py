@@ -11,6 +11,7 @@ backs unit tests; benchmarks use the on-disk layout.
 """
 from __future__ import annotations
 
+import hashlib
 import pathlib
 import shutil
 import threading
@@ -33,6 +34,26 @@ class SOTRecord:
     layout: TileLayout
     epoch: int = 0
     size_bytes: float = 0.0
+
+
+def tile_checksum(enc: dict) -> str:
+    """Content digest of one encoded tile stream — scalar header plus every
+    per-GOP quantized member, dtype/shape included so a reinterpreted buffer
+    never collides.  The repair copy path verifies this end to end: computed
+    on the source before the chunk ships, recomputed on the destination
+    after the wire decode, and re-checked at commit before the replica
+    flips live."""
+    h = hashlib.sha256()
+    h.update(np.array([enc["h"], enc["w"], enc["gop"], enc["qp"],
+                       enc["n_frames"]], dtype=np.int64).tobytes())
+    h.update(np.float64(enc["size_bytes"]).tobytes())
+    for g in range(len(enc["kq"])):
+        for member in (enc["kq"][g], enc["pq"][g]):
+            a = np.ascontiguousarray(member)
+            h.update(str(a.dtype).encode())
+            h.update(np.array(a.shape, dtype=np.int64).tobytes())
+            h.update(a.tobytes())
+    return h.hexdigest()
 
 
 #: decode_tiles implementations: "numpy" = the per-tile oracle loop,

@@ -1,0 +1,223 @@
+"""Byte-level fault-injection proxy for the cluster copy path.
+
+Grown from the byte-dribbling sender in ``test_wire.py``: instead of a
+one-shot helper thread inside a test, a real listener that sits between a
+client (the router / repair worker) and a backend node socket and relays
+bytes — injecting the failure modes a repair stream must survive:
+
+* **drop** — the connection is accepted and immediately closed (the node
+  is reachable but refuses service);
+* **delay** — every relayed chunk is held for ``delay_s`` (a slow link);
+* **stall** — the first byte in a direction is held for ``stall_s`` (a
+  hung node: connects fine, never answers — what RPC deadlines catch);
+* **torn frame** — one byte at stream offset ``corrupt_at`` is flipped
+  (a frame that arrives, but wrong — what checksums catch);
+* **mid-stream disconnect** — the stream is severed after ``cut_after``
+  relayed bytes (what chunked, resumable waves recover from).
+
+Faults are consumed one per accepted connection, in order; once the list
+is exhausted every further connection relays cleanly — so "first attempt
+torn, retry succeeds" is one ``FaultProxy(..., faults=[Fault(...)])``.
+Register the proxy's ``address`` with the router in place of the node's
+and the whole copy path — dial, handshake, every chunk RPC — flows
+through it.
+"""
+from __future__ import annotations
+
+import dataclasses
+import os
+import socket
+import tempfile
+import threading
+from typing import Optional
+
+
+@dataclasses.dataclass
+class Fault:
+    """What to do to one proxied connection.  ``direction`` selects which
+    byte stream the byte-offset faults meter: ``"c2b"`` (client uploads —
+    e.g. an ``import_chunk`` payload), ``"b2c"`` (backend replies — e.g.
+    an ``export_chunk`` payload), or ``"both"`` (one shared offset
+    counter across both)."""
+    drop: bool = False                  # close immediately on accept
+    delay_s: float = 0.0                # per-relayed-chunk delay
+    stall_s: float = 0.0                # hold the FIRST byte this long
+    cut_after: Optional[int] = None     # sever after N relayed bytes
+    corrupt_at: Optional[int] = None    # flip the byte at stream offset N
+    direction: str = "both"
+
+
+class _ConnState:
+    def __init__(self, fault: Optional[Fault]):
+        self.fault = fault
+        self.lock = threading.Lock()
+        self.sent = {"c2b": 0, "b2c": 0, "both": 0}
+        self.corrupted = False
+        self.stalled = set()
+
+
+class FaultProxy:
+    """A Unix-socket man-in-the-middle for one backend node.
+
+    >>> proxy = FaultProxy(node_path, faults=[Fault(cut_after=9000)])
+    >>> router = ClusterRouter({...,"n2": proxy.address}, ...)
+
+    The first connection through the proxy is severed 9000 bytes in; every
+    retry relays cleanly.  ``add_fault`` queues more mid-test.  Counters
+    (``connections``, ``faults_fired``) let tests assert the fault
+    actually hit the path under test.
+    """
+
+    def __init__(self, backend: str, path: Optional[str] = None,
+                 faults=None):
+        self.backend = backend
+        if path is None:
+            fd, p = tempfile.mkstemp(suffix=".sock", prefix="faultproxy-")
+            os.close(fd)
+            os.unlink(p)
+            path = p
+        self.address = path
+        self._faults = list(faults or [])
+        self._lock = threading.Lock()
+        self._stop = threading.Event()
+        self._conns: list[socket.socket] = []
+        self.connections = 0
+        self.faults_fired = 0
+        self._listener = socket.socket(socket.AF_UNIX, socket.SOCK_STREAM)
+        self._listener.bind(path)
+        self._listener.listen(16)
+        self._thread = threading.Thread(target=self._accept_loop,
+                                        daemon=True, name="fault-proxy")
+        self._thread.start()
+
+    # ------------------------------------------------------------- control
+    def add_fault(self, fault: Fault) -> None:
+        with self._lock:
+            self._faults.append(fault)
+
+    def pending_faults(self) -> int:
+        with self._lock:
+            return len(self._faults)
+
+    def clear_faults(self) -> None:
+        with self._lock:
+            self._faults.clear()
+
+    def close(self) -> None:
+        self._stop.set()
+        try:
+            self._listener.close()
+        except OSError:
+            pass
+        with self._lock:
+            conns, self._conns = self._conns[:], []
+        for c in conns:
+            try:
+                c.close()
+            except OSError:
+                pass
+        try:
+            os.unlink(self.address)
+        except OSError:
+            pass
+
+    def __enter__(self):
+        return self
+
+    def __exit__(self, *exc):
+        self.close()
+
+    # -------------------------------------------------------------- relay
+    def _accept_loop(self) -> None:
+        while not self._stop.is_set():
+            try:
+                client, _ = self._listener.accept()
+            except OSError:
+                return
+            with self._lock:
+                self.connections += 1
+                fault = self._faults.pop(0) if self._faults else None
+                if fault is not None:
+                    self.faults_fired += 1
+            if fault is not None and fault.drop:
+                try:
+                    client.close()
+                except OSError:
+                    continue
+                continue
+            try:
+                backend = socket.socket(socket.AF_UNIX, socket.SOCK_STREAM)
+                backend.connect(self.backend)
+            except OSError:
+                client.close()
+                continue
+            with self._lock:
+                self._conns += [client, backend]
+            state = _ConnState(fault)
+            for src, dst, direction in ((client, backend, "c2b"),
+                                        (backend, client, "b2c")):
+                threading.Thread(target=self._relay, daemon=True,
+                                 args=(src, dst, direction, state)).start()
+
+    def _relay(self, src: socket.socket, dst: socket.socket,
+               direction: str, state: _ConnState) -> None:
+        fault = state.fault
+        metered = fault is not None and fault.direction in (direction,
+                                                            "both")
+        key = fault.direction if metered else direction
+        try:
+            while not self._stop.is_set():
+                try:
+                    data = src.recv(65536)
+                except OSError:
+                    break
+                if not data:
+                    break
+                sever = False
+                if metered:
+                    data, sever = self._apply(fault, key, direction, data,
+                                              state)
+                if data:
+                    try:
+                        dst.sendall(data)
+                    except OSError:
+                        break
+                    with state.lock:
+                        state.sent[key] += len(data)
+                if sever:
+                    break
+        finally:
+            for s in (src, dst):
+                try:
+                    s.shutdown(socket.SHUT_RDWR)
+                except OSError:
+                    pass
+                try:
+                    s.close()
+                except OSError:
+                    pass
+
+    def _apply(self, fault: Fault, key: str, direction: str, data: bytes,
+               state: _ConnState):
+        """Fault one relayed chunk.  Returns ``(bytes_to_forward,
+        sever)`` — forwarding a partial prefix then severing is exactly
+        what a mid-write crash looks like to the reader."""
+        if fault.stall_s and direction not in state.stalled:
+            state.stalled.add(direction)
+            if self._stop.wait(fault.stall_s):
+                return b"", True
+        if fault.delay_s and self._stop.wait(fault.delay_s):
+            return b"", True
+        with state.lock:
+            offset = state.sent[key]
+            tear = (fault.corrupt_at is not None and not state.corrupted
+                    and offset <= fault.corrupt_at < offset + len(data))
+            if tear:
+                state.corrupted = True
+        if tear:
+            i = fault.corrupt_at - offset
+            data = data[:i] + bytes([data[i] ^ 0xFF]) + data[i + 1:]
+        if fault.cut_after is not None and \
+                offset + len(data) >= fault.cut_after:
+            return data[:max(0, fault.cut_after - offset)], True
+        return data, False
