@@ -22,7 +22,8 @@ import numpy as np
 
 from benchmarks.common import ENC, corpus_video, emit, shared_cost_model
 from benchmarks.fig11_workloads import _zipf_starts
-from repro.core import PretileAllPolicy, RegretPolicy, VideoStore
+from repro.core import (CacheConfig, DecodeConfig, PretileAllPolicy,
+                        RegretPolicy, TuningConfig, VideoStore)
 from repro.core.layout import partition
 from repro.core.detector import DetectorConfig, detect
 
@@ -50,8 +51,9 @@ def run():
         # cache disabled: decode cost per layout is the measured quantity;
         # inline tuning: re-tiling is charged to the triggering query;
         # ROI decode off: the figure models a full-tile decoder (see fig11)
-        store = VideoStore(tile_cache_bytes=0, tuning="inline",
-                           roi_decode=False)
+        store = VideoStore(cache=CacheConfig(budget_bytes=0),
+                           tuning=TuningConfig(mode="inline"),
+                           decode=DecodeConfig(roi=False))
         entry = store.add_video("v", encoder=ENC, policy=RegretPolicy(),
                                 cost_model=model)
         upfront = 0.0
@@ -100,7 +102,8 @@ def run():
         return np.cumsum(per_query)
 
     # baseline: untiled, but queries still pay lazy detection (same for all)
-    base_store = VideoStore(tile_cache_bytes=0, roi_decode=False)
+    base_store = VideoStore(cache=CacheConfig(budget_bytes=0),
+                            decode=DecodeConfig(roi=False))
     base_store.add_video("v", encoder=ENC, cost_model=model)
     base_store.add_detections("v", {f: d for f, d in enumerate(dets)})
     base_store.ingest("v", frames)

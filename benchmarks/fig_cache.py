@@ -1,0 +1,285 @@
+"""Workload-predictive tile cache benchmark, emitting ``BENCH_cache.json``.
+
+Four regimes over the serving-layer cache (``core/tile_cache.py``):
+
+- ``sliding``  — a client scanning sliding windows over a video, predictive
+                 config on (prefetch + reuse eviction + block packing) vs a
+                 cache-off control.  HARD gates: every window bit-identical
+                 to the control, and once the predictor locks on, a whole
+                 warm window decodes 0 tiles (misses == 0, pixels == 0).
+- ``packed``   — an ROI-decode trace captured from a real sparse-video
+                 workload, replayed into block-packed vs zero-padded caches
+                 sharing the same tight byte budget.  HARD gate: the packed
+                 cache holds >= 2x the entries, serving identical pixels.
+- ``lru``      — a randomized put/get/invalidate trace replayed against a
+                 literal re-implementation of the pre-predictive cache.
+                 HARD gate: ``eviction="lru"`` reproduces its eviction
+                 order and counters byte-for-byte.
+- ``latency``  — wall time of a fully-warm predictive pass vs the cache-off
+                 control.  SOFT gate in quick mode (single-sample timing),
+                 hard in full runs: warm must beat cache-off.
+
+    PYTHONPATH=src python benchmarks/fig_cache.py                # full
+    REPRO_QUICK=1 PYTHONPATH=src python benchmarks/fig_cache.py  # smoke
+
+Also prints ``name,us_per_call,derived`` CSV rows for ``benchmarks.run``.
+"""
+from __future__ import annotations
+
+import json
+import os
+import pathlib
+import time
+from collections import OrderedDict
+
+import numpy as np
+
+from benchmarks.common import (ENC, corpus_video, emit, gate, quick_mode,
+                               shared_cost_model)
+from repro.core import CacheConfig, NoTilingPolicy, TileCache, VideoStore
+from repro.core.tile_cache import _covers
+
+QUICK = quick_mode()
+N_FRAMES = 128 if QUICK else 256
+WINDOW = 32
+OUT = os.environ.get("REPRO_BENCH_OUT", "BENCH_cache.json")
+
+PREDICTIVE = CacheConfig(prefetch=True, prefetch_depth=2,
+                         eviction="reuse", block_packed=True)
+
+
+def build_store(frames, dets, *, cache: CacheConfig) -> VideoStore:
+    store = VideoStore(cache=cache)
+    store.add_video("cam0", encoder=ENC, policy=NoTilingPolicy(),
+                    cost_model=shared_cost_model(), sot_len=WINDOW)
+    store.ingest("cam0", frames)
+    store.add_detections("cam0", {f: d for f, d in enumerate(dets)})
+    return store
+
+
+def windows(store):
+    return [store.scan("cam0").labels("car").frames(i * WINDOW,
+                                                    (i + 1) * WINDOW)
+            for i in range(N_FRAMES // WINDOW)]
+
+
+def regions_equal(a, b) -> bool:
+    if len(a) != len(b):
+        return False
+    return all(ra[:-1] == rb[:-1] and np.array_equal(ra[-1], rb[-1])
+               for ra, rb in zip(a, b))
+
+
+# ------------------------------------------------------------- sliding wave
+def bench_sliding(report, pred, ctrl) -> None:
+    t0 = time.perf_counter()
+    waves = []
+    identical = True
+    for qp, qc in zip(windows(pred), windows(ctrl)):
+        rp, rc = qp.execute(), qc.execute()
+        identical &= regions_equal(rp.regions, rc.regions)
+        pred.drain_prefetch(timeout=60)
+        waves.append({"misses": rp.stats.cache_misses,
+                      "pixels": rp.stats.pixels_decoded})
+    elapsed = time.perf_counter() - t0
+    cs = pred.tile_cache.stats()
+    report["sliding"] = {
+        "waves": waves,
+        "prefetch_issued": cs.prefetch_issued,
+        "prefetch_hits": cs.prefetch_hits,
+        "prefetch_wasted": cs.prefetch_wasted,
+        "identical_to_cache_off": identical,
+    }
+    gate(identical, "predictive sliding-window results differ from the "
+                    "cache-off control")
+    warm = waves[-1]
+    gate(warm["misses"] == 0 and warm["pixels"] == 0,
+         f"warm sliding-window wave after prefetch still decoded: {warm}")
+    gate(cs.prefetch_issued > 0 and cs.prefetch_hits > 0,
+         "prefetcher never fired on a monotone sliding scan")
+    emit("cache_sliding_wave", elapsed / len(waves) * 1e6,
+         f"warm_misses={warm['misses']};prefetch_hits={cs.prefetch_hits}")
+
+
+# ---------------------------------------------------------- packed capacity
+def bench_packed(report) -> None:
+    """Capture a real ROI trace, replay it under a tight shared budget."""
+    frames, dets, _ = corpus_video("sparse", 0, N_FRAMES)
+    src = VideoStore(cache=CacheConfig(block_packed=True))
+    src.add_video("cam0", encoder=ENC, policy=NoTilingPolicy(),
+                  cost_model=shared_cost_model(), sot_len=16)
+    src.ingest("cam0", frames)
+    src.add_detections("cam0", {f: d for f, d in enumerate(dets)})
+    try:
+        for i in range(N_FRAMES // 16):
+            src.scan("cam0").labels("person") \
+               .frames(i * 16, (i + 1) * 16).execute()
+        trace = []
+        for key in list(src.tile_cache._lru):
+            n, blocks = src.tile_cache.coverage(key)
+            arr = src.tile_cache.get(
+                key, blocks=None if blocks is None else sorted(blocks))
+            trace.append((key, arr,
+                          None if blocks is None else sorted(blocks)))
+    finally:
+        src.close()
+    gate(any(b is not None for _, _, b in trace),
+         "ROI workload produced no masked cache entries to replay")
+    # a budget that fits only a few zero-padded canvases
+    budget = 3 * max(a.nbytes for _, a, _ in trace)
+    packed = TileCache(config=CacheConfig(budget_bytes=budget,
+                                          block_packed=True))
+    plain = TileCache(config=CacheConfig(budget_bytes=budget,
+                                         block_packed=False))
+    t0 = time.perf_counter()
+    for key, arr, blocks in trace:
+        packed.put(key, arr, blocks=blocks)
+        plain.put(key, arr, blocks=blocks)
+    elapsed = time.perf_counter() - t0
+    identical = True
+    for key, arr, blocks in trace:
+        got = packed.get(key, blocks=blocks)
+        if got is not None:
+            identical &= bool(np.array_equal(got, arr))
+    report["packed"] = {
+        "trace_entries": len(trace),
+        "budget_bytes": budget,
+        "entries_packed": len(packed),
+        "entries_padded": len(plain),
+        "packed_bytes_saved": packed.stats().packed_bytes_saved,
+        "identical": identical,
+    }
+    gate(identical, "packed entries served different pixels than stored")
+    gate(len(packed) >= 2 * max(len(plain), 1),
+         f"block packing fit {len(packed)} entries vs {len(plain)} "
+         f"zero-padded — wanted >= 2x")
+    emit("cache_packed_capacity", elapsed / max(len(trace), 1) * 1e6,
+         f"entries={len(packed)}v{len(plain)};"
+         f"saved={packed.stats().packed_bytes_saved}")
+
+
+# ----------------------------------------------------------- lru bitforbit
+class _SeedLru:
+    """The pre-predictive TileCache, verbatim: the byte-for-byte reference
+    that ``eviction="lru"`` must reproduce."""
+
+    def __init__(self, budget_bytes):
+        self.budget_bytes = int(budget_bytes)
+        self._lru = OrderedDict()
+        self.hits = self.misses = self.evictions = 0
+        self.bytes = 0
+
+    def get(self, key, n_frames=None, blocks=None):
+        requested = None if blocks is None else frozenset(blocks)
+        e = self._lru.get(key)
+        if e is None or (n_frames is not None
+                         and e[0].shape[0] < n_frames) \
+                or not _covers(e[1], requested):
+            self.misses += 1
+            return None
+        self._lru.move_to_end(key)
+        self.hits += 1
+        return e[0] if n_frames is None else e[0][:n_frames]
+
+    def put(self, key, arr, blocks=None):
+        if arr.nbytes > self.budget_bytes:
+            return
+        new_blocks = None if blocks is None else frozenset(blocks)
+        old = self._lru.pop(key, None)
+        if old is not None:
+            if old[0].shape[0] > arr.shape[0] \
+                    or not _covers(new_blocks, old[1]):
+                self._lru[key] = old
+                return
+            self.bytes -= old[0].nbytes
+        self._lru[key] = (arr, new_blocks)
+        self.bytes += arr.nbytes
+        while self.bytes > self.budget_bytes and self._lru:
+            _, victim = self._lru.popitem(last=False)
+            self.bytes -= victim[0].nbytes
+            self.evictions += 1
+
+
+def bench_lru_replay(report) -> None:
+    rng = np.random.default_rng(0)
+    shape = (8, 16, 16)
+    budget = 3 * int(np.prod(shape)) * 4
+    cache = TileCache(config=CacheConfig(budget_bytes=budget,
+                                         eviction="lru",
+                                         block_packed=False))
+    seed = _SeedLru(budget)
+    n_ops = 400 if QUICK else 2000
+    masks = [None, [0], [1, 2], [0, 1, 2, 3]]
+    t0 = time.perf_counter()
+    ok = True
+    for _ in range(n_ops):
+        op = rng.integers(0, 3)
+        key = ("v", 0, 0, int(rng.integers(0, 6)))
+        depth = int(rng.choice([2, 4, 8]))
+        blocks = masks[int(rng.integers(0, len(masks)))]
+        if op <= 1:
+            arr = rng.random((depth, 16, 16), dtype=np.float32)
+            cache.put(key, arr, blocks=blocks)
+            seed.put(key, arr, blocks=blocks)
+        else:
+            got = cache.get(key, n_frames=depth, blocks=blocks)
+            want = seed.get(key, n_frames=depth, blocks=blocks)
+            ok &= (got is None) == (want is None)
+        st = cache.stats()
+        ok &= (list(cache._lru) == list(seed._lru)
+               and st.bytes_cached == seed.bytes
+               and st.evictions == seed.evictions
+               and (st.hits, st.misses) == (seed.hits, seed.misses))
+        if not ok:
+            break
+    elapsed = time.perf_counter() - t0
+    report["lru"] = {"ops": n_ops, "bit_for_bit": ok}
+    gate(ok, 'eviction="lru" diverged from the legacy cache replay')
+    emit("cache_lru_replay", elapsed / n_ops * 1e6, f"ops={n_ops};ok={ok}")
+
+
+# -------------------------------------------------------------- warm latency
+def bench_latency(report, pred, ctrl) -> None:
+    t0 = time.perf_counter()
+    for q in windows(pred):
+        q.execute()
+    warm_s = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    for q in windows(ctrl):
+        q.execute()
+    cold_s = time.perf_counter() - t0
+    report["latency"] = {
+        "warm_s": warm_s, "cache_off_s": cold_s,
+        "speedup": cold_s / max(warm_s, 1e-9),
+    }
+    # single-sample timing: soft in quick mode, hard in full runs
+    gate(warm_s < cold_s,
+         f"warm predictive pass ({warm_s:.3f}s) not faster than "
+         f"cache-off ({cold_s:.3f}s)", hard=not QUICK)
+    emit("cache_warm_pass", warm_s * 1e6,
+         f"speedup={report['latency']['speedup']:.2f}x")
+
+
+def main() -> None:
+    report: dict = {"n_frames": N_FRAMES, "window": WINDOW, "quick": QUICK}
+    frames, dets, _ = corpus_video("sparse", 0, N_FRAMES)
+    pred = build_store(frames, dets, cache=PREDICTIVE)
+    ctrl = build_store(frames, dets, cache=CacheConfig(budget_bytes=0))
+    try:
+        bench_sliding(report, pred, ctrl)
+        bench_latency(report, pred, ctrl)
+    finally:
+        pred.close()
+        ctrl.close()
+    bench_packed(report)
+    bench_lru_replay(report)
+    pathlib.Path(OUT).write_text(json.dumps(report, indent=1))
+    print(f"# wrote {OUT}: warm wave misses="
+          f"{report['sliding']['waves'][-1]['misses']}, packed "
+          f"{report['packed']['entries_packed']}v"
+          f"{report['packed']['entries_padded']} entries, lru "
+          f"bit-for-bit={report['lru']['bit_for_bit']}")
+
+
+if __name__ == "__main__":
+    main()

@@ -31,7 +31,8 @@ import time
 import numpy as np
 
 from benchmarks.common import ENC, corpus_video, emit, gate, quick_mode
-from repro.core import NoTilingPolicy, VideoStore, uniform_layout
+from repro.core import (CacheConfig, DecodeConfig, NoTilingPolicy,
+                        VideoStore, uniform_layout)
 from repro.core.storage import TileStore
 
 QUICK = quick_mode()
@@ -97,7 +98,8 @@ def scan_parity(frames, dets):
     (ScanStats pixel/tile, TileStore counter) accounting."""
     out = {}
     for backend in ("numpy", "batched"):
-        s = VideoStore(decode_backend=backend, tile_cache_bytes=0)
+        s = VideoStore(decode=DecodeConfig(backend=backend),
+                       cache=CacheConfig(budget_bytes=0))
         s.add_video("cam0", encoder=ENC, policy=NoTilingPolicy())
         s.ingest("cam0", frames)
         s.add_detections("cam0", {f: d for f, d in enumerate(dets)})

@@ -30,7 +30,8 @@ import numpy as np
 
 from benchmarks.common import (ENC, corpus_video, emit, gate, quick_mode,
                                shared_cost_model)
-from repro.core import NoTilingPolicy, VideoStore, partition, uniform_layout
+from repro.core import (CacheConfig, DecodeConfig, NoTilingPolicy,
+                        VideoStore, partition, uniform_layout)
 
 QUICK = quick_mode()
 N_FRAMES = 64 if QUICK else 128
@@ -63,7 +64,8 @@ def initial_layouts(kind: str, dets):
 
 
 def build_store(frames, dets, kind: str, roi_on: bool) -> VideoStore:
-    store = VideoStore(tile_cache_bytes=0, roi_decode=roi_on)
+    store = VideoStore(cache=CacheConfig(budget_bytes=0),
+                       decode=DecodeConfig(roi=roi_on))
     store.add_video("cam0", encoder=ENC, policy=NoTilingPolicy(),
                     cost_model=shared_cost_model())
     store.ingest("cam0", frames, initial_layouts=initial_layouts(kind, dets))

@@ -102,10 +102,11 @@ def digest(results) -> str:
 
 def build_local_store(cache: bool = True):
     from benchmarks.common import shared_cost_model
-    from repro.core import NoTilingPolicy, VideoStore
+    from repro.core import CacheConfig, NoTilingPolicy, VideoStore
 
     frames, dets, _ = corpus_video("sparse", 0, N_FRAMES, HEIGHT, WIDTH)
-    store = VideoStore(tile_cache_bytes=None if cache else 0)
+    store = VideoStore(
+        cache=CacheConfig(budget_bytes=None if cache else 0))
     store.add_video("cam0", encoder=ENC, policy=NoTilingPolicy(),
                     cost_model=shared_cost_model())
     store.ingest("cam0", frames)

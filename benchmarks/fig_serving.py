@@ -28,6 +28,7 @@ import pathlib
 import time
 
 from benchmarks.common import ENC, corpus_video, emit, shared_cost_model
+from repro.core import CacheConfig
 from repro.core import NoTilingPolicy, VideoStore
 
 QUICK = bool(int(os.environ.get("REPRO_QUICK", "0")))
@@ -39,7 +40,8 @@ OUT = os.environ.get("REPRO_BENCH_OUT", "BENCH_serving.json")
 
 
 def build_store(frames, dets, *, cache: bool) -> VideoStore:
-    store = VideoStore(tile_cache_bytes=None if cache else 0)
+    store = VideoStore(
+        cache=CacheConfig(budget_bytes=None if cache else 0))
     store.add_video("cam0", encoder=ENC, policy=NoTilingPolicy(),
                     cost_model=shared_cost_model())
     store.ingest("cam0", frames)

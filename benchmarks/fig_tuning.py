@@ -36,7 +36,8 @@ import time
 import numpy as np
 
 from benchmarks.common import ENC, corpus_video, emit, shared_cost_model
-from repro.core import RegretPolicy, VideoStore
+from repro.core import (CacheConfig, RegretPolicy, TuningConfig,
+                        VideoStore)
 
 QUICK = bool(int(os.environ.get("REPRO_QUICK", "0")))
 N_FRAMES = 128 if QUICK else 256
@@ -57,7 +58,8 @@ def workload():
 
 def build(model, frames, dets, *, mode, root=None):
     # cache off: the measured quantity is per-layout decode + tuning cost
-    store = VideoStore(store_root=root, tile_cache_bytes=0, tuning=mode)
+    store = VideoStore(store_root=root, cache=CacheConfig(budget_bytes=0),
+                       tuning=TuningConfig(mode=mode))
     store.add_video("v", encoder=ENC, policy=RegretPolicy(), cost_model=model)
     store.ingest("v", frames)
     store.add_detections("v", {f: d for f, d in enumerate(dets)})
@@ -145,7 +147,8 @@ def main() -> None:
     bg.close()
 
     # -- resume: reopened store tunes from persisted regret, not cold ----
-    reopened = VideoStore(store_root=root, tile_cache_bytes=0)
+    reopened = VideoStore(store_root=root,
+                          cache=CacheConfig(budget_bytes=0))
     pol = reopened.video("v").policy
     state = pol.state_dict()
     if not state["seen"]:

@@ -22,6 +22,7 @@ MODULES = [
     "benchmarks.fig11_workloads",
     "benchmarks.fig12_upfront",
     "benchmarks.fig_serving",
+    "benchmarks.fig_cache",
     "benchmarks.fig_roi",
     "benchmarks.fig_tuning",
     "benchmarks.fig_server",

@@ -10,7 +10,7 @@ VideoStore catalog, so one engine serves them all.
 import numpy as np
 
 from repro.codec.encode import EncoderConfig
-from repro.core import NoTilingPolicy, VideoStore
+from repro.core import CacheConfig, NoTilingPolicy, VideoStore
 from repro.core.calibrate import calibrated_cost_model
 from repro.core.detector import DetectorConfig, detect
 from repro.core.layout import partition
@@ -25,7 +25,7 @@ O_Q = ["car"]  # the VDBMS tells the camera which objects queries will target
 
 # cache off: this example compares repeat-decode cost across edge layouts
 store = VideoStore(default_encoder=ENC, default_cost_model=model,
-                   default_policy=NoTilingPolicy(), tile_cache_bytes=0)
+                   default_policy=NoTilingPolicy(), cache=CacheConfig(budget_bytes=0))
 
 
 def edge_ingest(det_cfg: DetectorConfig, name: str):

@@ -10,7 +10,8 @@ charged re-encode time.
 import numpy as np
 
 from repro.codec.encode import EncoderConfig
-from repro.core import (MorePolicy, NoTilingPolicy, PretileAllPolicy,
+from repro.core import (CacheConfig, DecodeConfig, MorePolicy,
+                        NoTilingPolicy, PretileAllPolicy, TuningConfig,
                         RegretPolicy, VideoStore)
 from repro.core.calibrate import calibrated_cost_model
 from repro.data.video_gen import generate, sparse_spec
@@ -32,7 +33,9 @@ queries = list(zip(labels, [(int(s), int(s) + WINDOW) for s in starts]))
 def make_store(policy_cls, tuning):
     # cache off + ROI decode off: this example compares full-tile decode
     # cost across tiling policies (ROI-restricted decode would flatten it)
-    store = VideoStore(tile_cache_bytes=0, tuning=tuning, roi_decode=False)
+    store = VideoStore(cache=CacheConfig(budget_bytes=0),
+                       tuning=TuningConfig(mode=tuning),
+                       decode=DecodeConfig(roi=False))
     store.add_video("v", encoder=ENC, policy=policy_cls(), cost_model=model)
     store.add_detections("v", {f: d for f, d in enumerate(dets)})
     return store

@@ -54,14 +54,17 @@ roi_px = query.execute().stats.pixels_decoded
 print(f"pixels decoded, full-tile {full_px / 1e6:.2f} M -> "
       f"ROI {roi_px / 1e6:.2f} M ({full_px / max(roi_px, 1):.1f}x fewer)")
 
-# 5b. batched fused decode: VideoStore(decode_backend="batched") (or env
-#     REPRO_DECODE_BACKEND=batched, or --decode-backend on tasm_serve.py)
-#     flattens every (tile, GOP, block-mask) selection of a group fetch
-#     into one fused dequant+IDCT+cumsum dispatch — Pallas on TPU, jitted
-#     XLA elsewhere — instead of the per-tile numpy loop.  Results and
-#     decode counters are bit-identical; fine-tiled merged batches decode
-#     1.5-5x faster (see BENCH_decode_kernel.json)
-batched = VideoStore(decode_backend="batched")
+# 5b. batched fused decode: VideoStore(decode=DecodeConfig(
+#     backend="batched")) (or env REPRO_DECODE_BACKEND=batched, or
+#     --decode-backend on tasm_serve.py) flattens every (tile, GOP,
+#     block-mask) selection of a group fetch into one fused
+#     dequant+IDCT+cumsum dispatch — Pallas on TPU, jitted XLA elsewhere —
+#     instead of the per-tile numpy loop.  Results and decode counters are
+#     bit-identical; fine-tiled merged batches decode 1.5-5x faster (see
+#     BENCH_decode_kernel.json)
+from repro.core import DecodeConfig
+
+batched = VideoStore(decode=DecodeConfig(backend="batched"))
 batched.add_video("traffic", encoder=EncoderConfig(gop=16, qp=8))
 batched.ingest("traffic", frames)
 batched.add_detections("traffic", {f: d for f, d in enumerate(detections)})
@@ -92,6 +95,35 @@ print(f"tuner: {ts.observed} observations -> {ts.applied} retiles applied, "
 print("final layouts:",
       [r.layout.describe() for r in store.video("traffic").store.sots])
 print("\nafter adaptation:\n" + query.explain().describe())
+
+# 6b. workload-predictive tile cache: the cache knobs now live on ONE
+#     CacheConfig — byte budget, eviction ("reuse" weights entries by how
+#     often they were re-accessed, "lru" is the legacy order), block
+#     packing (ROI entries store only their 8x8 blocks, not a zero-padded
+#     canvas), and prefetch.  The old VideoStore(tile_cache_bytes=...)
+#     kwarg still works for one release as a deprecated alias.  With
+#     prefetch on, the cache taps the tuner's workload log: after three
+#     windows of a sliding scan it recognizes the monotone SOT progression
+#     and decodes the NEXT SOTs on the worker pool before they are asked
+#     for — later windows then decode zero tiles
+from repro.core import CacheConfig
+
+pred = VideoStore(cache=CacheConfig(prefetch=True, prefetch_depth=2))
+pred.add_video("traffic", encoder=EncoderConfig(gop=16, qp=8), sot_len=16)
+pred.ingest("traffic", frames)
+pred.add_detections("traffic", {f: d for f, d in enumerate(detections)})
+print()
+for i in range(8):
+    s = pred.scan("traffic").labels("car") \
+            .frames(i * 16, (i + 1) * 16).execute().stats
+    pred.drain_prefetch()  # barrier: the demo stays deterministic
+    print(f"window {i}: pixels={s.pixels_decoded / 1e6:5.2f} M  "
+          f"cache={s.cache_hits}h/{s.cache_misses}m")
+cs = pred.tile_cache.stats()
+print(f"prefetch: {cs.prefetch_issued} issued, {cs.prefetch_hits} hit, "
+      f"{cs.prefetch_wasted} wasted; block packing saved "
+      f"{cs.packed_bytes_saved / 1e6:.1f} MB of cache budget")
+pred.close()
 
 # 7. disjunctive predicate (one clause: car OR person), limited
 res = store.scan("traffic").labels("car", "person").frames(0, 32) \

@@ -117,6 +117,9 @@ def parse_args(argv=None) -> argparse.Namespace:
                      help="register a (fresh) node with the router")
     adm.add_argument("--repair-status", action="store_true",
                      help="print per-job progress + worker totals as JSON")
+    adm.add_argument("--show-config", action="store_true",
+                     help="print each node's resolved cache/tuning/decode "
+                          "configuration as JSON (see core/config.py)")
     adm.add_argument("--wait", type=float, default=None, metavar="S",
                      help="admin: bound the wait for enqueued jobs "
                           "(default: wait until they settle)")
@@ -125,7 +128,8 @@ def parse_args(argv=None) -> argparse.Namespace:
     _xla_env.add_args(ap)
     args = ap.parse_args(argv)
     args.admin = (args.repair is not None or args.rebalance
-                  or args.repair_status or args.join_node is not None)
+                  or args.repair_status or args.join_node is not None
+                  or args.show_config)
     if args.admin and args.node:
         ap.error("--node is for serve mode; admin modes talk to a "
                  "running router")
@@ -158,6 +162,17 @@ def admin(args) -> int:
     with ClusterClient(**_addr_kwargs(args), codec=args.codec) as c:
         if args.repair_status:
             print(json.dumps(c.repair_status(), indent=1, sort_keys=True))
+            return 0
+        if args.show_config:
+            doc = c.config()
+
+            def as_doc(d):
+                return {k: v.to_doc() for k, v in d.items()}
+
+            out = {"nodes": {n: None if d is None else as_doc(d)
+                             for n, d in doc["nodes"].items()}} \
+                if "nodes" in doc else as_doc(doc)
+            print(json.dumps(out, indent=1, sort_keys=True))
             return 0
         if args.join_node is not None:
             (name, addr), = parse_nodes([args.join_node]).items()

@@ -38,11 +38,32 @@ def parse_args(argv=None) -> argparse.Namespace:
                        help="TCP address to listen on (PORT 0 = ephemeral)")
     ap.add_argument("--store-root", default=None,
                     help="durable store root (omit for an in-memory store)")
+    # --cache-*: one flag per CacheConfig field (core/config.py)
+    ap.add_argument("--cache-bytes", type=int, default=None,
+                    help="decoded-tile cache budget (default: "
+                         "$REPRO_CACHE_BYTES, else 256 MiB; 0 disables)")
     ap.add_argument("--tile-cache-bytes", type=int, default=None,
-                    help="decoded-tile cache budget (default 256 MiB; "
-                         "0 disables)")
+                    help=argparse.SUPPRESS)  # deprecated: --cache-bytes
+    ap.add_argument("--cache-eviction", default=None,
+                    choices=("reuse", "lru"),
+                    help="eviction policy: expected-reuse weighting, or "
+                         "the legacy pure LRU (default: "
+                         "$REPRO_CACHE_EVICTION, else reuse)")
+    ap.add_argument("--cache-prefetch", action="store_true",
+                    help="predictively decode the next SOTs of detected "
+                         "sliding-window scans (off by default)")
+    ap.add_argument("--cache-prefetch-depth", type=int, default=2,
+                    help="how many SOTs ahead to prefetch (default 2)")
+    ap.add_argument("--no-cache-block-packed", dest="cache_block_packed",
+                    action="store_false", default=True,
+                    help="store ROI cache entries as zero-padded full-tile "
+                         "canvases instead of packed blocks")
     ap.add_argument("--tuning", default="background",
                     choices=("background", "inline", "off"))
+    ap.add_argument("--tuner-admission", default="policy",
+                    choices=("policy", "gated"),
+                    help="background tuner admission: apply every policy "
+                         "proposal, or gate + rank by what-if net benefit")
     ap.add_argument("--max-frame-mb", type=int, default=None,
                     help="reject wire frames larger than this many MiB "
                          "(default 256)")
@@ -71,7 +92,8 @@ def main(argv=None) -> int:
     args = parse_args(argv)
     # env must land before the engine (hence XLA) initializes
     _xla_env.apply(args)
-    from repro.core import VideoStore, VideoStoreServer, wire
+    from repro.core import (CacheConfig, DecodeConfig, TuningConfig,
+                            VideoStore, VideoStoreServer, wire)
     kw: dict = {}
     if args.socket:
         kw["path"] = args.socket
@@ -80,10 +102,18 @@ def main(argv=None) -> int:
         kw["host"], kw["port"] = host or "127.0.0.1", int(port)
     if args.max_frame_mb is not None:
         kw["max_frame_bytes"] = args.max_frame_mb << 20
-    store = VideoStore(store_root=args.store_root,
-                       tile_cache_bytes=args.tile_cache_bytes,
-                       tuning=args.tuning,
-                       decode_backend=args.decode_backend)
+    cache_bytes = args.cache_bytes if args.cache_bytes is not None \
+        else args.tile_cache_bytes
+    store = VideoStore(
+        store_root=args.store_root,
+        cache=CacheConfig(budget_bytes=cache_bytes,
+                          eviction=args.cache_eviction,
+                          prefetch=args.cache_prefetch,
+                          prefetch_depth=args.cache_prefetch_depth,
+                          block_packed=args.cache_block_packed),
+        tuning=TuningConfig(mode=args.tuning,
+                            admission=args.tuner_admission),
+        decode=DecodeConfig(backend=args.decode_backend))
     server = VideoStoreServer(store, codec=args.codec,
                               max_batch=args.max_batch,
                               transport=args.transport, **kw)

@@ -25,6 +25,8 @@ from repro.core.client import (RemoteError, RemoteScanQuery,
                                RemoteServingSession, RemoteVideoStore)
 from repro.core.cluster import (ClusterClient, ClusterRouter,
                                 ClusterRouterServer, PlacementMap)
+from repro.core.config import (CacheConfig, DecodeConfig, TuningConfig,
+                               DEFAULT_CACHE_BYTES)
 from repro.core.cost import (CostModel, calibrate, calibrate_io,
                              pixels_and_tiles, query_cost,
                              roi_pixels_and_tiles)
@@ -55,5 +57,5 @@ from repro.core.server import VideoStoreServer
 from repro.core.shm import SegmentPool, shm_available
 from repro.core.storage import TileStore
 from repro.core.tasm import TASM
-from repro.core.tile_cache import CacheStats, TileCache
+from repro.core.tile_cache import CacheStats, TileCache, WorkloadPredictor
 from repro.core.tuner import PhysicalTuner, TunerStats

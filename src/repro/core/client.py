@@ -54,10 +54,12 @@ from typing import Optional
 import numpy as np
 
 from repro.core import wire
+from repro.core.config import CacheConfig, DecodeConfig, TuningConfig
 from repro.core.shm import attach_segment, resolve_transport, shm_available
 from repro.core.engine import IngestStats
 from repro.core.policies import Policy, policy_spec
 from repro.core.query import (PhysicalPlan, ScanPlan, ScanQuery, ScanResult)
+from repro.core.tile_cache import CacheStats
 from repro.core.tuner import TunerStats
 
 #: server-raised exception types re-raised as themselves on the client
@@ -70,7 +72,14 @@ _ERROR_TYPES = {e.__name__: e for e in
 #: applied one before the connection died, and re-sending would double
 #: it — those surface the ConnectionError to the caller instead.
 _IDEMPOTENT_OPS = frozenset({"ping", "videos", "stats", "explain",
-                             "execute_many", "tuner_stats", "epochs"})
+                             "execute_many", "tuner_stats", "epochs",
+                             "config", "drain_prefetch"})
+
+
+def _parse_config_doc(doc: dict) -> dict:
+    return {"cache": CacheConfig.from_doc(doc["cache"]),
+            "tuning": TuningConfig.from_doc(doc["tuning"]),
+            "decode": DecodeConfig.from_doc(doc["decode"])}
 
 
 class RemoteError(RuntimeError):
@@ -723,6 +732,27 @@ class RemoteVideoStore:
 
     def tuner_stats(self) -> TunerStats:
         return TunerStats(**self._call("tuner_stats"))
+
+    def drain_prefetch(self, timeout: Optional[float] = None) -> CacheStats:
+        """Remote twin of :meth:`VideoStore.drain_prefetch` — block until
+        the server's predictive decodes land, return its cache stats."""
+        dl = ... if self._timeout is None \
+            else self._timeout + (timeout or 0.0)
+        return CacheStats(**self._call("drain_prefetch", timeout=timeout,
+                                       _deadline=dl))
+
+    def config(self) -> dict:
+        """The server's resolved runtime configuration as config objects:
+        ``{"cache": CacheConfig, "tuning": TuningConfig,
+        "decode": DecodeConfig}`` — the exact surface the server was
+        started with (see ``core/config.py``).  Against a cluster router
+        the reply is per node: ``{"nodes": {name: {...}|None}}``."""
+        doc = self._call("config")
+        if "nodes" in doc:      # router front end: one config set per node
+            return {"nodes": {name: None if d is None
+                              else _parse_config_doc(d)
+                              for name, d in doc["nodes"].items()}}
+        return _parse_config_doc(doc)
 
     # ----------------------------------------------------- replica streaming
     # The cluster repair data plane: each chunk is one request/reply RPC,

@@ -62,7 +62,23 @@ from repro.core.repair import RepairStats, RepairWorker
 from repro.core.query import (PhysicalPlan, ScanPlan, ScanQuery, ScanResult,
                               ScanStats, merge_results, split_plan)
 from repro.core.server import VideoStoreServer
+from repro.core.tile_cache import CacheStats
 from repro.core.tuner import TunerStats
+
+def _sum_cache_docs(docs) -> dict:
+    """Aggregate per-node ``stats()["cache"]`` documents: counters and
+    gauges add; ``evictions_by_reason`` merges per reason."""
+    total = dataclasses.asdict(CacheStats())
+    for d in docs:
+        for k, v in d.items():
+            if k == "evictions_by_reason":
+                agg = total[k]
+                for r, n in (v or {}).items():
+                    agg[r] = agg.get(r, 0) + n
+            elif k in total:
+                total[k] += v
+    return total
+
 
 #: connection-level failures that trigger mark-down + failover (semantic
 #: errors — KeyError, ValueError, … — always propagate to the caller)
@@ -1057,6 +1073,50 @@ class ClusterRouter:
     def tuner_stats(self) -> TunerStats:
         return self._sum_tuner(lambda ch: ch.tuner_stats())
 
+    def _sum_cache(self, fn) -> CacheStats:
+        """Sum one :class:`CacheStats` per live node (counters add;
+        ``evictions_by_reason`` merges per reason)."""
+        total = CacheStats()
+        for name in sorted(self.addresses):
+            with self._lock:
+                if name in self._down:
+                    continue
+            try:
+                c = fn(self._channel(name))
+            except _CONN_ERRORS:
+                self._mark_down(name)
+                continue
+            for f in dataclasses.fields(CacheStats):
+                if f.name == "evictions_by_reason":
+                    for r, n in c.evictions_by_reason.items():
+                        total.evictions_by_reason[r] = \
+                            total.evictions_by_reason.get(r, 0) + n
+                else:
+                    setattr(total, f.name,
+                            getattr(total, f.name) + getattr(c, f.name))
+        return total
+
+    def drain_prefetch(self, timeout: Optional[float] = None) -> CacheStats:
+        """Prefetch barrier across every live node; summed cache stats."""
+        return self._sum_cache(lambda ch: ch.drain_prefetch(timeout))
+
+    def config(self) -> dict:
+        """Per-node resolved configuration documents (``None`` for a down
+        node) — the router twin of :meth:`VideoStore.config`."""
+        nodes: dict[str, Optional[dict]] = {}
+        for name in sorted(self.addresses):
+            with self._lock:
+                if name in self._down:
+                    nodes[name] = None
+                    continue
+            try:
+                doc = self._channel(name).config()
+                nodes[name] = {k: v.to_doc() for k, v in doc.items()}
+            except _CONN_ERRORS:
+                self._mark_down(name)
+                nodes[name] = None
+        return {"nodes": nodes}
+
     # ------------------------------------------------------------- catalog
     def videos(self) -> list[str]:
         return sorted(self.placement.assignments)
@@ -1099,6 +1159,7 @@ class ClusterRouter:
             "pixels_decoded_total": sum(d["pixels_decoded_total"]
                                         for d in live),
             "storage_bytes": sum(d["storage_bytes"] for d in live),
+            "cache": _sum_cache_docs(d.get("cache") or {} for d in live),
         }
 
 

@@ -18,12 +18,16 @@ Plan/execute split: the builder produces a logical :class:`ScanPlan`;
 SOTs and tile indices to decode, costed through the §4.1 what-if
 interface).  Execution then goes through the **serving layer**:
 
-- **Tile cache** (``core/tile_cache.py``) — a byte-budgeted LRU of decoded
-  tile arrays keyed ``(video, sot_id, epoch, tile_idx)``.  Every tile fetch
-  consults it before decoding, so overlapping scans stop re-decoding shared
-  tiles; the epoch in the key means a ``retile`` invalidates naturally and
-  the cache can never serve pre-retile pixels.  Size it with
-  ``VideoStore(tile_cache_bytes=...)`` (0 disables).
+- **Tile cache** (``core/tile_cache.py``) — a byte-budgeted, workload-
+  predictive cache of decoded tile arrays keyed ``(video, sot_id, epoch,
+  tile_idx)``.  Every tile fetch consults it before decoding, so
+  overlapping scans stop re-decoding shared tiles; the epoch in the key
+  means a ``retile`` invalidates naturally and the cache can never serve
+  pre-retile pixels.  Configure it with ``VideoStore(cache=CacheConfig(
+  budget_bytes=..., eviction=..., prefetch=..., block_packed=...))``
+  (``budget_bytes=0`` disables); under ``prefetch`` the tuner's workload
+  tap detects sliding-window scans and decodes the next SOTs ahead of the
+  client (:meth:`drain_prefetch` is the deterministic barrier).
 - **Scan scheduler** (``core/scheduler.py``) — :meth:`execute` is a thin
   client of a :class:`ScanScheduler` that accepts physical plans from
   concurrent callers, merges SOTScans targeting the same ``(video, sot_id,
@@ -35,15 +39,24 @@ interface).  Execution then goes through the **serving layer**:
   a mid-batch retile triggers a re-fetch at the new epoch).
 - **Physical tuner** (``core/tuner.py``) — policy-driven re-tiling runs in
   a background subsystem instead of inside the scan that triggered it.
-  Under ``tuning="background"`` (the default) the scheduler's policy hooks
+  Under ``TuningConfig(mode="background")`` (the default) the scheduler's
+  policy hooks
   only *emit observations* into a bounded workload log; a tuner thread
   replays them through the policies, coalesces proposals per SOT (newest
   wins), scores them through the §4.1 what-if interface, and applies
   winners via the durable, lock-taking, epoch-bumping retile path —
   queries are never charged re-encode time (``ScanStats.retile_s`` stays 0;
-  see :meth:`tuner_stats`).  ``tuning="inline"`` preserves the synchronous
-  semantics bit-for-bit; ``tuning="off"`` disables query-driven tuning.
+  see :meth:`tuner_stats`).  ``mode="inline"`` preserves the synchronous
+  semantics bit-for-bit; ``mode="off"`` disables query-driven tuning.
   :meth:`drain_tuner` is the deterministic barrier for tests/benchmarks.
+
+Knob surface: the serving knobs group into three config objects —
+``VideoStore(cache=CacheConfig(...), tuning=TuningConfig(...),
+decode=DecodeConfig(...))`` (see ``core/config.py`` for every field and
+the explicit > deprecated-alias > environment > default precedence).  The
+pre-config kwargs (``tile_cache_bytes``, ``tuning=<str>``,
+``tuner_admission``, ``roi_decode``, ``decode_backend``) keep working for
+one release as 1:1 aliases that emit ``DeprecationWarning``.
 
 Persistence: with ``store_root`` set, durable state is sharded per video —
 a small catalog file (``<root>/catalog.json``: version + video names) plus
@@ -66,12 +79,14 @@ import os
 import pathlib
 import shutil
 import time
+import warnings
 from dataclasses import dataclass, field
 from typing import Iterator, Optional
 
 import numpy as np
 
 from repro.codec.encode import EncoderConfig
+from repro.core.config import CacheConfig, DecodeConfig, TuningConfig
 from repro.core.cost import CostModel, pixels_and_tiles, roi_pixels_and_tiles
 from repro.core.layout import TileLayout
 from repro.core.policies import (NoTilingPolicy, Policy, policy_from_spec,
@@ -80,9 +95,8 @@ from repro.core.query import (PhysicalPlan, ScanPlan, ScanQuery, ScanResult,
                               ScanStats, SOTScan)
 from repro.core.scheduler import ScanScheduler, ServingSession
 from repro.core.semantic_index import SemanticIndex
-from repro.core.storage import (DECODE_BACKENDS, SOTRecord, TileStore,
-                                tile_checksum)
-from repro.core.tile_cache import DEFAULT_CACHE_BYTES, TileCache
+from repro.core.storage import SOTRecord, TileStore, tile_checksum
+from repro.core.tile_cache import CacheStats, TileCache
 from repro.core.tuner import PhysicalTuner, TunerStats
 
 #: valid what-if cost granularities: "tile" = standard full-tile decoder
@@ -127,6 +141,67 @@ class VideoEntry:
     history: list = field(default_factory=list)
 
 
+def _deprecated_kwarg(name: str, replacement: str) -> None:
+    warnings.warn(
+        f"VideoStore({name}=...) is deprecated and will be removed next "
+        f"release; use {replacement}", DeprecationWarning, stacklevel=4)
+
+
+def _resolve_configs(cache, tuning, decode, *, tile_cache_bytes,
+                     tuner_admission, roi_decode, decode_backend,
+                     max_decode_workers):
+    """Fold the deprecated per-knob kwargs into the three config objects
+    and resolve them (env overrides + defaults; see ``core/config.py``).
+    Each alias maps 1:1 onto one config field; passing an alias together
+    with the config object it folds into is an error, never a silent
+    pick.  ``max_decode_workers`` predates the sprawl and stays accepted
+    without a warning (it equals ``DecodeConfig(max_workers=...)``)."""
+    if tile_cache_bytes is not None:
+        if cache is not None:
+            raise ValueError("pass cache=CacheConfig(...) or "
+                             "tile_cache_bytes=..., not both")
+        _deprecated_kwarg("tile_cache_bytes",
+                          "cache=CacheConfig(budget_bytes=...)")
+        cache = CacheConfig(budget_bytes=tile_cache_bytes)
+    cache = (cache if cache is not None else CacheConfig()).resolve()
+
+    if isinstance(tuning, str):
+        _deprecated_kwarg("tuning=<mode string>",
+                          "tuning=TuningConfig(mode=...)")
+        tuning = TuningConfig(mode=tuning,
+                              admission=tuner_admission or "policy")
+        if tuner_admission is not None:
+            _deprecated_kwarg("tuner_admission",
+                              "tuning=TuningConfig(admission=...)")
+    elif tuner_admission is not None:
+        if tuning is not None:
+            raise ValueError("pass tuning=TuningConfig(...) or "
+                             "tuner_admission=..., not both")
+        _deprecated_kwarg("tuner_admission",
+                          "tuning=TuningConfig(admission=...)")
+        tuning = TuningConfig(admission=tuner_admission)
+    tuning = (tuning if tuning is not None else TuningConfig()).resolve()
+
+    legacy = {}
+    if roi_decode is not None:
+        _deprecated_kwarg("roi_decode", "decode=DecodeConfig(roi=...)")
+        legacy["roi"] = roi_decode
+    if decode_backend is not None:
+        _deprecated_kwarg("decode_backend",
+                          "decode=DecodeConfig(backend=...)")
+        legacy["backend"] = decode_backend
+    if max_decode_workers is not None:
+        legacy["max_workers"] = max_decode_workers
+    if legacy:
+        if decode is not None:
+            raise ValueError(
+                f"pass decode=DecodeConfig(...) or the per-knob kwargs "
+                f"({', '.join(sorted(legacy))}), not both")
+        decode = DecodeConfig(**legacy)
+    decode = (decode if decode is not None else DecodeConfig()).resolve()
+    return cache, tuning, decode
+
+
 class VideoStore:
     """Catalog of videos + declarative scan queries served through a
     cached, merging scheduler."""
@@ -135,19 +210,33 @@ class VideoStore:
                  default_encoder: Optional[EncoderConfig] = None,
                  default_policy: Optional[Policy] = None,
                  default_cost_model: Optional[CostModel] = None,
+                 cache: Optional[CacheConfig] = None,
+                 tuning: "Optional[TuningConfig | str]" = None,
+                 decode: Optional[DecodeConfig] = None,
+                 autoload: bool = True,
+                 # deprecated keyword aliases (one release; each maps 1:1
+                 # onto a config field — see _resolve_configs)
                  max_decode_workers: Optional[int] = None,
                  tile_cache_bytes: Optional[int] = None,
-                 tuning: str = "background",
-                 tuner_admission: str = "policy",
-                 roi_decode: bool = True,
-                 decode_backend: Optional[str] = None,
-                 autoload: bool = True):
+                 tuner_admission: Optional[str] = None,
+                 roi_decode: Optional[bool] = None,
+                 decode_backend: Optional[str] = None):
+        cache_cfg, tuning_cfg, decode_cfg = _resolve_configs(
+            cache, tuning, decode,
+            tile_cache_bytes=tile_cache_bytes,
+            tuner_admission=tuner_admission, roi_decode=roi_decode,
+            decode_backend=decode_backend,
+            max_decode_workers=max_decode_workers)
+        #: resolved config objects (every knob concrete; see core/config.py
+        #: for the explicit > alias > env > default precedence)
+        self.cache_config = cache_cfg
+        self.tuning_config = tuning_cfg
+        self.decode_config = decode_cfg
         self.root = pathlib.Path(store_root) if store_root else None
         self.default_encoder = default_encoder or EncoderConfig()
         self.default_policy = default_policy
         self.default_cost_model = default_cost_model
-        self.max_decode_workers = max_decode_workers or min(
-            8, os.cpu_count() or 4)
+        self.max_decode_workers = decode_cfg.max_workers
         self._videos: dict[str, VideoEntry] = {}
         # replica-import staging for in-memory stores (on-disk stores stage
         # under <root>/.import/<video>/ so a killed destination can resume)
@@ -158,32 +247,25 @@ class VideoStore:
         # shard (inline observes with no proposal); flushed by close()
         self._stale_policy_state: set[str] = set()
         self._catalog_dirty = False
-        self.tile_cache = TileCache(
-            DEFAULT_CACHE_BYTES if tile_cache_bytes is None
-            else tile_cache_bytes)
+        self.tile_cache = TileCache(config=cache_cfg)
         self.scheduler = ScanScheduler(self, cache=self.tile_cache)
         # ROI-restricted decode: lowering threads per-tile 8x8-block masks
         # into the plan, so subframe scans decode only the blocks their
         # boxes intersect.  False restores PR-3 full-tile decode (results
         # are bit-identical either way; the flag may be flipped at runtime
         # and only affects plans lowered afterwards)
-        self.roi_decode = bool(roi_decode)
-        # decode_backend="numpy"|"batched": how TileStore.decode_tiles runs —
+        self.roi_decode = decode_cfg.roi
+        # decode backend="numpy"|"batched": how TileStore.decode_tiles runs —
         # the per-tile numpy oracle loop, or fused accelerator dispatches
         # over the whole merged batch (bit-identical; see codec/batch.py).
-        # REPRO_DECODE_BACKEND overrides the default for deployments.
-        backend = (decode_backend
-                   or os.environ.get("REPRO_DECODE_BACKEND") or "numpy")
-        if backend not in DECODE_BACKENDS:
-            raise ValueError(f"decode_backend must be one of "
-                             f"{DECODE_BACKENDS}, got {backend!r}")
-        self.decode_backend = backend
-        # tuning="background"|"inline"|"off": where policy-driven retiling
-        # runs (async tuner thread / inside the scan / nowhere);
-        # tuner_admission="policy"|"gated": whether the background tuner
+        self.decode_backend = decode_cfg.backend
+        # tuning mode="background"|"inline"|"off": where policy-driven
+        # retiling runs (async tuner thread / inside the scan / nowhere);
+        # admission="policy"|"gated": whether the background tuner
         # additionally gates + ranks proposals by their what-if net benefit
-        self.tuner = PhysicalTuner(self, mode=tuning,
-                                   admission=tuner_admission)
+        self.tuner = PhysicalTuner(self, mode=tuning_cfg.mode,
+                                   admission=tuning_cfg.admission,
+                                   max_log=tuning_cfg.max_log)
         if self.root is not None and autoload:
             if self.catalog_path.exists():
                 self._load_catalog()
@@ -505,6 +587,25 @@ class VideoStore:
         (observations, coalesced/applied/skipped retiles, tuning and
         re-encode seconds)."""
         return self.tuner.stats()
+
+    def drain_prefetch(self, timeout: Optional[float] = None) -> CacheStats:
+        """Deterministic prefetch barrier: block until every predictive
+        decode enqueued before this call has completed (no-op unless
+        ``CacheConfig.prefetch``).  Returns a :class:`CacheStats`
+        snapshot, so callers can assert on ``prefetch_issued`` etc."""
+        self.scheduler.drain_prefetch(timeout)
+        return self.tile_cache.stats()
+
+    def config(self) -> dict:
+        """The resolved runtime configuration as wire-ready documents
+        (``{"cache": ..., "tuning": ..., "decode": ...}``) — the same
+        surface ``RemoteVideoStore.config()`` and the router expose.
+        ``decode.roi`` reflects the live ``roi_decode`` flag (it may be
+        flipped at runtime)."""
+        return {"cache": self.cache_config.to_doc(),
+                "tuning": self.tuning_config.to_doc(),
+                "decode": {**self.decode_config.to_doc(),
+                           "roi": bool(self.roi_decode)}}
 
     def close(self) -> None:
         """Stop the tuner thread (flushing its workload log), flush dirty

@@ -54,7 +54,7 @@ import numpy as np
 from repro.core.layout import BBox, TileLayout, block_coverage
 from repro.core.query import (PhysicalPlan, ScanPlan, ScanQuery, ScanResult,
                               ScanStats, SOTScan)
-from repro.core.tile_cache import TileCache
+from repro.core.tile_cache import TileCache, WorkloadPredictor
 
 if TYPE_CHECKING:  # pragma: no cover - typing only
     from repro.core.engine import VideoStore
@@ -113,6 +113,13 @@ class ScanScheduler:
         self.lock = threading.RLock()
         self._pool: Optional[ThreadPoolExecutor] = None
         self._pool_lock = threading.Lock()
+        # predictive prefetch (CacheConfig.prefetch): the tuner's workload
+        # tap feeds the predictor; detected sliding windows enqueue decode
+        # jobs for the next SOTs on the worker pool (see _prefetch_job)
+        self._predictor: Optional[WorkloadPredictor] = None
+        self._prefetch_cv = threading.Condition()
+        self._prefetch_pending: set[GroupKey] = set()
+        self._prefetch_inflight = 0
 
     # ----------------------------------------------------------- frontend
     def _normalize(self, plan) -> PhysicalPlan:
@@ -165,6 +172,106 @@ class ScanScheduler:
                 pool, self._pool = self._pool, None
             if pool is not None:
                 pool.shutdown(wait=True)
+
+    # ----------------------------------------------------------- prefetch
+    def note_scan(self, sot_scans: "list[SOTScan]") -> None:
+        """Workload tap (called by ``tuner.on_scan`` under the batch lock,
+        for EVERY scan regardless of tuning mode or policy): feed the
+        sliding-window predictor and enqueue prefetch decode jobs for the
+        SOTs it expects next.  No-op unless ``CacheConfig.prefetch``."""
+        cfg = self.cache.config
+        if not cfg.prefetch or self.cache.budget_bytes <= 0:
+            return
+        if self._predictor is None:
+            self._predictor = WorkloadPredictor(depth=cfg.prefetch_depth)
+        for ss in sot_scans:
+            for sid in self._predictor.observe(ss.video, ss.sot_id):
+                self._maybe_prefetch(ss.video, sid)
+
+    def _maybe_prefetch(self, video: str, sot_id: int) -> None:
+        """Enqueue one predicted SOT's decode, single-flight per
+        ``(video, sot_id)``; predictions past the end of the video (the
+        window sliding off the edge) are dropped here."""
+        entry = self.engine._videos.get(video)
+        if entry is None or not 0 <= sot_id < len(entry.store.sots):
+            return
+        gkey = (video, sot_id)
+        with self._prefetch_cv:
+            if gkey in self._prefetch_pending:
+                return
+            self._prefetch_pending.add(gkey)
+            self._prefetch_inflight += 1
+        try:
+            self._ensure_pool().submit(self._prefetch_job, video, sot_id)
+        except BaseException:
+            with self._prefetch_cv:
+                self._prefetch_pending.discard(gkey)
+                self._prefetch_inflight -= 1
+                self._prefetch_cv.notify_all()
+            raise
+
+    def _prefetch_job(self, video: str, sot_id: int) -> None:
+        """Decode one predicted SOT's tiles (full depth, full blocks — a
+        full entry serves ANY later sub-request bit-identically) and admit
+        them with ``put(prefetch=True)`` (never evicting a hotter entry).
+
+        Charging: this decode belongs to no query — it never touches a
+        ``ScanStats``.  The work lands in the store's decode totals and in
+        ``CacheStats.prefetch_issued``; a scan that later hits the entry
+        records an ordinary cache hit with zero pixels charged (exactly
+        the shared-decode first-consumer rule, with the prefetcher as the
+        consumer that already paid).  Epoch safety is structural: entries
+        carry the epoch read before the decode, a retile racing us bumps
+        it, and we re-check + purge after the puts, so stale pixels are
+        never served and never squat on the budget."""
+        gkey = (video, sot_id)
+        try:
+            entry = self.engine._videos.get(video)
+            if entry is None or not 0 <= sot_id < len(entry.store.sots):
+                return
+            rec = entry.store.sots[sot_id]
+            epoch = rec.epoch
+            n_frames = rec.frame_end - rec.frame_start
+            tiles = []
+            for t in range(rec.layout.n_tiles):
+                cov = self.cache.coverage((video, sot_id, epoch, t))
+                if cov is not None and cov[0] >= n_frames and cov[1] is None:
+                    continue           # already fully resident
+                tiles.append(t)
+            if not tiles:
+                return
+            self.cache.note_prefetch_issued(len(tiles))
+            dec = entry.store.decode_tiles(sot_id, tiles, n_frames=n_frames)
+            if rec.epoch == epoch:
+                for t, arr in dec.items():
+                    self.cache.put((video, sot_id, epoch, t), arr,
+                                   prefetch=True)
+            if rec.epoch != epoch:
+                self.cache.invalidate(video, sot_id, before_epoch=rec.epoch)
+        except Exception:
+            # best-effort by contract: a lost race (drop_video, store-level
+            # retile deleting files mid-read) abandons the prediction
+            pass
+        finally:
+            with self._prefetch_cv:
+                self._prefetch_pending.discard(gkey)
+                self._prefetch_inflight -= 1
+                self._prefetch_cv.notify_all()
+
+    def drain_prefetch(self, timeout: Optional[float] = None) -> None:
+        """Deterministic prefetch barrier: block until every prefetch job
+        enqueued before this call has completed (tests and benchmarks use
+        it to make 'the next window is already resident' assertable)."""
+        deadline = None if timeout is None else time.monotonic() + timeout
+        with self._prefetch_cv:
+            while self._prefetch_inflight:
+                remaining = None if deadline is None \
+                    else deadline - time.monotonic()
+                if remaining is not None and remaining <= 0:
+                    raise TimeoutError(
+                        f"drain_prefetch timed out with "
+                        f"{self._prefetch_inflight} jobs in flight")
+                self._prefetch_cv.wait(remaining)
 
     def _execute_batch(self, pplans: list[PhysicalPlan]) -> list[ScanResult]:
         groups: dict[GroupKey, list[tuple[int, SOTScan]]] = {}

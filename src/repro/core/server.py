@@ -659,6 +659,11 @@ class VideoStoreServer:
             return dataclasses.asdict(store.drain_tuner(req.get("timeout")))
         if op == "tuner_stats":
             return dataclasses.asdict(store.tuner_stats())
+        if op == "drain_prefetch":
+            return dataclasses.asdict(store.drain_prefetch(
+                req.get("timeout")))
+        if op == "config":
+            return store.config()
         if op == "epochs":
             return [[s, e] for s, e in store.epochs(req["video"]).items()]
         # -- replica streaming (the cluster repair data plane): each chunk

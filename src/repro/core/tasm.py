@@ -39,6 +39,7 @@ from typing import Optional
 import numpy as np
 
 from repro.codec.encode import EncoderConfig
+from repro.core.config import TuningConfig
 from repro.core.cost import CostModel
 from repro.core.engine import IngestStats, VideoStore
 from repro.core.layout import TileLayout
@@ -60,10 +61,10 @@ class TASM:
             DeprecationWarning, stacklevel=2)
         # autoload=False keeps the seed facade's semantics: a reused
         # store_root is re-encoded, not adopted from its manifest.
-        # tuning="inline" likewise: the seed retiled synchronously inside
+        # mode="inline" likewise: the seed retiled synchronously inside
         # scan(), and this shim stays bit-for-bit compatible with that
         self._engine = VideoStore(store_root=store_root, autoload=False,
-                                  tuning="inline")
+                                  tuning=TuningConfig(mode="inline"))
         self._entry = self._engine.add_video(
             video, encoder=encoder, policy=policy, cost_model=cost_model,
             sot_len=sot_len)

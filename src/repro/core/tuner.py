@@ -187,7 +187,15 @@ class PhysicalTuner:
         lock) once per finished plan.  Returns the re-encode seconds to
         charge to the query: >0 only in ``"inline"`` mode — background
         emission is O(1) per SOT and never re-encodes."""
-        if self.mode == "off" or not sot_scans:
+        if not sot_scans:
+            return 0.0
+        # workload-log tap: the scheduler's prefetch predictor watches the
+        # full query stream — unconditionally, because prediction needs to
+        # see every scan, not just those whose policy listens, and works
+        # even with tuning "off"/"inline".  No-op unless CacheConfig
+        # enables prefetch; caller already holds the scheduler lock.
+        self.engine.scheduler.note_scan(sot_scans)
+        if self.mode == "off":
             return 0.0
         if self.mode == "inline":
             return self._observe_inline(sot_scans)
